@@ -1,0 +1,91 @@
+"""Shared benchmark infrastructure: the trained tiny-MoE artifact + trace.
+
+The paper's Fig-2/Table-2 numbers are *measured behaviours of a trained
+MoE router*; random routers have no locality, so every benchmark first
+ensures a trained ``tiny-moe`` checkpoint exists (same block structure as
+Mixtral: SWA attention + top-2-of-8 experts), trained on the byte corpus.
+Cached under experiments/artifacts/ so the suite re-runs fast.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+ART = ROOT / "experiments" / "artifacts"
+BENCH_OUT = ROOT / "experiments" / "bench"
+
+TRAIN_STEPS = int(os.environ.get("REPRO_BENCH_TRAIN_STEPS", "300"))
+TRACE_TOKENS = int(os.environ.get("REPRO_BENCH_TRACE_TOKENS", "384"))
+
+
+def get_trained_tiny_moe(steps: int = None):
+    """Returns (params, cfg), training + caching on first call."""
+    from repro.checkpoint import checkpointer as C
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig, PackedDataset
+    from repro.models import transformer as T
+    from repro.training import optimizer as O
+    from repro.training import trainer
+
+    steps = steps or TRAIN_STEPS
+    cfg = get_config("tiny-moe")
+    path = ART / f"tiny_moe_{steps}.npz"
+    tmpl = jax.eval_shape(lambda: T.init_model(jax.random.key(0), cfg))
+    if path.exists():
+        return C.restore(str(path), tmpl), cfg
+    print(f"[bench] training tiny-moe for {steps} steps (cached after)...")
+    ds = PackedDataset(DataConfig(seq_len=128, batch_size=8,
+                                  max_bytes=2_000_000))
+    params = T.init_model(jax.random.key(0), cfg)
+    opt = O.OptimizerConfig(lr=1e-3, warmup_steps=30, total_steps=steps)
+    params, _, hist = trainer.train(
+        params, cfg, opt, ds.batches(),
+        trainer.TrainerConfig(steps=steps, log_every=max(20, steps // 10)))
+    ART.mkdir(parents=True, exist_ok=True)
+    C.save(str(path), params, meta={"steps": steps,
+                                    "final_loss": hist[-1]["loss"]})
+    return params, cfg
+
+
+def get_trace(n_tokens: int = None):
+    """Expert-activation trace of the trained model over held-out text."""
+    from repro.core import trace as TR
+    from repro.data.pipeline import DataConfig, PackedDataset
+
+    n_tokens = n_tokens or TRACE_TOKENS
+    path = ART / f"trace_{TRAIN_STEPS}_{n_tokens}.npz"
+    if path.exists():
+        z = np.load(path)
+        return {k: z[k] for k in z.files}
+    params, cfg = get_trained_tiny_moe()
+    ds = PackedDataset(DataConfig(seq_len=n_tokens, batch_size=1,
+                                  max_bytes=2_000_000))
+    batch = next(ds.eval_batches(1))
+    print(f"[bench] collecting routing trace over {n_tokens} tokens...")
+    tr = TR.collect_trace(params, cfg, batch["tokens"][:1])
+    ART.mkdir(parents=True, exist_ok=True)
+    np.savez(path, **tr)
+    return tr
+
+
+def emit(rows, name: str):
+    """Print ``name,us_per_call,derived`` CSV rows + persist JSON."""
+    BENCH_OUT.mkdir(parents=True, exist_ok=True)
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")
+    (BENCH_OUT / f"{name}.json").write_text(json.dumps(rows, indent=1))
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out  # us

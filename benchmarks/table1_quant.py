@@ -1,0 +1,122 @@
+"""Paper Table 1: mixed quantization grid — (attn bits x expert bits) ->
+quality + model size.
+
+Quality here is held-out byte cross-entropy of the trained tiny-moe with
+the HQQ-quantized weights (WikiText2/C4/MMLU are not available offline;
+the *structure* — quality monotone in bits, experts cheaper to quantize
+than attention — is the reproduced claim).  Sizes are reported both at
+tiny scale (measured packed bytes) and projected to Mixtral-8x7B dims
+(the paper's 86.99 -> 17.3 GB column)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import OffloadSpec
+from repro.core.offload_engine import quantize_for_offload
+from repro.core.cost_model import EFFECTIVE_BITS
+from repro.data.pipeline import DataConfig, PackedDataset
+from repro.training.trainer import eval_ce
+
+from benchmarks.common import emit, get_trained_tiny_moe
+
+
+def mixtral_size_gb(attn_bits, expert_bits):
+    """Project the scheme to Mixtral-8x7B parameter counts (Table 1)."""
+    cfg = get_config("mixtral-8x7b")
+    from repro.models.transformer import count_params_analytic
+
+    total = count_params_analytic(cfg)
+    experts = cfg.moe_layer_count * cfg.moe.num_experts * 3 * cfg.d_model * cfg.d_ff
+    emb = cfg.vocab_size * cfg.d_model  # embeddings stay fp16 (tied)
+    attn = total - experts - emb
+    gb = (experts * EFFECTIVE_BITS[expert_bits] / 8
+          + attn * EFFECTIVE_BITS[attn_bits] / 8 + emb * 2) / 1e9
+    return gb
+
+
+def run(quick=False):
+    params, cfg = get_trained_tiny_moe()
+    ds = PackedDataset(DataConfig(seq_len=128, batch_size=8,
+                                  max_bytes=2_000_000))
+    eval_b = list(ds.eval_batches(2 if quick else 4))
+    rows = []
+    grid_attn = [16, 4] if quick else [16, 4, 3, 2]
+    grid_exp = [16, 4, 2] if quick else [16, 4, 3, 2]
+    base_ce = eval_ce(params, cfg, eval_b)
+    for ab in grid_attn:
+        for eb in grid_exp:
+            if ab == 16 and eb == 16:
+                ce, sizes = base_ce, None
+            else:
+                spec = OffloadSpec(expert_bits=eb if eb != 16 else 8,
+                                   attn_bits=ab if ab != 16 else 8)
+                # 16 means "skip quantizing" — emulate by very high bits
+                qp, sizes = quantize_for_offload(params, cfg, spec)
+                if eb == 16:
+                    qp = _restore_subtree(qp, params, "experts")
+                if ab == 16:
+                    qp = _restore_attn(qp, params)
+                ce = eval_ce(qp, cfg, eval_b)
+            gb = mixtral_size_gb(ab, eb)
+            rows.append({
+                "name": f"table1_attn{ab}_exp{eb}",
+                "us_per_call": "",
+                "derived": f"ce={ce:.4f};mixtral_gb={gb:.2f}",
+                "attn_bits": ab, "expert_bits": eb,
+                "eval_ce": ce, "mixtral_proj_gb": gb,
+                "delta_ce_vs_fp": ce - base_ce,
+            })
+            print(f"[table1] attn={ab} exp={eb}: ce {ce:.4f} "
+                  f"(+{ce-base_ce:.4f}) mixtral {gb:.1f}GB")
+    # structural claims from the paper's Table 1
+    get = lambda ab, eb: next(r for r in rows if r["attn_bits"] == ab
+                              and r["expert_bits"] == eb)
+    checks = []
+    if not quick:
+        # quality monotone in expert bits at fixed attn bits
+        checks.append(("table1_exp_bits_monotone",
+                       get(4, 2)["eval_ce"] >= get(4, 4)["eval_ce"] - 1e-3))
+        # expert quantization cheaper than attention quantization:
+        # (attn4,exp16) should cost less quality than (attn16,exp4) costs
+        # RELATIVE to bytes saved — report the two deltas for the writeup
+        checks.append(("table1_attn4exp16_delta",
+                       round(get(4, 16)["delta_ce_vs_fp"], 4)))
+        checks.append(("table1_attn16exp4_delta",
+                       round(get(16, 4)["delta_ce_vs_fp"], 4)))
+    for nm, val in checks:
+        rows.append({"name": nm, "derived": str(val)})
+    emit(rows, "table1_quant")
+    return rows
+
+
+def _restore_subtree(qtree, orig, key):
+    def walk(a, b, path):
+        if isinstance(a, dict):
+            return {k: walk(a[k], b[k], path + (k,)) for k in a}
+        if isinstance(a, (list, tuple)):
+            return type(a)(walk(x, y, path + (str(i),))
+                           for i, (x, y) in enumerate(zip(a, b)))
+        return b if key in path else a
+    return walk(qtree, orig, ())
+
+
+def _restore_attn(qtree, orig):
+    names = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+    def walk(a, b, path):
+        if isinstance(a, dict):
+            return {k: walk(a[k], b[k], path + (k,)) for k in a}
+        if isinstance(a, (list, tuple)):
+            return type(a)(walk(x, y, path + (str(i),))
+                           for i, (x, y) in enumerate(zip(a, b)))
+        if path[-1] in names and "experts" not in path:
+            return b
+        return a
+    return walk(qtree, orig, ())
+
+
+if __name__ == "__main__":
+    run()

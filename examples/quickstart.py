@@ -1,0 +1,55 @@
+"""Quickstart: train a tiny Mixtral-family MoE on real bytes, generate
+text, then run the SAME model through the paper's offloading engine and
+confirm generation is bit-identical while counting transfers.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 120]
+"""
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.offload_engine import OffloadEngine, generate_plain
+from repro.data.pipeline import DataConfig, PackedDataset, decode_bytes, encode_text
+from repro.models import transformer as T
+from repro.training import optimizer as O
+from repro.training import trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+
+    cfg = get_config("tiny-moe")
+    print(f"== 1. train {cfg.name} "
+          f"({T.count_params_analytic(cfg)/1e6:.1f}M params) ==")
+    ds = PackedDataset(DataConfig(seq_len=128, batch_size=8,
+                                  max_bytes=1_500_000))
+    params = T.init_model(jax.random.key(0), cfg)
+    opt = O.OptimizerConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    params, _, hist = trainer.train(
+        params, cfg, opt, ds.batches(),
+        trainer.TrainerConfig(steps=args.steps, log_every=20))
+    assert hist[-1]["loss"] < hist[0]["loss"], "training must reduce loss"
+
+    print("\n== 2. generate (plain decode) ==")
+    prompt = encode_text("def ")[None]
+    out = generate_plain(params, cfg, prompt, 48)
+    print("generated:", repr(decode_bytes(out[0])))
+
+    print("\n== 3. same model through the offload engine ==")
+    eng = OffloadEngine(params, cfg)  # LRU k=2, 2 speculative (config)
+    out_off, stats = eng.generate(prompt, 48)
+    assert (out == out_off).all(), "offloading must not change outputs!"
+    print(f"bit-identical: True | hit_ratio={stats.hit_ratio:.2f} "
+          f"demand_loads={stats.demand_loads} spec_hits={stats.spec_hits}")
+    print(f"host->device traffic: {stats.bytes_h2d/1e6:.1f} MB "
+          f"(vs naive {stats.n_tokens * cfg.moe_layer_count * cfg.moe.num_experts * stats.expert_bytes/1e6:.1f} MB)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,72 @@
+"""Flat-npz checkpointing with path-keyed leaves.
+
+Restores into an arbitrary target structure (``jax.eval_shape`` template),
+casting and device-putting with the target's sharding when given — enough
+to restore a CPU-trained model onto a production mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}/{k}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/{i}"))
+    else:
+        out[prefix] = np.asarray(tree)
+    return out
+
+
+def save(path: str, params, meta: Optional[dict] = None) -> None:
+    flat = _flatten(params)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    # atomic write
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    os.close(fd)
+    np.savez(tmp, __meta__=json.dumps(meta or {}), **flat)
+    written = tmp if tmp.endswith(".npz") else tmp + ".npz"
+    os.replace(written, path)
+    if os.path.exists(tmp):
+        os.remove(tmp)
+
+
+def load_meta(path: str) -> dict:
+    with np.load(path, allow_pickle=False) as z:
+        return json.loads(str(z["__meta__"]))
+
+
+def restore(path: str, template) -> Any:
+    """template: pytree of arrays or ShapeDtypeStructs (eval_shape)."""
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files if k != "__meta__"}
+
+    def rebuild(tmpl, prefix=""):
+        if isinstance(tmpl, dict):
+            return {k: rebuild(v, f"{prefix}/{k}") for k, v in tmpl.items()}
+        if isinstance(tmpl, (list, tuple)):
+            return type(tmpl)(rebuild(v, f"{prefix}/{i}")
+                              for i, v in enumerate(tmpl))
+        arr = flat[prefix]
+        if arr.shape != tuple(tmpl.shape):
+            raise ValueError(f"{prefix}: checkpoint {arr.shape} != "
+                             f"template {tmpl.shape}")
+        out = jnp.asarray(arr, dtype=tmpl.dtype)
+        shard = getattr(tmpl, "sharding", None)
+        if shard is not None and not isinstance(
+                shard, jax.sharding.SingleDeviceSharding):
+            out = jax.device_put(out, shard)
+        return out
+
+    return rebuild(template)

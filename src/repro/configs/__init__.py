@@ -1,0 +1,89 @@
+"""Architecture registry: ``get_config(name)`` / ``list_archs()``.
+
+Every assigned architecture (plus the paper-flagship ``mixtral-offload``)
+is registered here and selectable via ``--arch <id>`` in the launchers.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401  (re-exports)
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    MoESpec,
+    OffloadSpec,
+    parse_block,
+)
+
+_MODULES = {
+    "smollm-360m": "repro.configs.smollm_360m",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b_a400m",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "phi-3-vision-4.2b": "repro.configs.phi_3_vision_4_2b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "qwen1.5-4b": "repro.configs.qwen1_5_4b",
+    "mixtral-offload": "repro.configs.mixtral_offload",
+    "tiny-moe": "repro.configs.tiny_moe",
+}
+
+ASSIGNED_ARCHS: List[str] = [
+    "smollm-360m",
+    "recurrentgemma-9b",
+    "command-r-plus-104b",
+    "granite-moe-1b-a400m",
+    "stablelm-1.6b",
+    "whisper-medium",
+    "phi-3-vision-4.2b",
+    "mixtral-8x7b",
+    "xlstm-1.3b",
+    "qwen1.5-4b",
+]
+
+_CACHE: Dict[str, ModelConfig] = {}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_MODULES)}")
+    if name not in _CACHE:
+        mod = importlib.import_module(_MODULES[name])
+        _CACHE[name] = mod.CONFIG
+    return _CACHE[name]
+
+
+def list_archs(assigned_only: bool = False) -> List[str]:
+    return list(ASSIGNED_ARCHS) if assigned_only else sorted(_MODULES)
+
+
+# (arch, shape) combinations that are skipped, with the reason recorded in
+# DESIGN.md §5.  Everything else must lower+compile in the dry-run.
+SKIPS = {
+    ("whisper-medium", "long_500k"):
+        "encoder-decoder with architecturally bounded decoder context; "
+        "no sub-quadratic decoder variant exists for this family "
+        "(DESIGN.md section 5).",
+}
+
+# Dense full-attention archs run long_500k via their sliding-window variant
+# (sub-quadratic requirement; DESIGN.md section 5).
+SWA_FOR_LONG = {
+    "smollm-360m",
+    "command-r-plus-104b",
+    "stablelm-1.6b",
+    "qwen1.5-4b",
+    "phi-3-vision-4.2b",
+}
+
+
+def config_for_shape(arch: str, shape_name: str) -> ModelConfig:
+    """Config actually used for a given input shape (applies SWA variant)."""
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and arch in SWA_FOR_LONG:
+        cfg = cfg.with_sliding_window(4096)
+    return cfg

@@ -1,0 +1,233 @@
+"""Model configuration system.
+
+Every assigned architecture gets one ``configs/<id>.py`` exporting ``CONFIG``
+(a :class:`ModelConfig` at the exact published size) plus the registry in
+``configs/__init__.py``.  ``ModelConfig.reduced()`` yields the CPU-smoke
+variant (2 layers, d_model<=512, <=4 experts, tiny vocab) required by the
+per-arch smoke tests; the full config is only ever *lowered* (dry-run), never
+allocated on this host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# Block kind strings used in ``block_pattern``.  A block is "<mixer>+<ffn>".
+#   mixers: attn (global causal), swa (sliding-window causal), xattn (self+cross,
+#           enc-dec decoder), encattn (bidirectional, encoder), rglru (Griffin
+#           recurrent block), mlstm, slstm
+#   ffns:   mlp (dense SwiGLU/GeLU), moe (top-k routed experts), none
+MIXERS = ("attn", "swa", "xattn", "encattn", "rglru", "mlstm", "slstm")
+FFNS = ("mlp", "moe", "none")
+
+
+def parse_block(kind: str) -> Tuple[str, str]:
+    mixer, _, ffn = kind.partition("+")
+    ffn = ffn or "none"
+    if mixer not in MIXERS:
+        raise ValueError(f"unknown mixer {mixer!r} in block kind {kind!r}")
+    if ffn not in FFNS:
+        raise ValueError(f"unknown ffn {ffn!r} in block kind {kind!r}")
+    return mixer, ffn
+
+
+@dataclass(frozen=True)
+class MoESpec:
+    """Sparse mixture-of-experts FFN spec (token-level top-k routing)."""
+
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    # router jitter / z-loss left at 0 for inference-focused repro
+    router_z_weight: float = 0.0
+
+
+@dataclass(frozen=True)
+class OffloadSpec:
+    """Paper (Eliseev & Mazur 2023) offloading configuration.
+
+    ``cache_size`` is the per-layer LRU size k (paper: k=2 for 12GB GPUs,
+    k=4 for 16GB).  ``num_speculative`` is how many experts the speculative
+    prefetcher stages (paper: 1-2).  ``lookahead`` is how many layers ahead
+    the gate guess is made (paper evaluates 1, 2, 10; system uses 1).
+    """
+
+    cache_size: int = 2
+    num_speculative: int = 2
+    lookahead: int = 1
+    expert_bits: int = 3     # mixed quantization: experts at 2-3 bit
+    attn_bits: int = 4       # shared/attention layers at 4 bit
+    staging_buffers: int = 4  # paper's b=4 on-device copy buffers
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    block_pattern: Tuple[str, ...] = ("attn+mlp",)
+    moe: Optional[MoESpec] = None
+    offload: Optional[OffloadSpec] = None
+    sliding_window: Optional[int] = None
+    qkv_bias: bool = False
+    attn_out_bias: bool = False
+    mlp_act: str = "swiglu"  # swiglu | gelu | geglu
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0  # stablelm-2 uses partial rotary (0.25)
+    tie_embeddings: bool = False
+    logit_softcap: Optional[float] = None
+    # --- encoder-decoder (whisper): encoder stack + stub frontend length ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0  # frontend output frames (whisper-medium: 1500)
+    # --- vlm stub: number of image-patch embedding positions at seq start ---
+    num_image_tokens: int = 0
+    # --- recurrent (griffin / xlstm) ---
+    rglru_conv_width: int = 4
+    mlstm_chunk: int = 256
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    # sequence-parallel activations (Megatron-style): the residual stream
+    # between blocks is sharded over ("model", seq) so the remat residual
+    # stack shards too — required for the 104B train config to fit HBM.
+    act_seq_shard: bool = False
+    # MoE dispatch groups (= batch shards on the production mesh): tokens
+    # dispatch locally per group with per-group capacity, the real-EP
+    # semantics; 1 = single global dispatch (CPU tests).
+    moe_dispatch_groups: int = 1
+    citation: str = ""
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        for k in self.block_pattern:
+            parse_block(k)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/unembedding tables pad the vocab to a multiple of 128
+        so the (huge, f32) logits can shard on the model axis (whisper's
+        51865 and granite's 49155 otherwise force replicated logits —
+        +20GB/chip at train_4k).  The pad region is masked to -inf in
+        ``unembed``; real token ids are never affected."""
+        return -(-self.vocab_size // 128) * 128
+
+    @property
+    def pattern_period(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // self.pattern_period
+
+    @property
+    def n_tail_layers(self) -> int:
+        """Layers not covered by full pattern periods (applied unscanned)."""
+        return self.n_layers - self.n_periods * self.pattern_period
+
+    def tail_kinds(self) -> Tuple[str, ...]:
+        return self.block_pattern[: self.n_tail_layers]
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Block kind of every layer, in order."""
+        kinds = []
+        for i in range(self.n_layers):
+            kinds.append(self.block_pattern[i % self.pattern_period])
+        return tuple(kinds)
+
+    @property
+    def uses_attention(self) -> bool:
+        return any(parse_block(k)[0] in ("attn", "swa", "xattn") for k in self.block_pattern)
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def moe_layer_count(self) -> int:
+        return sum(1 for k in self.layer_kinds() if parse_block(k)[1] == "moe")
+
+    # ------------------------------------------------------------------
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def with_sliding_window(self, window: int = 4096) -> "ModelConfig":
+        """SWA variant used for long_500k on otherwise-full-attention archs."""
+        pattern = tuple(
+            k.replace("attn+", "swa+") if k.startswith("attn+") else k
+            for k in self.block_pattern
+        )
+        return self.replace(block_pattern=pattern, sliding_window=window,
+                            name=self.name + "-swa")
+
+    def reduced(self) -> "ModelConfig":
+        """CPU-smoke variant: same family, tiny dims.
+
+        2 layers worth of pattern (>=1 full period), d_model<=512, <=4
+        experts, vocab 512.  Keeps mixer/ffn kinds, GQA ratio, biases, act.
+        """
+        period = self.pattern_period
+        n_layers = period if period >= 2 else 2
+        d_model = min(self.d_model, 256)
+        # preserve head structure at reduced width
+        n_heads = min(self.n_heads, 4)
+        ratio = max(1, self.n_heads // self.n_kv_heads)
+        n_kv = max(1, n_heads // ratio)
+        head_dim = max(8, d_model // n_heads)
+        moe = None
+        if self.moe is not None:
+            moe = dataclasses.replace(
+                self.moe, num_experts=min(4, self.moe.num_experts),
+                top_k=min(2, self.moe.top_k))
+        return self.replace(
+            name=self.name + "-reduced",
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=head_dim,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=512,
+            moe=moe,
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else None,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq=min(self.encoder_seq, 24) if self.encoder_seq else 0,
+            num_image_tokens=min(self.num_image_tokens, 8) if self.num_image_tokens else 0,
+            mlstm_chunk=16,
+            rglru_conv_width=self.rglru_conv_width,
+            dtype="float32",
+        )
+
+
+# ----------------------------------------------------------------------
+# Input shapes assigned to this paper (see system brief).
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytic parameter count (matches init_model exactly; unit-tested)."""
+    from repro.models.transformer import count_params_analytic
+
+    return count_params_analytic(cfg)

@@ -1,0 +1,15 @@
+"""Paper-flagship deployment config: Mixtral-8x7B + mixed quantization +
+LRU/speculative expert offloading (Eliseev & Mazur 2023, section 3.3).
+
+Identical architecture to ``mixtral-8x7b``; the offload spec selects the
+paper's 16GB-GPU operating point (k=4, 2 speculative loads, experts 2-bit,
+attention 4-bit — the green Table-1 row with 17.54 GB model size).
+"""
+from repro.configs.base import OffloadSpec
+from repro.configs.mixtral_8x7b import CONFIG as _MIXTRAL
+
+CONFIG = _MIXTRAL.replace(
+    name="mixtral-offload",
+    offload=OffloadSpec(cache_size=4, num_speculative=2, lookahead=1,
+                        expert_bits=2, attn_bits=4),
+)

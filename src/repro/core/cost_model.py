@@ -1,0 +1,165 @@
+"""Analytic offloading cost model -> tokens/s (paper Table 2).
+
+This container has no GPU/TPU, so wall-clock tokens/s cannot be measured;
+instead we reproduce Table 2 with a calibrated model driven by *measured*
+cache statistics (LRU hits / speculative hits / demand misses from real
+routing traces).  The model:
+
+    t_token = t_compute + t_demand + t_spec_spill + t_fixed
+
+* ``t_compute``  — interactive (batch-1) decode is **memory-bound** on the
+  accelerator: reading the active parameters once per token,
+  ``active_bytes / (mem_bw * eff)`` plus a per-layer launch overhead.
+* ``t_demand``   — blocking host->device copies for cache misses:
+  ``n_miss * (expert_bytes / pcie_bw + copy_latency)``.
+* ``t_spec_spill`` — speculative loads overlap with the next layer's
+  compute; only the part exceeding the per-layer compute window blocks.
+* naive offloading streams whole MoE layers (one big copy per layer) and
+  can overlap the *next* layer perfectly (dense-style schedule), so it is
+  purely ``total_bytes / pcie_bw`` + per-layer latency — matching the
+  paper's observation that all schemes beat it by avoiding ~E/top_k of
+  the traffic.
+
+Calibration: effective PCIe bandwidths are backed out of the paper's own
+"naive offloading" rows (14.65 GB/token at 2-bit / Table 2), which give
+T4=10, RTX3060=13, 3080M=15.5, A100=20.4 GB/s — all consistent with
+PCIe Gen3/Gen4 practical rates.  Copy latency and launch overheads are
+fitted once against the full-algorithm rows and then held fixed across
+all ablations (so the *structure* of Table 2 is predicted, not fitted).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig
+
+# bits/param including group scale/zero + meta-quant overhead (measured by
+# quant/hqq.bits_per_param on the paper's group-size schemes)
+EFFECTIVE_BITS = {16: 16.0, 8: 8.5, 4: 4.5, 3: 3.5, 2: 3.25}
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    pcie_gbps: float        # effective host->device GB/s
+    mem_bw_gbps: float      # device memory bandwidth GB/s
+    mem_eff: float          # achievable fraction for GEMV-ish decode
+    copy_latency_s: float   # per host->device copy fixed cost
+    layer_overhead_s: float  # per-layer launch/dequant overhead
+    vram_gb: float
+    # per-token software overhead of the interactive serving loop
+    # (python/framework dispatch, sampling, tokenization).  The paper's own
+    # A100 row — 3.06 tok/s with k=4 caching on a GPU whose compute and
+    # transfers account for <100ms — implies ~0.2s/token of fixed software
+    # cost; calibrated once on the (2-bit, full, A100) cell and held fixed
+    # for every other cell/ablation/hardware.
+    sw_overhead_s: float = 0.21
+
+
+HARDWARE = {
+    "a100": Hardware("A100-80GB", 20.4, 2039.0, 0.55, 1.2e-3, 0.8e-3, 80),
+    "3080m": Hardware("RTX 3080 Mobile", 15.5, 760.0, 0.50, 2.0e-3, 1.2e-3, 16),
+    "3060": Hardware("RTX 3060", 13.0, 360.0, 0.50, 2.0e-3, 1.2e-3, 12),
+    "t4": Hardware("T4 (Colab)", 10.0, 320.0, 0.45, 2.5e-3, 1.5e-3, 16),
+}
+
+
+# ----------------------------------------------------------------------
+def expert_param_count(cfg: ModelConfig) -> int:
+    return 3 * cfg.d_model * cfg.d_ff  # swiglu experts (gate/up/down)
+
+
+def expert_bytes(cfg: ModelConfig, bits: int) -> float:
+    return expert_param_count(cfg) * EFFECTIVE_BITS[bits] / 8.0
+
+
+def active_param_bytes(cfg: ModelConfig, expert_bits: int,
+                       attn_bits: int) -> float:
+    """Bytes read from device memory per generated token (active params)."""
+    moe_layers = cfg.moe_layer_count
+    n_expert_active = moe_layers * cfg.moe.top_k * expert_param_count(cfg)
+    attn_per_layer = cfg.d_model * cfg.head_dim * (cfg.n_heads * 2
+                                                   + cfg.n_kv_heads * 2)
+    dense = cfg.n_layers * attn_per_layer + cfg.vocab_size * cfg.d_model
+    return (n_expert_active * EFFECTIVE_BITS[expert_bits] / 8.0
+            + dense * EFFECTIVE_BITS[attn_bits] / 8.0)
+
+
+@dataclass
+class TokenStats:
+    """Per-token averages measured from a routing trace replay."""
+
+    demand_loads: float   # blocking expert copies / token (total over layers)
+    spec_loads: float     # speculative copies / token
+    hits: float
+    spec_hits: float
+
+
+def tokens_per_second(cfg: ModelConfig, hw: Hardware, stats: TokenStats,
+                      expert_bits: int, attn_bits: int = 4,
+                      naive: bool = False) -> float:
+    eb = expert_bytes(cfg, expert_bits)
+    moe_layers = cfg.moe_layer_count
+    t_compute = (active_param_bytes(cfg, expert_bits, attn_bits)
+                 / (hw.mem_bw_gbps * 1e9 * hw.mem_eff)
+                 + cfg.n_layers * hw.layer_overhead_s)
+    if naive:
+        total_bytes = moe_layers * cfg.moe.num_experts * eb
+        t_transfer = total_bytes / (hw.pcie_gbps * 1e9) \
+            + moe_layers * hw.copy_latency_s
+        return 1.0 / (hw.sw_overhead_s
+                      + max(t_transfer, t_compute) + 0.1 * t_compute)
+
+    t_demand = stats.demand_loads * (eb / (hw.pcie_gbps * 1e9)
+                                     + hw.copy_latency_s)
+    # speculative copies overlap with one layer's compute window each
+    per_layer_window = t_compute / max(cfg.n_layers, 1)
+    t_spec_each = eb / (hw.pcie_gbps * 1e9) + hw.copy_latency_s
+    spill_each = max(0.0, t_spec_each - per_layer_window)
+    t_spec_spill = stats.spec_loads * spill_each * 0.5  # partial overlap
+    return 1.0 / (hw.sw_overhead_s + t_compute + t_demand + t_spec_spill)
+
+
+# ----------------------------------------------------------------------
+def replay_policies(trace_ids, hiddens=None, routers=None, k: int = 4,
+                    n_spec: int = 2, lookahead: int = 1) -> Dict[str, TokenStats]:
+    """Replay a routing trace through the paper's policy ablations.
+
+    trace_ids: (n_tokens, n_layers, top_k) numpy int array.
+    hiddens/routers enable the speculative policy (Fig-2-right machinery).
+    Returns per-policy TokenStats (averages per token).
+    """
+    import numpy as np
+
+    from repro.core.lru_cache import PyLRU
+    from repro.core import speculative as spec
+
+    n_tokens, n_layers, top_k = trace_ids.shape
+    out = {}
+
+    preds = None
+    if hiddens is not None and routers is not None:
+        E = routers.shape[-1]
+        logits = np.einsum("tld,lde->tle", hiddens[:, : n_layers - lookahead],
+                           routers[lookahead:])
+        order = np.argsort(-logits, axis=-1)
+        preds = order[..., :n_spec]  # (T, L-lookahead, n_spec)
+
+    def run(policy_k, use_spec):
+        caches = [PyLRU(policy_k, n_spec) for _ in range(n_layers)]
+        for t in range(n_tokens):
+            for l in range(n_layers):
+                caches[l].access(trace_ids[t, l])
+                if use_spec and preds is not None and l + lookahead < n_layers:
+                    caches[l + lookahead].stage(preds[t, l])
+        tot = lambda f: sum(getattr(c, f) for c in caches) / n_tokens
+        return TokenStats(demand_loads=tot("demand"), spec_loads=tot("spec_loads"),
+                          hits=tot("hits"), spec_hits=tot("spec_hits"))
+
+    out["full"] = run(k, True)
+    out["no_spec"] = run(k, False)
+    out["no_lru_no_spec"] = run(0, False)
+    # naive handled analytically in tokens_per_second(naive=True)
+    out["naive"] = TokenStats(0, 0, 0, 0)
+    return out

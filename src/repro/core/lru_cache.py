@@ -1,0 +1,255 @@
+"""Functional LRU expert cache + speculative staging buffers (paper §3.1/3.3).
+
+The paper keeps, per MoE layer, the ``k`` least-recently-used experts
+resident in accelerator memory, plus ``b`` shared staging buffers that hold
+speculatively prefetched experts.  Semantics implemented here (exactly the
+paper's):
+
+* an expert needed for the current token that is **in the LRU pool** is a
+  *hit* (no transfer, refresh recency);
+* an expert **in the staging buffers** (speculatively loaded while the
+  previous layer computed) is a *speculative hit*: no blocking transfer;
+  since it was actually used, it is promoted into the LRU pool, evicting
+  the least-recently-used entry ("if a speculatively loaded expert was
+  later used ... it will replace the least recently used expert");
+* otherwise it is a *demand miss*: one blocking expert-sized host->device
+  copy, then inserted into the LRU pool (evicting the LRU entry);
+* after serving a layer, the predicted experts for the lookahead layer are
+  staged: each prediction not already resident charges one *overlappable*
+  transfer ("the newly loaded experts do not replace the currently cached
+  experts").
+
+Everything is fixed-shape jnp so the whole decode loop jits; ``PyLRU`` is
+the plain-python oracle used by the property tests.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LayerCacheState(NamedTuple):
+    """State for ONE MoE layer (vmap/stack over layers for the model)."""
+
+    cache_ids: jnp.ndarray   # (k,) int32, -1 = empty
+    cache_clock: jnp.ndarray  # (k,) int32 recency stamps
+    spec_ids: jnp.ndarray    # (n_spec,) int32 staged experts, -1 = empty
+    clock: jnp.ndarray       # () int32 monotone counter
+
+
+class AccessStats(NamedTuple):
+    hits: jnp.ndarray          # () int32 — LRU hits this access
+    spec_hits: jnp.ndarray     # () int32 — served from staging buffers
+    demand_loads: jnp.ndarray  # () int32 — blocking transfers
+    spec_loads: jnp.ndarray    # () int32 — overlappable transfers (staging)
+
+
+def init_layer_state(k: int, n_spec: int) -> LayerCacheState:
+    return LayerCacheState(
+        cache_ids=jnp.full((k,), -1, jnp.int32),
+        cache_clock=jnp.zeros((k,), jnp.int32),
+        spec_ids=jnp.full((n_spec,), -1, jnp.int32),
+        clock=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_model_state(n_layers: int, k: int, n_spec: int) -> LayerCacheState:
+    one = init_layer_state(k, n_spec)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_layers,) + a.shape).copy(), one)
+
+
+def layer_slice(state: LayerCacheState, l: int) -> LayerCacheState:
+    return jax.tree.map(lambda a: a[l], state)
+
+
+def set_layer(state: LayerCacheState, l: int, new: LayerCacheState):
+    return jax.tree.map(lambda a, b: a.at[l].set(b), state, new)
+
+
+# ----------------------------------------------------------------------
+def access(state: LayerCacheState, needed: jnp.ndarray
+           ) -> Tuple[LayerCacheState, AccessStats]:
+    """Serve ``needed`` (K,) int32 expert ids for one layer, one token."""
+    K = needed.shape[0]
+    ids, clock_arr, spec, clk = state
+    hits = jnp.zeros((), jnp.int32)
+    spec_hits = jnp.zeros((), jnp.int32)
+    demand = jnp.zeros((), jnp.int32)
+    for j in range(K):  # K is static (top_k)
+        e = needed[j]
+        in_cache = jnp.any(ids == e)
+        in_spec = jnp.any(spec == e)
+        hit = in_cache
+        s_hit = jnp.logical_and(~in_cache, in_spec)
+        miss = jnp.logical_and(~in_cache, ~in_spec)
+        hits += hit.astype(jnp.int32)
+        spec_hits += s_hit.astype(jnp.int32)
+        demand += miss.astype(jnp.int32)
+        # insertion slot: existing slot on hit, else LRU (min clock)
+        hit_slot = jnp.argmax(ids == e)
+        lru_slot = jnp.argmin(clock_arr)
+        slot = jnp.where(in_cache, hit_slot, lru_slot)
+        clk = clk + 1
+        ids = ids.at[slot].set(e)
+        clock_arr = clock_arr.at[slot].set(clk)
+    new = LayerCacheState(ids, clock_arr, spec, clk)
+    return new, AccessStats(hits, spec_hits, demand,
+                            jnp.zeros((), jnp.int32))
+
+
+def stage_speculative(state: LayerCacheState, predicted: jnp.ndarray
+                      ) -> Tuple[LayerCacheState, jnp.ndarray]:
+    """Stage ``predicted`` (n_spec,) experts into this layer's buffers.
+
+    Returns (new_state, n_transfers) — transfers are charged only for
+    predictions not already resident (cache or previous staging).
+    """
+    ids, clock_arr, old_spec, clk = state
+    n = predicted.shape[0]
+    transfers = jnp.zeros((), jnp.int32)
+    for j in range(n):
+        e = predicted[j]
+        resident = jnp.any(ids == e) | jnp.any(old_spec == e)
+        if j > 0:
+            resident = resident | jnp.any(predicted[:j] == e)
+        transfers += jnp.logical_and(e >= 0, ~resident).astype(jnp.int32)
+    new = LayerCacheState(ids, clock_arr, predicted.astype(jnp.int32), clk)
+    return new, transfers
+
+
+# ----------------------------------------------------------------------
+class PyLRU:
+    """Plain-python oracle with identical semantics (property-tested)."""
+
+    def __init__(self, k: int, n_spec: int):
+        self.k = k
+        self.cache: List[int] = []   # most-recent-last
+        self.spec: List[int] = []
+        self.hits = self.spec_hits = self.demand = self.spec_loads = 0
+
+    def access(self, needed: Sequence[int]):
+        for e in needed:
+            if e in self.cache:
+                self.hits += 1
+                self.cache.remove(e)
+                self.cache.append(e)
+            else:
+                if e in self.spec:
+                    self.spec_hits += 1
+                else:
+                    self.demand += 1
+                if self.k > 0:  # k=0 = caching disabled (ablation)
+                    while len(self.cache) >= self.k:
+                        self.cache.pop(0)
+                    self.cache.append(e)
+
+    def stage(self, predicted: Sequence[int]):
+        fresh = []
+        seen = set()
+        for e in predicted:
+            if e >= 0 and e not in self.cache and e not in self.spec \
+                    and e not in seen:
+                self.spec_loads += 1
+            seen.add(e)
+            fresh.append(e)
+        self.spec = [e for e in fresh if e >= 0]
+
+
+# ----------------------------------------------------------------------
+# Beyond-paper cache policies (the paper: "LRU is a very simple strategy
+# that does not consider factors like expert activation frequencies ...")
+class PyLFUDecay:
+    """Frequency cache with exponential decay (half-life in accesses)."""
+
+    def __init__(self, k: int, decay: float = 0.95):
+        self.k = k
+        self.decay = decay
+        self.score: dict = {}
+        self.cache: set = set()
+        self.hits = self.demand = 0
+
+    def access(self, needed: Sequence[int]):
+        for key in list(self.score):
+            self.score[key] *= self.decay
+        for e in needed:
+            self.score[e] = self.score.get(e, 0.0) + 1.0
+            if e in self.cache:
+                self.hits += 1
+            else:
+                self.demand += 1
+                self.cache.add(e)
+                if len(self.cache) > self.k:
+                    victim = min(self.cache, key=lambda x: self.score.get(x, 0))
+                    self.cache.discard(victim)
+
+
+def belady_hit_ratio(layer_trace: np.ndarray, k: int) -> float:
+    """Clairvoyant (Belady/MIN) eviction upper bound for one layer's
+    access sequence. layer_trace: (n_tokens, top_k) expert ids."""
+    seq = [int(e) for row in layer_trace for e in row]
+    n = len(seq)
+    nxt_use = [float("inf")] * n
+    last = {}
+    for i in range(n - 1, -1, -1):
+        nxt_use[i] = last.get(seq[i], float("inf"))
+        last[seq[i]] = i
+    cache: dict = {}  # expert -> next use index
+    hits = 0
+    for i, e in enumerate(seq):
+        if e in cache:
+            hits += 1
+            cache[e] = nxt_use[i]
+            continue
+        if len(cache) >= k:
+            # true MIN: consider bypassing the incoming item if its own
+            # next use is the farthest
+            victim = max(cache, key=lambda x: cache[x])
+            if cache[victim] <= nxt_use[i]:
+                continue  # bypass — don't cache e at all
+            del cache[victim]
+        cache[e] = nxt_use[i]
+    return hits / max(1, n)
+
+
+def policy_comparison(trace: np.ndarray, cache_sizes: Sequence[int]) -> dict:
+    """hit ratios per policy x k: LRU (paper) vs LFU-decay vs Belady."""
+    n_tokens, n_layers, top_k = trace.shape
+    out = {}
+    for k in cache_sizes:
+        lru = [PyLRU(k, 0) for _ in range(n_layers)]
+        lfu = [PyLFUDecay(k) for _ in range(n_layers)]
+        for t in range(n_tokens):
+            for l in range(n_layers):
+                lru[l].access(trace[t, l])
+                lfu[l].access(trace[t, l])
+        tot = n_tokens * n_layers * top_k
+        out[("lru", k)] = sum(c.hits for c in lru) / tot
+        out[("lfu_decay", k)] = sum(c.hits for c in lfu) / tot
+        out[("belady", k)] = float(np.mean(
+            [belady_hit_ratio(trace[:, l], k) for l in range(n_layers)]))
+    return out
+
+
+def lru_hit_curve(trace: np.ndarray, cache_sizes: Sequence[int]
+                  ) -> dict:
+    """Fig-2-left evaluation: replay an expert-activation trace through an
+    LRU cache for each size k and report the hit ratio.
+
+    trace: (n_tokens, n_layers, top_k) int expert ids.
+    """
+    n_tokens, n_layers, top_k = trace.shape
+    out = {}
+    for k in cache_sizes:
+        hits = total = 0
+        caches = [PyLRU(k, 0) for _ in range(n_layers)]
+        for t in range(n_tokens):
+            for l in range(n_layers):
+                caches[l].access(trace[t, l])
+        hits = sum(c.hits for c in caches)
+        total = n_tokens * n_layers * top_k
+        out[k] = hits / total
+    return out

@@ -1,0 +1,59 @@
+"""Speculative expert loading (paper §3.2).
+
+The guess: apply layer ``l+j``'s gating function to the hidden state that
+layer ``l``'s gate saw (the residual stream changes slowly, so an early
+hidden state is "a decent estimate of next layer's hidden states").
+
+``predict_experts`` is the online predictor used by the offload engine;
+``recall_curve`` is the offline Fig-2-right evaluation over a recorded
+trace of (hidden-state, actual-expert) pairs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def predict_experts(router_w: jnp.ndarray, hidden: jnp.ndarray,
+                    n_spec: int) -> jnp.ndarray:
+    """Top-``n_spec`` experts of the lookahead layer's router applied to the
+    *current* layer's pre-MoE hidden state.
+
+    router_w: (D, E) f32; hidden: (T, D).  Returns (T, n_spec) int32.
+    For interactive decode T == 1.
+    """
+    logits = jnp.einsum("td,de->te", hidden.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    _, ids = jax.lax.top_k(logits, n_spec)
+    return ids.astype(jnp.int32)
+
+
+def recall_curve(hiddens: np.ndarray, routers: np.ndarray,
+                 actual: np.ndarray, lookaheads: Sequence[int],
+                 n_fetch_list: Sequence[int]) -> Dict:
+    """Fig-2-right: speculative-loading recall.
+
+    hiddens: (n_tokens, n_layers, D) pre-MoE hidden states (gate inputs);
+    routers: (n_layers, D, E) router weights;
+    actual:  (n_tokens, n_layers, top_k) expert ids actually used.
+
+    recall@n for lookahead j = fraction of layer-(l+j) active experts
+    covered by the top-n prediction made from layer-l hidden states
+    ("A recall of 1.0 corresponds to ... both Mixtral active experts
+    pre-fetched").
+    """
+    n_tokens, n_layers, top_k = actual.shape
+    out = {}
+    for j in lookaheads:
+        logits = np.einsum("tld,lde->tle", hiddens[:, : n_layers - j],
+                           routers[j:])  # predict layer l+j from hidden l
+        order = np.argsort(-logits, axis=-1)  # (T, L-j, E)
+        tgt = actual[:, j:]  # (T, L-j, top_k)
+        for n in n_fetch_list:
+            pred = order[..., :n]  # (T, L-j, n)
+            covered = (tgt[..., :, None] == pred[..., None, :]).any(-1)
+            out[(j, n)] = float(covered.mean())
+    return out

@@ -1,0 +1,77 @@
+"""Expert-activation trace collection (paper Fig. 1 / section 3 analysis).
+
+Runs a (small) MoE model teacher-forced over real token sequences and
+records, for every (token, MoE layer):
+
+* the top-k expert ids actually used,
+* the pre-MoE hidden state (the gate's input — what speculative loading
+  applies the *next* layer's gate to),
+* full router probabilities.
+
+These traces feed the Fig-2 benchmarks (`lru_hit_curve`, `recall_curve`)
+and the Table-2 cost-model replay.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, parse_block
+from repro.models import transformer as T
+
+
+def moe_positions(cfg: ModelConfig):
+    return [i for i, k in enumerate(cfg.block_pattern)
+            if parse_block(k)[1] == "moe"]
+
+
+def stacked_routers(params, cfg: ModelConfig) -> np.ndarray:
+    """(n_moe_layers, D, E) router weights, layer-major."""
+    pos = moe_positions(cfg)
+    per_period = [np.asarray(params["stack"][p]["moe"]["router"]) for p in pos]
+    # interleave by period: layer order = period-major over pattern
+    layers = []
+    for per in range(cfg.n_periods):
+        for p_i, p in enumerate(pos):
+            layers.append(per_period[p_i][per])
+    return np.stack(layers)  # tail layers with moe unsupported here (none)
+
+
+def collect_trace(params, cfg: ModelConfig, tokens: np.ndarray,
+                  progress: bool = False) -> Dict[str, np.ndarray]:
+    """Teacher-forced trace over ``tokens`` (1, S) -> trace dict.
+
+    Decode runs token-by-token exactly as interactive generation would
+    (paper: "running the model on recorded conversations").
+    """
+    assert tokens.ndim == 2 and tokens.shape[0] == 1
+    S = tokens.shape[1]
+
+    step = jax.jit(lambda p, st, tk: T.decode_step(
+        p, cfg, st, tk, moe_mode="gather", collect_info=True))
+
+    state = T.init_decode_state(cfg, 1, max_len=S)
+    ids_all, hid_all, probs_all = [], [], []
+    for t in range(S):
+        logits, state, (info_stack, info_tail) = step(
+            params, state, tokens[:, t: t + 1])
+        ids_l, hid_l, probs_l = [], [], []
+        for per in range(cfg.n_periods):
+            for i in range(cfg.pattern_period):
+                info = info_stack[i]
+                if "route" in info:
+                    ids_l.append(np.asarray(info["route"]["ids"][per][0]))
+                    probs_l.append(np.asarray(info["route"]["probs"][per][0]))
+                    hid_l.append(np.asarray(info["hidden_pre_moe"][per][0]))
+        ids_all.append(np.stack(ids_l))
+        hid_all.append(np.stack(hid_l))
+        probs_all.append(np.stack(probs_l))
+    return {
+        "ids": np.stack(ids_all),      # (S, L_moe, K)
+        "hiddens": np.stack(hid_all),  # (S, L_moe, D)
+        "probs": np.stack(probs_all),  # (S, L_moe, E)
+        "routers": stacked_routers(params, cfg),  # (L_moe, D, E)
+    }

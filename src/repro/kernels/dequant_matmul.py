@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: fused group-dequantize (HQQ packed 2/4/8-bit) x matmul.
+
+This is the paper's perf-critical compute adapted to TPU: on GPU the HQQ
+reference dequantizes expert weights with CUDA kernels before cuBLAS; on
+TPU we instead keep the weight **packed in VMEM** and unpack/dequantize
+blockwise right before feeding the MXU, so HBM traffic is the *quantized*
+bytes (the whole point of compression-for-offloading, section 3.3: "model
+compression has a natural synergy with offloading").
+
+Tiling: grid (M/bm, N/bn, K/bk), K innermost for accumulation.  ``bk`` must
+be a multiple of ``group_size`` so each K-block covers whole quant groups;
+block shapes default to MXU-aligned (128) multiples.  The f32 accumulator
+lives in the output block (revisited across the K grid dimension — Pallas
+keeps it in VMEM).
+
+3-bit codes don't unpack with static strides (8 codes span 3 bytes), so
+3-bit uses the jnp reference path (``ops.dequant_matmul`` dispatches);
+noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.quant.hqq import unpack_codes
+
+
+def _kernel(x_ref, p_ref, s_ref, z_ref, o_ref, *, bits, group_size,
+            n_k_steps):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (bm, bk)
+    packed = p_ref[...]  # (bk//g, g*bits//8, bn)
+    scale = s_ref[...].astype(jnp.float32)  # (bk//g, 1, bn)
+    zero = z_ref[...].astype(jnp.float32)
+    q = unpack_codes(packed, bits, group_size).astype(jnp.float32)
+    w = (q - zero) * scale  # (bk//g, g, bn)
+    w = w.reshape(x.shape[1], -1)  # (bk, bn)
+    o_ref[...] += jnp.dot(x.astype(jnp.float32), w,
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "bm",
+                                             "bn", "bk", "interpret"))
+def dequant_matmul_pallas(x, packed, scale, zero, *, bits, group_size,
+                          bm=128, bn=128, bk=128, interpret=True):
+    """x: (M, K) @ packed W (G, g*bits//8, N) -> (M, N) f32."""
+    M, K = x.shape
+    G, pg, N = packed.shape
+    assert G * group_size == K
+    bm = min(bm, M)
+    bn = min(bn, N)
+    bk = min(bk, K)
+    assert bk % group_size == 0 and K % bk == 0 and M % bm == 0 and N % bn == 0
+    gb = bk // group_size  # groups per K block
+    n_k = K // bk
+
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, group_size=group_size,
+                          n_k_steps=n_k),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((gb, pg, bn), lambda i, j, k: (k, 0, j)),
+            pl.BlockSpec((gb, 1, bn), lambda i, j, k: (k, 0, j)),
+            pl.BlockSpec((gb, 1, bn), lambda i, j, k: (k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        interpret=interpret,
+    )(x, packed, scale, zero)

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: blockwise (flash) causal attention with GQA and
+optional sliding window.
+
+Grid: (batch*q_heads, Sq/bq, Skv/bk) with the KV dimension innermost; the
+online-softmax running max / normalizer / accumulator live in VMEM scratch
+and the normalized output is written on the last KV step.  GQA is handled
+by the KV index map (``bh // group`` selects the shared KV head) — no KV
+replication in memory.  Sliding-window blocks outside the window are still
+visited but fully masked (a production kernel would skip them via the
+grid; noted as a perf iteration in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, bq, bk, q_offset, n_k_steps):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+
+    qpos = q_offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = jnp.ones((bq, bk), bool)
+    if causal:
+        valid &= kpos <= qpos
+    if window is not None:
+        valid &= (qpos - kpos) < window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_k_steps - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "q_offset", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal=True, window=None, bq=128,
+                           bk=128, q_offset=0, interpret=True):
+    """q: (BH, Sq, d); k, v: (BKV, Skv, d), BH = BKV * G. -> (BH, Sq, d)."""
+    BH, Sq, d = q.shape
+    BKV, Skv, _ = k.shape
+    assert BH % BKV == 0
+    G = BH // BKV
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    n_k = Skv // bk
+    scale = 1.0 / math.sqrt(d)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid = (BH, Sq // bq, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          bq=bq, bk=bk, q_offset=q_offset, n_k_steps=n_k),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, d), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=G: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=G: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,47 @@
+"""Jit'd public wrappers around the Pallas kernels with automatic fallback
+to the pure-jnp oracle for shapes/bitwidths the kernels don't tile
+(3-bit codes, non-divisible shapes, scalar decode queries)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dequant_matmul import dequant_matmul_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.quant.hqq import QTensor, _meta_dequantize
+
+KERNEL_BITS = (2, 4, 8)
+
+
+def dequant_matmul(x, qt: QTensor, *, interpret=True, use_kernel=True):
+    """x (M, K) @ dequant(qt) where qt quantizes a (K, N) weight."""
+    assert len(qt.shape) == 2, "2-D weights (reshape heads first)"
+    scale, zero = _meta_dequantize(qt)
+    M, K = x.shape
+    N = qt.shape[-1]
+    ok = (use_kernel and qt.bits in KERNEL_BITS
+          and M % 8 == 0 and N % 128 == 0
+          and K % max(128, qt.group_size) == 0)
+    if ok:
+        bm = 128 if M % 128 == 0 else 8
+        return dequant_matmul_pallas(
+            x, qt.packed, scale, zero, bits=qt.bits,
+            group_size=qt.group_size, bm=bm, interpret=interpret)
+    return ref.dequant_matmul_ref(x, qt.packed, scale, zero, bits=qt.bits,
+                                  group_size=qt.group_size)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    interpret=True, use_kernel=True):
+    BH, Sq, d = q.shape
+    ok = (use_kernel and Sq % 8 == 0 and k.shape[1] % 128 == 0
+          and d % 8 == 0)
+    if ok:
+        bq = 128 if Sq % 128 == 0 else 8
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      bq=bq, q_offset=q_offset,
+                                      interpret=interpret)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth
+swept against in tests/test_kernels_*.py)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import hqq
+
+
+def dequant_matmul_ref(x, packed, scale, zero, *, bits, group_size,
+                       out_dtype=jnp.float32):
+    """x: (M, K); packed: (G, g*bits//8, N) uint8; scale/zero: (G, 1, N).
+
+    Returns x @ dequant(W) in f32 accumulate.  W layout: grouped along K
+    (G = K // group_size), exactly `quant/hqq.quantize`'s layout for a 2-D
+    weight.
+    """
+    q = hqq.unpack_codes(packed, bits, group_size).astype(jnp.float32)
+    w = (q - zero.astype(jnp.float32)) * scale.astype(jnp.float32)
+    K = packed.shape[0] * group_size
+    w = w.reshape(K, packed.shape[-1])
+    return jnp.dot(x.astype(jnp.float32), w).astype(out_dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None,
+                        q_offset=0):
+    """q: (BH, Sq, d); k, v: (BKV, Skv, d) with BH = BKV * G (GQA).
+
+    Query row i has absolute position ``q_offset + i``; key column j has
+    position ``j``.  f32 softmax, matches the kernel bit-for-bit up to
+    accumulation order.
+    """
+    BH, Sq, d = q.shape
+    BKV = k.shape[0]
+    G = BH // BKV
+    kk = jnp.repeat(k, G, axis=0)
+    vv = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(d)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    valid = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        valid &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        valid &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(valid[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vv).astype(q.dtype)

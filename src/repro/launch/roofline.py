@@ -1,0 +1,369 @@
+"""Roofline analysis from compiled (post-SPMD) HLO.
+
+``compiled.cost_analysis()`` on this backend reports **per-device** numbers
+and counts ``while`` (scan) bodies **once** (verified empirically), so the
+layer-stack scan would be undercounted ~n_periods-fold.  This module
+therefore parses ``compiled.as_text()`` itself:
+
+* builds a shape table from every instruction definition line;
+* walks the call graph from ENTRY, assigning each computation a *trip
+  multiplier* (while bodies/conditions multiply by the loop trip count,
+  recovered from the integer ``constant(N)`` in the condition computation);
+* FLOPs: ``dot``/``convolution`` instructions -> 2 * prod(out) *
+  prod(lhs contracting dims), scaled by the multiplier;
+* bytes: per instruction at non-fusion level, operands + outputs (the same
+  convention as XLA's own "bytes accessed"), scaled;
+* collective bytes: per collective op, ring-model effective bytes moved
+  per chip — all-gather/reduce-scatter: out*(g-1)/g, all-reduce: 2x that,
+  all-to-all / collective-permute: size as-is — scaled by the multiplier.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (brief-provided).
+
+The three roofline terms (seconds, per chip):
+    compute    = flops / PEAK_FLOPS
+    memory     = hbm_bytes / HBM_BW
+    collective = collective_bytes / ICI_BW
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9       # bytes/s / chip
+ICI_BW = 50e9        # bytes/s / link
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 0.5, "u4": 0.5,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+# a computation header is any line ending with "{" that declares
+# "(params) -> type"; params may contain nested tuple parens, so just grab
+# the leading name token
+_COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|then_branch|else_branch)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_RG_ARRAY_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_RG_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _parse_shape(typestr: str) -> float:
+    """Total bytes of a (possibly tuple) type string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(typestr):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_dims(typestr: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(typestr)
+    if not m:
+        return "", []
+    dt, dims = m.groups()
+    if not dims:
+        return dt, []
+    return dt, [int(d) for d in dims.split(",")]
+
+
+@dataclass
+class Instruction:
+    name: str
+    opcode: str
+    typestr: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+    is_fusion_body: bool = False
+    root_opcode: str = ""
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    fusion_bodies = set()
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s:
+            continue
+        if s.endswith("{") and ") -> " in s and "=" not in s.split("(")[0]:
+            hdr = _COMP_NAME_RE.match(s)
+            if hdr:
+                cur = Computation(hdr.group(1))
+                comps[cur.name] = cur
+                if s.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        d = _DEF_RE.match(s)
+        if not d:
+            continue
+        name, rhs = d.groups()
+        # rhs: "type opcode(...)" — opcode is the token before first '('
+        m = re.match(r"(.+?)\s+([\w\-]+)\(", rhs)
+        if not m:
+            continue
+        typestr, opcode = m.groups()
+        inst = Instruction(name, opcode, typestr, s)
+        cur.instructions.append(inst)
+        if s.startswith("ROOT"):
+            cur.root_opcode = opcode
+        if opcode == "fusion":
+            for cm in _CALLS_RE.findall(s):
+                fusion_bodies.add(cm)
+    for fb in fusion_bodies:
+        if fb in comps:
+            comps[fb].is_fusion_body = True
+    return comps, entry
+
+
+def _trip_count(cond: Computation, default: int) -> int:
+    consts = []
+    for inst in cond.instructions:
+        consts += [int(c) for c in _CONST_RE.findall(inst.line)]
+    # the loop bound is the largest integer constant in the condition
+    return max(consts) if consts else default
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str,
+                 default_trips: int) -> Dict[str, float]:
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    while order:
+        cname = order.pop(0)
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for inst in comp.instructions:
+            callees: List[Tuple[str, float]] = []
+            w = _WHILE_RE.search(inst.line)
+            if w:
+                cond, body = w.groups()
+                trips = _trip_count(comps.get(cond, Computation(cond)),
+                                    default_trips)
+                callees += [(cond, m * (trips + 1)), (body, m * trips)]
+            else:
+                for cm in _CALLS_RE.findall(inst.line):
+                    callees.append((cm, m))
+                br = _BRANCHES_RE.search(inst.line)
+                if br:
+                    for cm in br.group(1).split(","):
+                        callees.append((cm.strip().lstrip("%"), m))
+            for cn, cm in callees:
+                mult[cn] = mult.get(cn, 0.0) + cm
+                if cn not in seen:
+                    seen.add(cn)
+                    order.append(cn)
+    return dict(mult)
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _RG_ARRAY_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _RG_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    return n_devices
+
+
+def _dot_flops(inst: Instruction, shapes: Dict[str, Tuple[str, List[int]]]
+               ) -> float:
+    out_dt, out_dims = _parse_dims(inst.typestr)
+    out_n = math.prod(out_dims) if out_dims else 1
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.line)
+    operands = _OPERAND_RE.findall(
+        inst.line[inst.line.index("("):].split(")")[0])
+    contract = 1
+    if mc and operands:
+        lhs = shapes.get(operands[0])
+        if lhs:
+            _, ldims = lhs
+            for d in mc.group(1).split(","):
+                if d != "" and int(d) < len(ldims):
+                    contract *= ldims[int(d)]
+    return 2.0 * out_n * contract
+
+
+@dataclass
+class RooflineReport:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_type: Dict[str, float] = field(default_factory=dict)
+    coll_count: int = 0
+    unscaled_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_bytes_per_chip": self.coll_bytes,
+            "collective_by_type": self.coll_by_type,
+            "collective_op_count": self.coll_count,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+# HBM-traffic model: count operand+output bytes only for ops that would
+# stay memory-moving after TPU fusion (matmuls, fusions at their
+# boundaries, data movement, collectives).  Bare elementwise ops appearing
+# at top level in the CPU-backend HLO would fuse on TPU and are skipped —
+# otherwise the memory term inflates ~100x with phantom traffic.
+COUNT_BYTE_OPS = {"dot", "convolution", "fusion", "custom-call", "copy",
+                  "dynamic-slice", "dynamic-update-slice", "gather",
+                  "scatter", "reduce", "sort", "select-and-scatter",
+                  "concatenate", "pad", "transpose",
+                  "all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute"}
+
+
+def analyze(hlo_text: str, n_devices: int, default_trips: int = 1
+            ) -> RooflineReport:
+    comps, entry = parse_hlo(hlo_text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    mult = _multipliers(comps, entry, default_trips)
+
+    shapes: Dict[str, Tuple[str, List[int]]] = {}
+    for comp in comps.values():
+        for inst in comp.instructions:
+            shapes[inst.name] = _parse_dims(inst.typestr)
+
+    rep = RooflineReport()
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0.0:
+            continue
+        for inst in comp.instructions:
+            if inst.opcode in ("dot", "convolution"):
+                f = _dot_flops(inst, shapes)
+                rep.flops += m * f
+                rep.unscaled_flops += f
+            if inst.opcode in COLLECTIVES or any(
+                    inst.opcode.startswith(c) for c in COLLECTIVES):
+                ckind = next(c for c in COLLECTIVES
+                             if inst.opcode.startswith(c))
+                out_bytes = _parse_shape(inst.typestr)
+                g = _group_size(inst.line, n_devices)
+                ring = (g - 1) / max(g, 1)
+                eff = out_bytes * ring
+                if ckind == "all-reduce":
+                    eff *= 2.0
+                elif ckind == "collective-permute":
+                    eff = out_bytes
+                rep.coll_bytes += m * eff
+                rep.coll_by_type[ckind] = rep.coll_by_type.get(ckind, 0.0) \
+                    + m * eff
+                rep.coll_count += 1
+            if not comp.is_fusion_body and inst.opcode in COUNT_BYTE_OPS:
+                ops = inst.line[inst.line.index("("):] if "(" in inst.line else ""
+                operands = _OPERAND_RE.findall(ops.split("),")[0])
+
+                def _op_bytes(op_name):
+                    if op_name in shapes:
+                        dt, dims = shapes[op_name]
+                        if dt in DTYPE_BYTES:
+                            return (math.prod(dims) if dims else 1) \
+                                * DTYPE_BYTES[dt]
+                    return 0.0
+
+                fusion_root = ""
+                if inst.opcode == "fusion":
+                    for cm in _CALLS_RE.findall(inst.line):
+                        fusion_root = comps[cm].root_opcode if cm in comps \
+                            else ""
+                        break
+                if inst.opcode == "dynamic-update-slice" \
+                        or fusion_root == "dynamic-update-slice" \
+                        or "dynamic-update-slice" in inst.name:
+                    # in-place on TPU (buffer aliased): traffic = read+write
+                    # of the update, not the whole buffer — approximate as
+                    # 2x the non-largest operands
+                    sizes = sorted((_op_bytes(o) for o in operands),
+                                   reverse=True)
+                    b = 2.0 * sum(sizes[1:]) if len(sizes) > 1 \
+                        else _parse_shape(inst.typestr)
+                elif inst.opcode == "dynamic-slice" \
+                        or fusion_root == "dynamic-slice" \
+                        or ("dynamic-slice" in inst.name
+                            and "update" not in inst.name):
+                    b = 2.0 * _parse_shape(inst.typestr)
+                else:
+                    b = _parse_shape(inst.typestr)
+                    for op_name in operands:
+                        b += _op_bytes(op_name)
+                rep.hbm_bytes += m * b
+    return rep
+
+
+def model_flops(cfg, n_tokens: int, kind: str = "train") -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); bwd counted for train only."""
+    from repro.models.transformer import count_params_analytic
+
+    n = count_params_analytic(cfg)
+    n -= cfg.vocab_size * cfg.d_model  # embeddings are lookups
+    if cfg.moe is not None:
+        per_expert = 3 * cfg.d_model * cfg.d_ff
+        inactive = (cfg.moe_layer_count * (cfg.moe.num_experts - cfg.moe.top_k)
+                    * per_expert)
+        n -= inactive
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * n_tokens

@@ -1,0 +1,70 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tiny-moe --steps 200
+
+On this CPU host it trains the *reduced* variant of the selected arch
+(or a trainable config like ``tiny-moe`` at full size); on a real TPU
+fleet the same entry point lowers the identical ``train_step`` onto the
+production mesh (see ``--production-mesh`` which requires enough devices).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.data.pipeline import DataConfig, PackedDataset
+from repro.models import transformer as T
+from repro.training import optimizer as O
+from repro.training import trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny-moe", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (smoke) variant of the arch")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--corpus-bytes", type=int, default=4_000_000)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced or cfg.vocab_size > 100_000 or cfg.d_model > 1024:
+        cfg = cfg.reduced()
+        print(f"[train] using reduced variant: {cfg.name}")
+    ds = PackedDataset(DataConfig(seq_len=args.seq_len,
+                                  batch_size=args.batch_size,
+                                  max_bytes=args.corpus_bytes,
+                                  seed=args.seed))
+    params = T.init_model(jax.random.key(args.seed), cfg)
+    n = T.count_params_analytic(cfg)
+    print(f"[train] {cfg.name}: {n/1e6:.1f}M params, "
+          f"{args.steps} steps x {args.batch_size}x{args.seq_len} tokens")
+    opt = O.OptimizerConfig(lr=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
+                            total_steps=args.steps)
+    tcfg = trainer.TrainerConfig(steps=args.steps, log_every=10,
+                                 eval_every=max(50, args.steps // 4),
+                                 checkpoint_path=args.checkpoint,
+                                 checkpoint_every=args.steps // 2 if args.checkpoint else 0)
+    params, _, hist = trainer.train(
+        params, cfg, opt, ds.batches(), tcfg,
+        eval_batches=lambda: ds.eval_batches(4))
+    if args.checkpoint:
+        from repro.checkpoint.checkpointer import save
+        save(args.checkpoint, params, meta={"arch": cfg.name,
+                                            "steps": args.steps})
+        print(f"[train] saved {args.checkpoint}")
+    print(f"[train] final loss {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

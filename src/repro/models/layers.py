@@ -1,0 +1,327 @@
+"""Core transformer layers: norms, RoPE, GQA attention (global / sliding
+window / cross), MLPs, embeddings.
+
+Conventions
+-----------
+* Parameters are plain dicts of ``jnp`` arrays; every ``init_*`` has a
+  matching ``*_train`` (full-sequence) and ``*_decode`` (single-step with
+  cache) apply function.
+* Attention weights keep explicit head axes — ``wq: (D, H, hd)`` — so the
+  sharding rules in :mod:`repro.sharding.specs` can target head axes
+  directly.
+* Softmax / norms / rotary run in float32 regardless of param dtype.
+* The training/prefill attention is **query-chunked** (exact, not an
+  approximation): scores are materialised ``q_chunk`` query rows at a time
+  inside a ``lax.scan``, bounding activation memory at
+  ``B*H*q_chunk*S`` instead of ``B*H*S*S``.  This is what lets the 104B
+  config's 32k prefill fit per-device HBM in the dry-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.specs import constrain
+
+DEFAULT_Q_CHUNK = 512
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+# Norms
+def init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), _pdt(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), _pdt(cfg))
+    return p
+
+
+def apply_norm(p, cfg, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm" and "bias" in p:
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def _pdt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ----------------------------------------------------------------------
+# Rotary position embeddings (partial-fraction aware, stablelm-style)
+def rope_frequencies(cfg):
+    rot = int(cfg.head_dim * cfg.rope_fraction)
+    rot -= rot % 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, cfg):
+    """x: (..., S, H, hd) or (..., 1, H, hd); positions: (S,) int32."""
+    inv, rot = rope_frequencies(cfg)
+    if rot == 0:
+        return x
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]  # (S, rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xr, xp = x[..., :rot], x[..., rot:]
+    xf = xr.astype(jnp.float32)
+    x1, x2 = xf[..., 0::2], xf[..., 1::2]
+    # broadcast (S, rot/2) -> (..., S, 1, rot/2)
+    c = cos[:, None, :]
+    s = sin[:, None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xf.shape).astype(x.dtype)
+    return jnp.concatenate([yr, xp], axis=-1) if rot < x.shape[-1] else yr
+
+
+# ----------------------------------------------------------------------
+# Attention
+def init_attention(rng, cfg, *, cross=False):
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    sc = 1.0 / math.sqrt(D)
+    dt = _pdt(cfg)
+    p = {
+        "wq": (jax.random.normal(k1, (D, H, hd)) * sc).astype(dt),
+        "wk": (jax.random.normal(k2, (D, Hkv, hd)) * sc).astype(dt),
+        "wv": (jax.random.normal(k3, (D, Hkv, hd)) * sc).astype(dt),
+        "wo": (jax.random.normal(k4, (H, hd, D)) * sc / math.sqrt(2 * cfg.n_layers)).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dt)
+        p["bk"] = jnp.zeros((Hkv, hd), dt)
+        p["bv"] = jnp.zeros((Hkv, hd), dt)
+    if cfg.attn_out_bias:
+        p["bo"] = jnp.zeros((D,), dt)
+    return p
+
+
+def _project_q(p, cfg, x):
+    # 2-D dot (Megatron layout): the (D, H, hd) einsum makes the SPMD
+    # partitioner gather the weight over BOTH mesh axes (full
+    # f32[12288,96,128] per chip per layer on the 104B config — §Perf
+    # iteration 3); reshaping to (D, H*hd) keeps the head axis sharded.
+    w = p["wq"]
+    q = jnp.dot(x, w.reshape(w.shape[0], -1)).reshape(
+        x.shape[:-1] + w.shape[1:])
+    if "bq" in p:
+        q = q + p["bq"]
+    return q
+
+
+def _project_kv(p, cfg, x):
+    wk, wv = p["wk"], p["wv"]
+    k = jnp.dot(x, wk.reshape(wk.shape[0], -1)).reshape(
+        x.shape[:-1] + wk.shape[1:])
+    v = jnp.dot(x, wv.reshape(wv.shape[0], -1)).reshape(
+        x.shape[:-1] + wv.shape[1:])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+def _out_proj(p, cfg, o):
+    w = p["wo"]  # (H, hd, D)
+    y = jnp.dot(o.reshape(o.shape[:-2] + (-1,)),
+                w.reshape(-1, w.shape[-1]))
+    if "bo" in p:
+        y = y + p["bo"]
+    return y
+
+
+def attention_core(q, k, v, qpos, kpos, *, causal, window, q_chunk=DEFAULT_Q_CHUNK):
+    """Exact query-chunked GQA attention.
+
+    q: (B, Sq, H, hd)  k, v: (B, Skv, Hkv, hd)
+    qpos: (Sq,) int32 absolute positions; kpos: (Skv,) int32 (−1 = invalid
+    slot, used by the rolling decode cache).
+    """
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+
+    q_chunk = min(q_chunk, Sq)
+    if Sq % q_chunk:
+        q_chunk = Sq  # smoke shapes
+    n_chunks = Sq // q_chunk
+
+    def chunk_fn(carry, idx):
+        start = idx * q_chunk
+        qc = jax.lax.dynamic_slice_in_dim(qg, start, q_chunk, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(qpos, start, q_chunk, axis=0)
+        s = jnp.einsum("bqhgk,bthk->bhgqt", qc.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        valid = (kpos >= 0)[None, :]
+        if causal:
+            valid = valid & (kpos[None, :] <= qp[:, None])
+        if window is not None:
+            valid = valid & ((qp[:, None] - kpos[None, :]) < window)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(q.dtype)  # bf16 AV matmul
+        oc = jnp.einsum("bhgqt,bthk->bqhgk", w, v)
+        return carry, oc
+
+    if n_chunks == 1:
+        _, o = chunk_fn(None, jnp.int32(0))
+    else:
+        # flash-attention-style memory behaviour under autodiff: recompute
+        # each chunk's scores in the backward instead of storing them all
+        body = jax.checkpoint(chunk_fn,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+        _, o = jax.lax.scan(body, None, jnp.arange(n_chunks))
+        o = jnp.moveaxis(o, 0, 1).reshape(B, Sq, Hkv, G, hd)
+    return o.reshape(B, Sq, H, hd)
+
+
+def attention_train(p, cfg, x, positions, *, window=None, causal=True,
+                    kv_override=None, kv_positions=None):
+    """Full-sequence attention.  ``kv_override`` (enc output) => cross-attn."""
+    q = _project_q(p, cfg, x)
+    if kv_override is None:
+        k, v = _project_kv(p, cfg, x)
+        q = apply_rope(q, positions, cfg)
+        k = apply_rope(k, positions, cfg)
+        kpos = positions
+    else:
+        k, v = _project_kv(p, cfg, kv_override)
+        kpos = kv_positions
+        causal = False
+        window = None
+    # Megatron-SP layout: full-seq, head-sharded QKV.  Without this, a
+    # seq-sharded residual stream leaves q seq-sharded and the chunk loop
+    # re-all-gathers it PER CHUNK (2x1.5TB/step on the 104B train config
+    # — §Perf iteration 1).
+    q = constrain(q, ("pod", "data"), None, "model", None)
+    k = constrain(k, ("pod", "data"), None, "model", None)
+    v = constrain(v, ("pod", "data"), None, "model", None)
+    o = attention_core(q, k, v, positions, kpos, causal=causal, window=window)
+    return _out_proj(p, cfg, o)
+
+
+def init_attn_cache(cfg, batch, max_len, window=None):
+    W = min(max_len, window) if window else max_len
+    dt = _pdt(cfg)
+    return {
+        "k": jnp.zeros((batch, W, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, W, cfg.n_kv_heads, cfg.head_dim), dt),
+        "pos": jnp.full((W,), -1, jnp.int32),
+    }
+
+
+def attention_decode(p, cfg, x_t, cache, cur_pos, *, window=None):
+    """One-token decode step with a (possibly rolling) KV cache.
+
+    x_t: (B, 1, D); cur_pos: scalar int32 absolute position.
+    """
+    W = cache["k"].shape[1]
+    pos1 = jnp.reshape(cur_pos, (1,))
+    q = _project_q(p, cfg, x_t)
+    k_new, v_new = _project_kv(p, cfg, x_t)
+    q = apply_rope(q, pos1, cfg)
+    k_new = apply_rope(k_new, pos1, cfg)
+    slot = jnp.mod(cur_pos, W)
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1),
+        "pos": jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], pos1.astype(jnp.int32), slot, axis=0),
+    }
+    o = attention_core(q, cache["k"], cache["v"], pos1, cache["pos"],
+                       causal=True, window=window, q_chunk=1)
+    return _out_proj(p, cfg, o), cache
+
+
+def cross_attention_decode(p, cfg, x_t, enc_k, enc_v, enc_pos):
+    q = _project_q(p, cfg, x_t)
+    o = attention_core(q, enc_k, enc_v, jnp.zeros((1,), jnp.int32), enc_pos,
+                       causal=False, window=None, q_chunk=1)
+    return _out_proj(p, cfg, o)
+
+
+def precompute_cross_kv(p, cfg, enc_out):
+    return _project_kv(p, cfg, enc_out)
+
+
+# ----------------------------------------------------------------------
+# MLPs
+def init_mlp(rng, cfg):
+    D, F = cfg.d_model, cfg.d_ff
+    dt = _pdt(cfg)
+    sc_in = 1.0 / math.sqrt(D)
+    sc_out = 1.0 / math.sqrt(F) / math.sqrt(2 * cfg.n_layers)
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {
+            "w_gate": (jax.random.normal(k1, (D, F)) * sc_in).astype(dt),
+            "w_up": (jax.random.normal(k2, (D, F)) * sc_in).astype(dt),
+            "w_down": (jax.random.normal(k3, (F, D)) * sc_out).astype(dt),
+        }
+    k1, k2 = jax.random.split(rng, 2)
+    return {
+        "w_in": (jax.random.normal(k1, (D, F)) * sc_in).astype(dt),
+        "w_out": (jax.random.normal(k2, (F, D)) * sc_out).astype(dt),
+    }
+
+
+def apply_mlp(p, cfg, x):
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        act = jax.nn.silu if cfg.mlp_act == "swiglu" else jax.nn.gelu
+        h = act(g.astype(jnp.float32)).astype(x.dtype) * u
+        h = constrain(h, ("pod", "data"), None, "model")
+        return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = constrain(h, ("pod", "data"), None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+
+
+# ----------------------------------------------------------------------
+# Embeddings / unembedding
+def init_embedding(rng, cfg):
+    dt = _pdt(cfg)
+    p = {"table": (jax.random.normal(rng, (cfg.padded_vocab, cfg.d_model))
+                   * 1.0 / math.sqrt(cfg.d_model)).astype(dt)}
+    return p
+
+
+def embed(p, cfg, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(params, cfg, x):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]["w"])
+    logits = logits.astype(jnp.float32)
+    # keep the (huge) vocab axis model-sharded; CE reduces it locally
+    logits = constrain(logits, ("pod", "data"), None, "model")
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, NEG_INF, logits)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def init_lm_head(rng, cfg):
+    dt = _pdt(cfg)
+    return {"w": (jax.random.normal(rng, (cfg.d_model, cfg.padded_vocab))
+                  * 1.0 / math.sqrt(cfg.d_model)).astype(dt)}

@@ -1,0 +1,197 @@
+"""Sparse Mixture-of-Experts FFN: token-level top-k routing.
+
+Three apply paths, all producing *identical* outputs (unit-tested):
+
+* :func:`moe_apply_dense` — reference: every expert computed for every
+  token, combined with the (sparse) routing weights.  O(E) compute; used
+  as the test oracle and for tiny decode batches.
+* :func:`moe_apply_dispatch` — production path: tokens are scattered into
+  an ``(E, capacity, D)`` buffer (GShard-style, but via scatter indices
+  rather than a one-hot dispatch einsum, which would be O(T*E*C) memory),
+  expert FFNs run as one batched einsum, results gather back.  Under the
+  production mesh the buffer's expert axis is sharded on ``"model"``
+  (expert parallelism -> all-to-all) when E divides the axis.
+* :func:`moe_apply_gather` — offloading path (paper): for interactive
+  decode only the *selected* experts' weights are touched — a per-token
+  gather of (k) expert weight slices.  This is the computational shape the
+  paper's offloading system executes on the accelerator, and the one the
+  offload engine charges transfers for.
+
+Capacity-overflow tokens in the dispatch path are dropped (standard GShard
+semantics); with ``capacity_factor >= top_k * E`` no token can ever drop,
+which the tests exploit to check dispatch == dense exactly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.specs import constrain
+
+
+def init_moe(rng, cfg, n_layers_hint: Optional[int] = None):
+    spec = cfg.moe
+    D, F, E = cfg.d_model, cfg.d_ff, spec.num_experts
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    sc_in = 1.0 / math.sqrt(D)
+    sc_out = 1.0 / math.sqrt(F) / math.sqrt(2 * (n_layers_hint or cfg.n_layers))
+    return {
+        "router": (jax.random.normal(k1, (D, E)) * sc_in).astype(jnp.float32),
+        "experts": {
+            "w_gate": (jax.random.normal(k2, (E, D, F)) * sc_in).astype(dt),
+            "w_up": (jax.random.normal(k3, (E, D, F)) * sc_in).astype(dt),
+            "w_down": (jax.random.normal(k4, (E, F, D)) * sc_out).astype(dt),
+        },
+    }
+
+
+def router_logits(p, x2d):
+    """(T, E) router logits in float32 (paper keeps gates in 16/32-bit)."""
+    return jnp.einsum("td,de->te", x2d.astype(jnp.float32),
+                      p["router"].astype(jnp.float32))
+
+
+def route_topk(p, spec, x2d) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (weights (T,K) f32, ids (T,K) i32, probs (T,E) f32)."""
+    logits = router_logits(p, x2d)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, spec.top_k)
+    w = w / jnp.clip(w.sum(-1, keepdims=True), 1e-9)  # mixtral renorm
+    return w, ids.astype(jnp.int32), probs
+
+
+def expert_ffn(experts, cfg, xbuf):
+    """xbuf: (E, C, D) -> (E, C, D), batched over experts."""
+    act = jax.nn.silu if cfg.mlp_act == "swiglu" else jax.nn.gelu
+    g = jnp.einsum("ecd,edf->ecf", xbuf, experts["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xbuf, experts["w_up"])
+    h = act(g.astype(jnp.float32)).astype(xbuf.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, experts["w_down"])
+
+
+def capacity(spec, T: int) -> int:
+    c = int(math.ceil(spec.top_k * T * spec.capacity_factor / spec.num_experts))
+    return max(4, c + (-c) % 4)
+
+
+def aux_losses(spec, probs, ids):
+    """Switch-style load-balance loss + router z-ish entropy diagnostics."""
+    T, E = probs.shape
+    assign = jax.nn.one_hot(ids, E, dtype=jnp.float32).sum(1)  # (T, E)
+    frac_tokens = assign.mean(0) / spec.top_k
+    frac_probs = probs.mean(0)
+    lb = E * jnp.sum(frac_tokens * frac_probs)
+    return {"load_balance": lb}
+
+
+# ----------------------------------------------------------------------
+def moe_apply_dense(p, cfg, x2d):
+    """Oracle: compute all experts densely, weight by routing."""
+    spec = cfg.moe
+    w, ids, probs = route_topk(p, spec, x2d)
+    T, D = x2d.shape
+    E = spec.num_experts
+    # sparse weights as dense (T, E)
+    wdense = jnp.zeros((T, E), jnp.float32)
+    wdense = wdense.at[jnp.arange(T)[:, None], ids].add(w)
+    xb = jnp.broadcast_to(x2d[None], (E, T, D))
+    y_all = expert_ffn(p["experts"], cfg, xb)  # (E, T, D)
+    y = jnp.einsum("etd,te->td", y_all.astype(jnp.float32), wdense)
+    return y.astype(x2d.dtype), aux_losses(spec, probs, ids)
+
+
+def moe_apply_dispatch(p, cfg, x2d, capacity_factor=None, groups=None):
+    """Scatter-dispatch production path (train / large-batch decode).
+
+    ``groups`` splits tokens into independently-dispatched groups with
+    per-group capacity (the real-EP-system semantics: capacity is per
+    device group, and the scatter stays LOCAL to the group).  On the
+    production mesh ``groups`` = number of batch shards, so the group axis
+    shards on ("pod","data") and only the expert FFN crosses shards
+    (all-to-all when experts are model-sharded).  Without grouping GSPMD
+    replicates the global scatter (74GB/chip for granite train_4k —
+    caught by the dry-run).
+    """
+    spec = cfg.moe
+    if capacity_factor is not None:
+        spec = spec.__class__(**{**spec.__dict__, "capacity_factor": capacity_factor})
+    g = groups or getattr(cfg, "moe_dispatch_groups", 1) or 1
+    T, D = x2d.shape
+    if T % g:
+        g = 1
+    w, ids, probs = route_topk(p, spec, x2d)
+    Tg = T // g
+    E, K = spec.num_experts, spec.top_k
+    C = capacity(spec, Tg)
+
+    def dispatch_one(xg, idsg, wg):
+        flat_e = idsg.reshape(Tg * K)  # slot -> expert, token-major priority
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (Tg*K, E)
+        pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
+        pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+        keep = pos < C
+        pos_c = jnp.where(keep, pos, C)  # C = out-of-range -> dropped
+        tok_idx = jnp.repeat(jnp.arange(Tg), K)
+        xslot = jnp.take(xg, tok_idx, axis=0)  # (Tg*K, D)
+        buf = jnp.zeros((E, C, D), xg.dtype)
+        buf = buf.at[flat_e, pos_c].add(
+            jnp.where(keep[:, None], xslot, 0), mode="drop")
+        # slot-level reverse maps so the combine can scatter straight from
+        # the (expert-sharded) ybuf into per-token outputs: the cross-shard
+        # traffic is then (Tg, D) instead of (Tg*K, D) — top_k x less
+        # (§Perf hillclimb 3 on granite's top-8 routing)
+        tok_map = jnp.full((E, C), Tg, jnp.int32)  # Tg = dropped sentinel
+        tok_map = tok_map.at[flat_e, pos_c].set(
+            jnp.where(keep, tok_idx, Tg), mode="drop")
+        w_map = jnp.zeros((E, C), jnp.float32)
+        w_map = w_map.at[flat_e, pos_c].set(
+            jnp.where(keep, wg.reshape(Tg * K), 0.0), mode="drop")
+        return buf, (tok_map, w_map)
+
+    def combine_one(ybuf, meta, wg):
+        tok_map, w_map = meta
+        contrib = ybuf * w_map[..., None].astype(ybuf.dtype)  # (E, C, D)
+        y = jnp.zeros((Tg, D), x2d.dtype)
+        return y.at[tok_map.reshape(E * C)].add(
+            contrib.reshape(E * C, D).astype(x2d.dtype), mode="drop")
+
+    xg = x2d.reshape(g, Tg, D)
+    idsg = ids.reshape(g, Tg, K)
+    wg = w.reshape(g, Tg, K)
+    buf, meta = jax.vmap(dispatch_one)(xg, idsg, wg)  # (g, E, C, D)
+    # group axis -> batch shards (local dispatch); expert axis -> "model"
+    # (expert parallel) when divisible.  The expert FFN below is the only
+    # cross-group op -> all-to-all.
+    buf = constrain(buf, ("pod", "data"), "model", None, None)
+    ybuf = jax.vmap(lambda b: expert_ffn(p["experts"], cfg, b))(buf)
+    ybuf = constrain(ybuf, ("pod", "data"), "model", None, None)
+    y = jax.vmap(combine_one)(ybuf, meta, wg)  # (g, Tg, D)
+    return (y.reshape(T, D).astype(x2d.dtype),
+            aux_losses(spec, probs, ids))
+
+
+def moe_apply_gather(p, cfg, x2d, experts_override=None):
+    """Per-token expert-weight gather — the offloaded-inference shape.
+
+    Only the (T, K) selected experts' weight slices are read.  With the
+    offload engine, ``experts_override`` supplies (possibly dequantized)
+    weights gathered from the cache/host pools; here we gather from the
+    resident stacked experts.  T is expected tiny (interactive decode).
+    """
+    spec = cfg.moe
+    w, ids, probs = route_topk(p, spec, x2d)
+    ex = experts_override or p["experts"]
+    wg = jnp.take(ex["w_gate"], ids, axis=0)  # (T, K, D, F)
+    wu = jnp.take(ex["w_up"], ids, axis=0)
+    wd = jnp.take(ex["w_down"], ids, axis=0)  # (T, K, F, D)
+    act = jax.nn.silu if cfg.mlp_act == "swiglu" else jax.nn.gelu
+    g = jnp.einsum("td,tkdf->tkf", x2d, wg)
+    u = jnp.einsum("td,tkdf->tkf", x2d, wu)
+    h = act(g.astype(jnp.float32)).astype(x2d.dtype) * u
+    yk = jnp.einsum("tkf,tkfd->tkd", h, wd)  # (T, K, D)
+    y = jnp.einsum("tkd,tk->td", yk.astype(jnp.float32), w)
+    return y.astype(x2d.dtype), {"ids": ids, "weights": w, "probs": probs}

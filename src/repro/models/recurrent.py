@@ -1,0 +1,361 @@
+"""Recurrent sequence mixers: RG-LRU (Griffin/RecurrentGemma), mLSTM and
+sLSTM (xLSTM).
+
+All three expose the same triple of apply functions used by
+``models/transformer.py``:
+
+* ``*_train(params, cfg, x)``            -> ``(y, final_state)``
+* ``*_decode(params, cfg, x_t, state)``  -> ``(y_t, new_state)``
+* ``init_*_state(cfg, batch)``           -> zero state pytree
+
+Numerical notes
+---------------
+* The mLSTM training path is **chunkwise-parallel** (TPU-friendly: big
+  matmuls within a chunk, a short scan across chunks) and is provably
+  identical to the stabilized recurrent form — ``mlstm_recurrent_ref`` is
+  the oracle and ``tests/test_recurrent.py`` asserts allclose.  All
+  stabilizer exponents are <= 0 by construction (log-space cummax), so the
+  chunkwise form is overflow-free in bf16/f32.
+* RG-LRU training uses ``jax.lax.associative_scan`` over the linear
+  recurrence h_t = a_t * h_{t-1} + b_t.
+* sLSTM has true hidden-to-hidden recurrence (block-diagonal per head) and
+  therefore scans sequentially over time — that *is* the architecture; the
+  xLSTM paper accepts this for a minority of blocks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _pdt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ======================================================================
+# RG-LRU block (Griffin recurrent block: gated branch * conv->RG-LRU branch)
+RGLRU_C = 8.0
+
+
+def init_rglru(rng, cfg):
+    D = cfg.d_model
+    R = D  # rnn width = d_model (RecurrentGemma-9B uses 4096 = d_model)
+    dt = _pdt(cfg)
+    ks = jax.random.split(rng, 7)
+    sc = 1.0 / math.sqrt(D)
+    scr = 1.0 / math.sqrt(R)
+    # Lambda init so that a = exp(-c*softplus(L)) in (0.9, 0.999)
+    lam = jax.random.uniform(ks[0], (R,), minval=-9.0, maxval=-4.3)
+    return {
+        "w_x": (jax.random.normal(ks[1], (D, R)) * sc).astype(dt),
+        "w_gate_br": (jax.random.normal(ks[2], (D, R)) * sc).astype(dt),
+        "conv_w": (jax.random.normal(ks[3], (cfg.rglru_conv_width, R)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((R,), dt),
+        "w_rec_gate": (jax.random.normal(ks[4], (R, R)) * scr).astype(dt),
+        "w_in_gate": (jax.random.normal(ks[5], (R, R)) * scr).astype(dt),
+        "lam": lam.astype(F32),
+        "w_out_r": (jax.random.normal(ks[6], (R, D)) * scr
+                    / math.sqrt(2 * cfg.n_layers)).astype(dt),
+    }
+
+
+def init_rglru_state(cfg, batch):
+    R = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, R), F32),
+        "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, R), _pdt(cfg)),
+    }
+
+
+def _causal_conv(p, x, prefix):
+    """Depthwise causal conv, width cw.  x: (B,S,R); prefix: (B,cw-1,R)."""
+    cw = p["conv_w"].shape[0]
+    xp = jnp.concatenate([prefix, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * p["conv_w"][cw - 1 - i]
+            for i in range(cw))
+    return y + p["conv_b"], xp[:, -(cw - 1):]
+
+
+def _rglru_gates(p, xi):
+    r = jax.nn.sigmoid(jnp.einsum("...r,rq->...q", xi, p["w_rec_gate"]).astype(F32))
+    i = jax.nn.sigmoid(jnp.einsum("...r,rq->...q", xi, p["w_in_gate"]).astype(F32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably
+    b_scale = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = b_scale * (i * xi.astype(F32))
+    return a, b
+
+
+def rglru_train(p, cfg, x) -> Tuple[jnp.ndarray, dict]:
+    from repro.sharding.specs import constrain
+
+    B, S, D = x.shape
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_gate_br"]).astype(F32))
+    xi0 = jnp.einsum("bsd,dr->bsr", x, p["w_x"])
+    prefix = jnp.zeros((B, cfg.rglru_conv_width - 1, xi0.shape[-1]), x.dtype)
+    xi, conv_state = _causal_conv(p, xi0, prefix)
+    a, b = _rglru_gates(p, xi)
+    # the recurrence is elementwise over R: shard R on "model" so the
+    # associative scan's O(log S) saved intermediates shard too
+    a = constrain(a, ("pod", "data"), None, "model")
+    b = constrain(b, ("pod", "data"), None, "model")
+
+    def comb(first, second):
+        a1, b1 = first
+        a2, b2 = second
+        return a1 * a2, a2 * b1 + b2
+
+    A, Bc = jax.lax.associative_scan(comb, (a, b), axis=1)
+    h = Bc  # h0 = 0 so h_t = cumulative b
+    y = jnp.einsum("bsr,rd->bsd", (gate * h).astype(x.dtype), p["w_out_r"])
+    state = {"h": h[:, -1], "conv": conv_state}
+    return y, state
+
+
+def rglru_decode(p, cfg, x_t, state):
+    """x_t: (B, 1, D)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x_t, p["w_gate_br"]).astype(F32))
+    xi0 = jnp.einsum("bsd,dr->bsr", x_t, p["w_x"])
+    xi, conv_state = _causal_conv(p, xi0, state["conv"])
+    a, b = _rglru_gates(p, xi)  # (B,1,R)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = jnp.einsum("bsr,rd->bsd", (gate * h[:, None]).astype(x_t.dtype), p["w_out_r"])
+    return y, {"h": h, "conv": conv_state}
+
+
+# ======================================================================
+# mLSTM (xLSTM matrix-memory cell), chunkwise-parallel training form.
+def init_mlstm(rng, cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    dt = _pdt(cfg)
+    ks = jax.random.split(rng, 7)
+    scd = 1.0 / math.sqrt(D)
+    return {
+        "wq": (jax.random.normal(ks[0], (D, H, dh)) * scd).astype(dt),
+        "wk": (jax.random.normal(ks[1], (D, H, dh)) * scd).astype(dt),
+        "wv": (jax.random.normal(ks[2], (D, H, dh)) * scd).astype(dt),
+        "wf": (jax.random.normal(ks[3], (D, H)) * scd).astype(F32),
+        "bf": jnp.linspace(3.0, 6.0, H).astype(F32),  # forget bias init
+        "wi": (jax.random.normal(ks[4], (D, H)) * scd).astype(F32),
+        "bi": jnp.full((H,), -3.0, F32),
+        "w_ogate": (jax.random.normal(ks[5], (D, D)) * scd).astype(dt),
+        "headnorm": jnp.ones((H, dh), F32),
+        "out_proj": (jax.random.normal(ks[6], (D, D)) * scd
+                     / math.sqrt(2 * cfg.n_layers)).astype(dt),
+    }
+
+
+def init_mlstm_state(cfg, batch):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), F32),
+        "n": jnp.zeros((batch, H, dh), F32),
+        "m": jnp.zeros((batch, H), F32),
+    }
+
+
+def _mlstm_qkv_gates(p, cfg, xn):
+    B, S, D = xn.shape
+    H = cfg.n_heads
+    dh = D // H
+    q = jnp.einsum("bsd,dhj->bshj", xn, p["wq"]).astype(F32)
+    k = jnp.einsum("bsd,dhj->bshj", xn, p["wk"]).astype(F32) / math.sqrt(dh)
+    v = jnp.einsum("bsd,dhj->bshj", xn, p["wv"]).astype(F32)
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", xn.astype(F32), p["wf"]) + p["bf"])
+    li = jnp.einsum("bsd,dh->bsh", xn.astype(F32), p["wi"]) + p["bi"]
+    return q, k, v, lf, li
+
+
+def mlstm_scan_core(q, k, v, lf, li, state, chunk):
+    """Chunkwise-parallel stabilized mLSTM.  All inputs f32.
+
+    q,k,v: (B,S,H,dh); lf,li: (B,S,H).  Returns (h (B,S,H,dh), state).
+    Exactly equivalent to ``mlstm_recurrent_ref`` (same stabilizers).
+    """
+    B, S, H, dh = q.shape
+    L = min(chunk, S)
+    if S % L:
+        L = S
+    Nc = S // L
+
+    def to_chunks(x):
+        return x.reshape(B, Nc, L, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, lfc, lic = map(to_chunks, (q, k, v, lf, li))
+
+    def chunk_step(carry, inp):
+        C, n, m = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        q, k, v, lf, li = inp  # (B,L,H,*)
+        b = jnp.cumsum(lf, axis=1)  # inclusive log-decay within chunk
+        u = li - b
+        g = jnp.maximum(m[:, None], jax.lax.cummax(u, axis=1))  # (B,L,H)
+        m_j = b + g
+        # inter-chunk numerator
+        inter = jnp.einsum("blhk,bhkv->blhv", q, C) * jnp.exp(m[:, None] - g)[..., None]
+        # intra-chunk: D_js = exp(u_s - g_j) for s<=j else 0
+        scores = jnp.einsum("blhk,bshk->bhls", q, k)
+        us = u.transpose(0, 2, 1)  # (B,H,L) over s
+        gj = g.transpose(0, 2, 1)  # (B,H,L) over j
+        Dmat = jnp.exp(us[:, :, None, :] - gj[:, :, :, None])  # (B,H,Lj,Ls)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        Dmat = jnp.where(mask[None, None], Dmat, 0.0)
+        intra = jnp.einsum("bhls,bshv->blhv", scores * Dmat, v)
+        num = inter + intra
+        n_j = (n[:, None] * jnp.exp(m[:, None] - g)[..., None]
+               + jnp.einsum("bhls,bshk->blhk", Dmat, k))
+        qn = jnp.einsum("blhk,blhk->blh", q, n_j)
+        den = jnp.maximum(jnp.abs(qn), jnp.exp(-m_j))
+        h = num / den[..., None]
+        # chunk-final state (j = L-1 row of the same quantities)
+        gL = g[:, -1]  # (B,H)
+        scale_prev = jnp.exp(m - gL)
+        w_s = jnp.exp(u - gL[:, None])  # (B,L,H); every s feeds the final state
+        C_new = (C * scale_prev[..., None, None]
+                 + jnp.einsum("blh,blhk,blhv->bhkv", w_s, k, v))
+        n_new = n * scale_prev[..., None] + jnp.einsum("blh,blhk->bhk", w_s, k)
+        m_new = b[:, -1] + gL
+        return (C_new, n_new, m_new), h
+
+    carry = (state["C"], state["n"], state["m"])
+    carry, hs = jax.lax.scan(chunk_step, carry, (qc, kc, vc, lfc, lic))
+    h = hs.swapaxes(0, 1).reshape(B, S, H, dh)
+    C, n, m = carry
+    return h, {"C": C, "n": n, "m": m}
+
+
+def mlstm_recurrent_ref(q, k, v, lf, li, state):
+    """Stabilized recurrent oracle (step-by-step).  f32 inputs."""
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, lft, lit = inp  # (B,H,dh) / (B,H)
+        m_t = jnp.maximum(lft + m, lit)
+        fs = jnp.exp(lft + m - m_t)
+        is_ = jnp.exp(lit - m_t)
+        C = fs[..., None, None] * C + is_[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = fs[..., None] * n + is_[..., None] * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n)),
+                          jnp.exp(-m_t))
+        return (C, n, m_t), num / den[..., None]
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, lf, li))
+    carry, hs = jax.lax.scan(step, (state["C"], state["n"], state["m"]), xs)
+    C, n, m = carry
+    return jnp.moveaxis(hs, 0, 1), {"C": C, "n": n, "m": m}
+
+
+def _mlstm_out(p, cfg, xn, h):
+    B, S, D = xn.shape
+    H = cfg.n_heads
+    dh = D // H
+    hf = h.astype(F32)
+    ms = (hf * hf).mean(-1, keepdims=True)
+    hn = hf * jax.lax.rsqrt(ms + 1e-6) * p["headnorm"]
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xn, p["w_ogate"]).astype(F32))
+    y = (hn.reshape(B, S, D) * o).astype(xn.dtype)
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"])
+
+
+def mlstm_train(p, cfg, x):
+    q, k, v, lf, li = _mlstm_qkv_gates(p, cfg, x)
+    state = init_mlstm_state(cfg, x.shape[0])
+    h, state = mlstm_scan_core(q, k, v, lf, li, state, cfg.mlstm_chunk)
+    return _mlstm_out(p, cfg, x, h), state
+
+
+def mlstm_decode(p, cfg, x_t, state):
+    q, k, v, lf, li = _mlstm_qkv_gates(p, cfg, x_t)
+    h, state = mlstm_recurrent_ref(q, k, v, lf, li, state)
+    return _mlstm_out(p, cfg, x_t, h), state
+
+
+# ======================================================================
+# sLSTM (xLSTM scalar-memory cell with hidden-to-hidden recurrence)
+N_SGATES = 4  # z, i, f, o
+
+
+def init_slstm(rng, cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    dt = _pdt(cfg)
+    ks = jax.random.split(rng, 4)
+    scd = 1.0 / math.sqrt(D)
+    sch = 1.0 / math.sqrt(dh)
+    bias = jnp.zeros((N_SGATES, H, dh), F32)
+    bias = bias.at[2].set(jnp.linspace(3.0, 6.0, H)[:, None])  # forget bias
+    return {
+        "w_gates_in": (jax.random.normal(ks[0], (D, N_SGATES, H, dh)) * scd).astype(dt),
+        "r_gates": (jax.random.normal(ks[1], (N_SGATES, H, dh, dh)) * sch).astype(dt),
+        "b_gates": bias,
+        "headnorm": jnp.ones((H, dh), F32),
+        "out_proj": (jax.random.normal(ks[2], (D, D)) * scd
+                     / math.sqrt(2 * cfg.n_layers)).astype(dt),
+    }
+
+
+def init_slstm_state(cfg, batch):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), F32)
+    return {"h": z, "c": z, "n": z, "m": z}
+
+
+def _slstm_step(p, carry, pre_in):
+    """pre_in: (B, 4, H, dh) input contribution for one timestep."""
+    h, c, n, m = carry
+    rec = jnp.einsum("ghij,bhj->bghi",
+                     p["r_gates"].astype(F32), h)
+    pre = pre_in + rec + p["b_gates"][None]
+    z = jnp.tanh(pre[:, 0])
+    li = pre[:, 1]
+    lf = jax.nn.log_sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_t = jnp.maximum(lf + m, li)
+    fs = jnp.exp(lf + m - m_t)
+    is_ = jnp.exp(li - m_t)
+    c_t = fs * c + is_ * z
+    n_t = fs * n + is_
+    h_t = o * c_t / jnp.maximum(n_t, jnp.exp(-m_t) + 1e-9)
+    return (h_t, c_t, n_t, m_t), h_t
+
+
+def slstm_train(p, cfg, x):
+    B, S, D = x.shape
+    pre = jnp.einsum("bsd,dghj->bsghj", x.astype(F32),
+                     p["w_gates_in"].astype(F32))
+    state0 = init_slstm_state(cfg, B)
+    carry = (state0["h"], state0["c"], state0["n"], state0["m"])
+    carry, hs = jax.lax.scan(lambda c, i: _slstm_step(p, c, i),
+                             carry, jnp.moveaxis(pre, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)  # (B,S,H,dh)
+    y = _slstm_out(p, cfg, x, h)
+    hf, cf, nf, mf = carry
+    return y, {"h": hf, "c": cf, "n": nf, "m": mf}
+
+
+def slstm_decode(p, cfg, x_t, state):
+    pre = jnp.einsum("bsd,dghj->bsghj", x_t.astype(F32),
+                     p["w_gates_in"].astype(F32))[:, 0]
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    carry, h_t = _slstm_step(p, carry, pre)
+    y = _slstm_out(p, cfg, x_t, h_t[:, None])
+    hf, cf, nf, mf = carry
+    return y, {"h": hf, "c": cf, "n": nf, "m": mf}
+
+
+def _slstm_out(p, cfg, x, h):
+    B, S, D = x.shape
+    hf = h.astype(F32)
+    ms = (hf * hf).mean(-1, keepdims=True)
+    hn = (hf * jax.lax.rsqrt(ms + 1e-6) * p["headnorm"]).reshape(B, S, D)
+    return jnp.einsum("bsd,de->bse", hn.astype(x.dtype), p["out_proj"])

@@ -1,0 +1,472 @@
+"""Model assembly for every architecture family.
+
+A model is a stack of *blocks*; each block = mixer (attention / SWA /
+cross-attn / RG-LRU / mLSTM / sLSTM) + optional FFN (dense MLP or MoE),
+pre-norm residual.  The stack is organised for ``lax.scan``:
+
+* ``params["stack"][p]`` — parameters of pattern-position ``p``, stacked
+  over the ``n_periods`` repetitions (leading axis), scanned at apply time;
+* ``params["tail"]``     — remainder layers (n_layers % period), unscanned.
+
+Apply modes
+-----------
+* :func:`forward_train`  — full-sequence teacher-forced logits (+MoE aux).
+* :func:`prefill`        — same compute, additionally returns a filled
+  decode state (KV caches / recurrent states).
+* :func:`decode_step`    — one token with the decode state.
+
+Decode-vs-train parity is the key invariant (tests/test_parity.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, parse_block
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.sharding.specs import constrain
+
+PyTree = Any
+
+
+# ======================================================================
+# Init
+def _init_block(rng, cfg: ModelConfig, kind: str):
+    mixer, ffn = parse_block(kind)
+    ks = jax.random.split(rng, 4)
+    p: Dict[str, PyTree] = {"norm1": L.init_norm(cfg)}
+    if mixer in ("attn", "swa", "xattn", "encattn"):
+        p["attn"] = L.init_attention(ks[0], cfg)
+    elif mixer == "rglru":
+        p["rglru"] = R.init_rglru(ks[0], cfg)
+    elif mixer == "mlstm":
+        p["mlstm"] = R.init_mlstm(ks[0], cfg)
+    elif mixer == "slstm":
+        p["slstm"] = R.init_slstm(ks[0], cfg)
+    if mixer == "xattn":
+        p["norm_x"] = L.init_norm(cfg)
+        p["xattn"] = L.init_attention(ks[2], cfg, cross=True)
+    if ffn == "mlp":
+        p["norm2"] = L.init_norm(cfg)
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    elif ffn == "moe":
+        p["norm2"] = L.init_norm(cfg)
+        p["moe"] = M.init_moe(ks[1], cfg)
+    return p
+
+
+def init_model(rng, cfg: ModelConfig) -> PyTree:
+    ks = jax.random.split(rng, 8)
+    params: Dict[str, PyTree] = {"embed": L.init_embedding(ks[0], cfg)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_lm_head(ks[1], cfg)
+    params["final_norm"] = L.init_norm(cfg)
+
+    period = cfg.pattern_period
+    n_p = cfg.n_periods
+
+    def stacked_init(kind, base_key):
+        def one(k):
+            return _init_block(k, cfg, kind)
+        return jax.vmap(one)(jax.random.split(base_key, n_p))
+
+    stack_keys = jax.random.split(ks[2], period)
+    params["stack"] = [stacked_init(cfg.block_pattern[i], stack_keys[i])
+                       for i in range(period)]
+    tail_keys = jax.random.split(ks[3], max(1, cfg.n_tail_layers))
+    params["tail"] = [_init_block(tail_keys[i], cfg, k)
+                      for i, k in enumerate(cfg.tail_kinds())]
+
+    if cfg.is_encoder_decoder:
+        enc_cfg = cfg.replace(block_pattern=("encattn+mlp",),
+                              n_layers=cfg.encoder_layers)
+        enc_keys = jax.random.split(ks[4], 1)[0]
+        def enc_one(k):
+            return _init_block(k, enc_cfg, "encattn+mlp")
+        params["encoder"] = {
+            "stack": [jax.vmap(enc_one)(jax.random.split(enc_keys, cfg.encoder_layers))],
+            "final_norm": L.init_norm(cfg),
+        }
+    if cfg.num_image_tokens:
+        params["img_proj"] = (jax.random.normal(ks[5], (cfg.d_model, cfg.d_model))
+                              * (cfg.d_model ** -0.5)).astype(jnp.dtype(cfg.dtype))
+    return params
+
+
+def count_params_analytic(cfg: ModelConfig) -> int:
+    import math as _math
+    shapes = jax.eval_shape(lambda: init_model(jax.random.key(0), cfg))
+    return sum(_math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+# ======================================================================
+# Block apply (train / prefill)
+def _block_train(p, cfg: ModelConfig, kind: str, x, positions, *,
+                 want_state: bool, enc_out=None, enc_pos=None,
+                 batch_for_state: int = 0, max_len: int = 0):
+    """Returns (x, state_or_None, aux)."""
+    mixer, ffn = parse_block(kind)
+    aux = {}
+    state = {}
+
+    def seq_shard(t):
+        # Megatron-SP: keep residual adds sequence-sharded so the backward
+        # of TP output projections reduce-scatters instead of all-reducing
+        # (§Perf iteration 2 on the 104B train config)
+        if cfg.act_seq_shard:
+            return constrain(t, ("pod", "data"), "model", None)
+        return t
+
+    h = L.apply_norm(p["norm1"], cfg, x)
+    if mixer in ("attn", "swa", "encattn"):
+        window = cfg.sliding_window if mixer == "swa" else None
+        causal = mixer != "encattn"
+        if want_state and causal:
+            # compute and also fill the rolling KV cache for decode
+            y, kvstate = _attn_train_with_cache(p["attn"], cfg, h, positions,
+                                                window, max_len)
+            state["kv"] = kvstate
+        else:
+            y = L.attention_train(p["attn"], cfg, h, positions,
+                                  window=window, causal=causal)
+    elif mixer == "xattn":
+        window = None
+        if want_state:
+            y, kvstate = _attn_train_with_cache(p["attn"], cfg, h, positions,
+                                                None, max_len)
+            state["kv"] = kvstate
+        else:
+            y = L.attention_train(p["attn"], cfg, h, positions, window=None)
+    elif mixer == "rglru":
+        y, st = R.rglru_train(p["rglru"], cfg, h)
+        if want_state:
+            state["rec"] = st
+    elif mixer == "mlstm":
+        y, st = R.mlstm_train(p["mlstm"], cfg, h)
+        if want_state:
+            state["rec"] = st
+    elif mixer == "slstm":
+        y, st = R.slstm_train(p["slstm"], cfg, h)
+        if want_state:
+            state["rec"] = st
+    x = x + seq_shard(y)
+    if mixer == "xattn":
+        hx = L.apply_norm(p["norm_x"], cfg, x)
+        y = L.attention_train(p["xattn"], cfg, hx, positions,
+                              kv_override=enc_out, kv_positions=enc_pos)
+        x = x + seq_shard(y)
+    if ffn != "none":
+        h2 = L.apply_norm(p["norm2"], cfg, x)
+        if ffn == "mlp":
+            x = x + seq_shard(L.apply_mlp(p["mlp"], cfg, h2))
+        else:
+            B, S, D = h2.shape
+            y2d, moe_aux = M.moe_apply_dispatch(p["moe"], cfg, h2.reshape(B * S, D))
+            aux.update(moe_aux)
+            x = x + seq_shard(y2d.reshape(B, S, D))
+    return x, (state if want_state else None), aux
+
+
+def _attn_train_with_cache(p, cfg, h, positions, window, max_len):
+    """Full-seq attention that also produces the decode KV cache."""
+    B, S, _ = h.shape
+    y = L.attention_train(p, cfg, h, positions, window=window)
+    cache = L.init_attn_cache(cfg, B, max_len, window)
+    W = cache["k"].shape[1]
+    k_full, v_full = L._project_kv(p, cfg, h)
+    k_full = L.apply_rope(k_full, positions, cfg)
+    n = min(W, S)
+    tail_pos = positions[-n:]
+    slots = jnp.mod(tail_pos, W)
+    cache = {
+        "k": cache["k"].at[:, slots].set(k_full[:, -n:]),
+        "v": cache["v"].at[:, slots].set(v_full[:, -n:]),
+        "pos": cache["pos"].at[slots].set(tail_pos.astype(jnp.int32)),
+    }
+    return y, cache
+
+
+# ======================================================================
+# Block decode (single token)
+def _block_decode(p, cfg: ModelConfig, kind: str, x_t, state, pos, *,
+                  enc_kv=None, moe_mode: str = "dispatch", offload_hook=None):
+    mixer, ffn = parse_block(kind)
+    h = L.apply_norm(p["norm1"], cfg, x_t)
+    info = {}
+    if mixer in ("attn", "swa", "xattn"):
+        window = cfg.sliding_window if mixer == "swa" else None
+        y, kv = L.attention_decode(p["attn"], cfg, h, state["kv"], pos,
+                                   window=window)
+        state = dict(state, kv=kv)
+    elif mixer == "rglru":
+        y, rec = R.rglru_decode(p["rglru"], cfg, h, state["rec"])
+        state = dict(state, rec=rec)
+    elif mixer == "mlstm":
+        y, rec = R.mlstm_decode(p["mlstm"], cfg, h, state["rec"])
+        state = dict(state, rec=rec)
+    elif mixer == "slstm":
+        y, rec = R.slstm_decode(p["slstm"], cfg, h, state["rec"])
+        state = dict(state, rec=rec)
+    x_t = x_t + y
+    if mixer == "xattn":
+        hx = L.apply_norm(p["norm_x"], cfg, x_t)
+        ek, ev, ep = enc_kv
+        y = L.cross_attention_decode(p["xattn"], cfg, hx, ek, ev, ep)
+        x_t = x_t + y
+    if ffn != "none":
+        h2 = L.apply_norm(p["norm2"], cfg, x_t)
+        B, S, D = h2.shape
+        h2d = h2.reshape(B * S, D)
+        if ffn == "moe":
+            if moe_mode == "gather" or offload_hook is not None:
+                y2d, route = M.moe_apply_gather(p["moe"], cfg, h2d)
+                info["route"] = route
+                info["hidden_pre_moe"] = h2d
+            else:
+                y2d, _ = M.moe_apply_dispatch(p["moe"], cfg, h2d)
+        else:
+            y2d = L.apply_mlp(p["mlp"], cfg, h2).reshape(B * S, D)
+        x_t = x_t + y2d.reshape(B, S, D)
+    return x_t, state, info
+
+
+# ======================================================================
+# Decode-state init
+def _block_state(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    mixer, _ = parse_block(kind)
+    if mixer in ("attn", "xattn"):
+        return {"kv": L.init_attn_cache(cfg, batch, max_len, None)}
+    if mixer == "swa":
+        return {"kv": L.init_attn_cache(cfg, batch, max_len, cfg.sliding_window)}
+    if mixer == "rglru":
+        return {"rec": R.init_rglru_state(cfg, batch)}
+    if mixer == "mlstm":
+        return {"rec": R.init_mlstm_state(cfg, batch)}
+    if mixer == "slstm":
+        return {"rec": R.init_slstm_state(cfg, batch)}
+    return {}
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    def stacked(kind):
+        one = _block_state(cfg, kind, batch, max_len)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape).copy(), one)
+
+    state: Dict[str, PyTree] = {
+        "stack": [stacked(k) for k in cfg.block_pattern],
+        "tail": [_block_state(cfg, k, batch, max_len) for k in cfg.tail_kinds()],
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        dt = jnp.dtype(cfg.dtype)
+        S_e = cfg.encoder_seq
+        state["enc_kv"] = {
+            "k": jnp.zeros((cfg.n_layers, batch, S_e, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((cfg.n_layers, batch, S_e, cfg.n_kv_heads, cfg.head_dim), dt),
+            "pos": jnp.broadcast_to(jnp.arange(S_e, dtype=jnp.int32),
+                                    (cfg.n_layers, S_e)).copy(),
+        }
+    return state
+
+
+# ======================================================================
+# Embedding frontends
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    x = L.embed(params["embed"], cfg, batch["tokens"])
+    if cfg.num_image_tokens and "image_embeds" in batch:
+        img = jnp.einsum("bnd,de->bne", batch["image_embeds"].astype(x.dtype),
+                         params["img_proj"])
+        n = img.shape[1]
+        x = jnp.concatenate([img, x[:, n:]], axis=1)
+    return x
+
+
+def _run_encoder(params, cfg: ModelConfig, audio_embeds, remat=False):
+    """Whisper-style encoder over stub frontend embeddings."""
+    x = audio_embeds.astype(jnp.dtype(cfg.dtype))
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(carry, pslice):
+        h, _, _ = _block_train(pslice, cfg, "encattn+mlp", carry, pos,
+                               want_state=False)
+        return h, ()
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["encoder"]["stack"][0])
+    return L.apply_norm(params["encoder"]["final_norm"], cfg, x), pos
+
+
+# ======================================================================
+# Forward (train) and prefill
+def forward_train(params, cfg: ModelConfig, batch, *, want_state=False,
+                  max_len: int = 0, remat: bool = False):
+    x = _embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    x = constrain(x, ("pod", "data"), None, None)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    max_len = max_len or S
+
+    enc_out = enc_pos = None
+    if cfg.is_encoder_decoder:
+        enc_out, enc_pos = _run_encoder(params, cfg, batch["audio_embeds"],
+                                        remat=remat and not want_state)
+
+    aux_acc = {"load_balance": jnp.zeros((), jnp.float32)}
+    period = cfg.pattern_period
+    states = {"stack": [], "tail": []}
+
+    # scan over periods; inside the body apply each pattern position once
+    def body(carry, pslices):
+        x, aux_lb = carry
+        if cfg.act_seq_shard:
+            # sequence-parallel residual stream (shards the remat stack)
+            x = constrain(x, ("pod", "data"), "model", None)
+        st_out = []
+        for i in range(period):
+            kind = cfg.block_pattern[i]
+            x, st, aux = _block_train(pslices[i], cfg, kind, x, positions,
+                                      want_state=want_state, enc_out=enc_out,
+                                      enc_pos=enc_pos, max_len=max_len)
+            if "load_balance" in aux:
+                aux_lb = aux_lb + aux["load_balance"]
+            st_out.append(st if st is not None else {})
+        return (x, aux_lb), tuple(st_out)
+
+    if remat and not want_state:
+        # activation checkpointing: save only the per-period residual
+        # stream; everything inside a period is recomputed in the bwd pass
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    (x, lb), stacked_states = jax.lax.scan(
+        body, (x, aux_acc["load_balance"]), tuple(params["stack"]))
+    if want_state:
+        states["stack"] = list(stacked_states)
+
+    for i, kind in enumerate(cfg.tail_kinds()):
+        x, st, aux = _block_train(params["tail"][i], cfg, kind, x, positions,
+                                  want_state=want_state, enc_out=enc_out,
+                                  enc_pos=enc_pos, max_len=max_len)
+        if "load_balance" in aux:
+            lb = lb + aux["load_balance"]
+        if want_state:
+            states["tail"].append(st)
+
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = L.unembed(params, cfg, x)
+    aux_acc["load_balance"] = lb
+    if want_state:
+        states["pos"] = jnp.asarray(S, jnp.int32)
+        if cfg.is_encoder_decoder:
+            states["enc_kv"] = _collect_enc_kv(params, cfg, enc_out)
+        return logits, aux_acc, states
+    return logits, aux_acc
+
+
+def _collect_enc_kv(params, cfg, enc_out):
+    """Precompute per-decoder-layer cross-attn K/V from encoder output."""
+    def per_layer(pslice):
+        k, v = L.precompute_cross_kv(pslice["xattn"], cfg, enc_out)
+        return k, v
+
+    ks, vs = jax.vmap(per_layer)(params["stack"][0])
+    S_e = enc_out.shape[1]
+    return {"k": ks, "v": vs,
+            "pos": jnp.broadcast_to(jnp.arange(S_e, dtype=jnp.int32),
+                                    (cfg.n_layers, S_e)).copy()}
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int):
+    logits, aux, state = forward_train(params, cfg, batch, want_state=True,
+                                       max_len=max_len)
+    return logits, state
+
+
+# ======================================================================
+# Decode
+def decode_step(params, cfg: ModelConfig, state, tokens, *,
+                moe_mode: str = "dispatch", collect_info: bool = False):
+    """tokens: (B, 1) int32. Returns (logits (B,1,V), new_state[, infos])."""
+    x = L.embed(params["embed"], cfg, tokens)
+    pos = state["pos"]
+    period = cfg.pattern_period
+    infos = []
+
+    enc_kv_stacked = state.get("enc_kv")
+
+    # The stacked decode state rides in the scan CARRY and is updated
+    # in place with dynamic_update_index — passing it as xs/ys would make
+    # XLA double-buffer the entire KV stack (2.5x cache memory at
+    # decode_32k; caught by the dry-run).
+    def scan_body(carry, xs):
+        x, sstacks = carry
+        pslices, lidx = xs
+        new_stacks = list(sstacks)
+        inf_out = []
+        for i in range(period):
+            kind = cfg.block_pattern[i]
+            enc_kv = None
+            if parse_block(kind)[0] == "xattn" and enc_kv_stacked is not None:
+                li = lidx * period + i
+                enc_kv = (enc_kv_stacked["k"][li], enc_kv_stacked["v"][li],
+                          enc_kv_stacked["pos"][li])
+            sslice = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, lidx, 0,
+                                                       keepdims=False),
+                new_stacks[i])
+            x, st, info = _block_decode(pslices[i], cfg, kind, x, sslice,
+                                        pos, enc_kv=enc_kv, moe_mode=moe_mode)
+            new_stacks[i] = jax.tree.map(
+                lambda a, b: jax.lax.dynamic_update_index_in_dim(
+                    a, b, lidx, 0),
+                new_stacks[i], st)
+            if collect_info:
+                inf_out.append(info)
+        return (x, tuple(new_stacks)), \
+            (tuple(inf_out) if collect_info else ())
+
+    lidx = jnp.arange(cfg.n_periods, dtype=jnp.int32)
+    (x, new_stack), info_stack = jax.lax.scan(
+        scan_body, (x, tuple(state["stack"])),
+        (tuple(params["stack"]), lidx))
+
+    new_tail = []
+    for i, kind in enumerate(cfg.tail_kinds()):
+        x, st, info = _block_decode(params["tail"][i], cfg, kind, x,
+                                    state["tail"][i], pos, moe_mode=moe_mode)
+        new_tail.append(st)
+        if collect_info:
+            infos.append(info)
+
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = L.unembed(params, cfg, x)
+    new_state = dict(state, stack=list(new_stack), tail=new_tail,
+                     pos=pos + 1)
+    if collect_info:
+        return logits, new_state, (info_stack, infos)
+    return logits, new_state
+
+
+# ======================================================================
+# Per-layer param access (used by the offload engine / tracing, which run
+# an unscanned python loop over layers on small models).
+def layer_params(params, cfg: ModelConfig, layer_idx: int):
+    period = cfg.pattern_period
+    n_scanned = cfg.n_periods * period
+    if layer_idx < n_scanned:
+        pos = layer_idx % period
+        per = layer_idx // period
+        return jax.tree.map(lambda a: a[per], params["stack"][pos])
+    return params["tail"][layer_idx - n_scanned]
+
+
+def layer_kind(cfg: ModelConfig, layer_idx: int) -> str:
+    return cfg.block_pattern[layer_idx % cfg.pattern_period]

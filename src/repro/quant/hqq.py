@@ -1,0 +1,270 @@
+"""Half-Quadratic Quantization (HQQ, Badri & Shaji 2023) in JAX.
+
+Data-free group-wise affine quantization with half-quadratic (proximal)
+optimization of the zero-point under an l_p (p<1) residual norm — the
+scheme the paper uses for mixed MoE quantization (section 3.3 / Table 1):
+
+* experts at 2-3 bit, attention/shared layers at 4 bit;
+* group sizes per the paper: 4-bit g=64 (scale group 256),
+  3-bit g=64 (scale group 128), 2-bit g=16 (scale group 128);
+* quantized storage also carries per-group scale/zero, themselves
+  meta-quantized to 8-bit over ``scale_group``-sized groups — this is why
+  the paper's "2-bit" scheme really costs ~2.6-3 bits/param, which
+  :func:`bits_per_param` reports exactly.
+
+Layout: weights are grouped along the **contraction axis** K of a
+``(..., K, N)`` matrix — ``(..., G, g, N)`` with scale/zero ``(..., G, 1, N)``
+— matching the Pallas ``dequant_matmul`` kernel's expectations (scales vary
+along the K loop, MXU-friendly N stays dense).  Sub-byte codes pack along
+``g``: 4-bit 2/byte, 2-bit 4/byte, 3-bit 8 codes in 3 bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# paper's group-size table (section 4.2)
+PAPER_SCHEMES = {
+    16: dict(bits=16, group_size=None, scale_group=None),
+    8: dict(bits=8, group_size=64, scale_group=256),
+    4: dict(bits=4, group_size=64, scale_group=256),
+    3: dict(bits=3, group_size=64, scale_group=128),
+    2: dict(bits=2, group_size=16, scale_group=128),
+}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Packed quantized tensor. ``packed``: uint8 (..., G, g*bits//8, N)."""
+
+    packed: jnp.ndarray
+    scale: jnp.ndarray  # (..., G, 1, N) float16 (or meta-quantized uint8)
+    zero: jnp.ndarray
+    meta: Optional[dict]  # scale/zero meta-quant params or None
+    bits: int
+    group_size: int
+    shape: Tuple[int, ...]  # original (..., K, N)
+
+    def tree_flatten(self):
+        children = (self.packed, self.scale, self.zero, self.meta)
+        aux = (self.bits, self.group_size, self.shape)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scale, zero, meta = children
+        bits, group_size, shape = aux
+        return cls(packed, scale, zero, meta, bits, group_size, shape)
+
+
+# ----------------------------------------------------------------------
+# bit packing along axis -2 (the ``g`` axis of (..., G, g, N))
+def pack_codes(q: jnp.ndarray, bits: int) -> jnp.ndarray:
+    q = q.astype(jnp.uint8)
+    if bits == 8:
+        return q
+    if bits == 4:
+        return q[..., 0::2, :] | (q[..., 1::2, :] << 4)
+    if bits == 2:
+        return (q[..., 0::4, :] | (q[..., 1::4, :] << 2)
+                | (q[..., 2::4, :] << 4) | (q[..., 3::4, :] << 6))
+    if bits == 3:
+        g = q.shape[-2]
+        assert g % 8 == 0, "3-bit packing needs g % 8 == 0"
+        qi = q.astype(jnp.uint32)
+        octets = [qi[..., i::8, :] for i in range(8)]
+        word = sum(o << (3 * i) for i, o in enumerate(octets))  # 24 bits
+        b0 = (word & 0xFF).astype(jnp.uint8)
+        b1 = ((word >> 8) & 0xFF).astype(jnp.uint8)
+        b2 = ((word >> 16) & 0xFF).astype(jnp.uint8)
+        return jnp.concatenate([b0, b1, b2], axis=-2)
+    raise ValueError(f"unsupported bits={bits}")
+
+
+def unpack_codes(p: jnp.ndarray, bits: int, g: int) -> jnp.ndarray:
+    if bits == 8:
+        return p
+    if bits == 4:
+        lo = p & 0x0F
+        hi = p >> 4
+        return _interleave([lo, hi], g)
+    if bits == 2:
+        parts = [(p >> (2 * i)) & 0x03 for i in range(4)]
+        return _interleave(parts, g)
+    if bits == 3:
+        n8 = g // 8
+        b0 = p[..., :n8, :].astype(jnp.uint32)
+        b1 = p[..., n8: 2 * n8, :].astype(jnp.uint32)
+        b2 = p[..., 2 * n8:, :].astype(jnp.uint32)
+        word = b0 | (b1 << 8) | (b2 << 16)
+        parts = [((word >> (3 * i)) & 0x7).astype(jnp.uint8) for i in range(8)]
+        return _interleave(parts, g)
+    raise ValueError(f"unsupported bits={bits}")
+
+
+def _interleave(parts, g):
+    # parts[i] holds codes at positions i::len(parts) along axis -2;
+    # original index j = c*P + i, so (c, i) merges c-major.
+    stacked = jnp.stack(parts, axis=-2)  # (..., C, P, N)
+    sh = stacked.shape
+    return stacked.reshape(sh[:-3] + (g,) + sh[-1:])
+
+
+# ----------------------------------------------------------------------
+def _shrink_lp(x, beta, p):
+    """Generalized soft-threshold (HQQ proximal operator for l_p, p<1)."""
+    return jnp.sign(x) * jax.nn.relu(
+        jnp.abs(x) - (1.0 / beta) * jnp.power(jnp.abs(x) + 1e-8, p - 1.0))
+
+
+@partial(jax.jit, static_argnames=("bits", "group_size", "iters"))
+def _quantize_groups(wg, bits, group_size, iters, lp=0.7, beta0=10.0,
+                     kappa=1.01):
+    """wg: (..., G, g, N) f32 -> (codes u8, scale, zero) with HQQ zero opt."""
+    maxv = 2.0 ** bits - 1.0
+    wmin = wg.min(axis=-2, keepdims=True)
+    wmax = wg.max(axis=-2, keepdims=True)
+    scale = (wmax - wmin) / maxv
+    scale = jnp.where(scale <= 1e-8, 1.0, scale)
+    zero = -wmin / scale  # code-space zero point
+
+    def body(carry, i):
+        zero, beta = carry
+        q = jnp.clip(jnp.round(wg / scale + zero), 0, maxv)
+        wr = (q - zero) * scale
+        we = _shrink_lp(wg - wr, beta, lp)
+        zero = jnp.mean(q - (wg - we) / scale, axis=-2, keepdims=True)
+        return (zero, beta * kappa), ()
+
+    (zero, _), _ = jax.lax.scan(body, (zero, beta0), jnp.arange(iters))
+    q = jnp.clip(jnp.round(wg / scale + zero), 0, maxv).astype(jnp.uint8)
+    return q, scale.astype(jnp.float32), zero.astype(jnp.float32)
+
+
+def quantize(w: jnp.ndarray, bits: int, group_size: Optional[int] = None,
+             scale_group: Optional[int] = None, iters: int = 20) -> QTensor:
+    """Quantize ``w (..., K, N)`` grouped along K.  bits in {2,3,4,8}."""
+    scheme = PAPER_SCHEMES[bits]
+    group_size = group_size or scheme["group_size"]
+    scale_group = scale_group if scale_group is not None else scheme["scale_group"]
+    *lead, K, N = w.shape
+    assert K % group_size == 0, (K, group_size)
+    G = K // group_size
+    wg = w.reshape(*lead, G, group_size, N).astype(jnp.float32)
+    q, scale, zero = _quantize_groups(wg, bits, group_size, iters)
+    packed = pack_codes(q, bits)
+    meta = None
+    if scale_group:
+        scale, zero, meta = _meta_quantize(scale, zero, scale_group)
+    else:
+        scale = scale.astype(jnp.float16)
+        zero = zero.astype(jnp.float16)
+    return QTensor(packed, scale, zero, meta, bits, group_size, tuple(w.shape))
+
+
+def _meta_quantize(scale, zero, scale_group):
+    """8-bit meta-quantization of the per-group scale/zero (paper's
+    'scale group size'). Groups along the G axis."""
+    def mq(a):
+        *lead, G, one, N = a.shape
+        sg = min(scale_group, G)
+        while G % sg:
+            sg //= 2
+        M = G // sg
+        ar = a.reshape(*lead, M, sg, one, N)
+        mn = ar.min(axis=-3, keepdims=True)
+        mx = ar.max(axis=-3, keepdims=True)
+        s = jnp.where(mx - mn <= 1e-12, 1.0, (mx - mn) / 255.0)
+        q = jnp.clip(jnp.round((ar - mn) / s), 0, 255).astype(jnp.uint8)
+        return q, s.astype(jnp.float16), mn.astype(jnp.float16)
+
+    sq, ss, sm = mq(scale)
+    zq, zs, zm = mq(zero)
+    meta = {"s_scale": ss, "s_min": sm, "z_scale": zs, "z_min": zm}
+    return sq, zq, meta
+
+
+def _meta_dequantize(qt: QTensor):
+    if qt.meta is None:
+        return qt.scale.astype(jnp.float32), qt.zero.astype(jnp.float32)
+
+    def dq(q, s, m):
+        a = q.astype(jnp.float32) * s.astype(jnp.float32) + m.astype(jnp.float32)
+        sh = q.shape
+        return a.reshape(*sh[:-4], sh[-4] * sh[-3], sh[-2], sh[-1])
+
+    scale = dq(qt.scale, qt.meta["s_scale"], qt.meta["s_min"])
+    zero = dq(qt.zero, qt.meta["z_scale"], qt.meta["z_min"])
+    return scale, zero
+
+
+def dequantize(qt: QTensor, dtype=jnp.float32) -> jnp.ndarray:
+    scale, zero = _meta_dequantize(qt)
+    g = qt.group_size
+    q = unpack_codes(qt.packed, qt.bits, g).astype(jnp.float32)
+    w = (q - zero) * scale
+    return w.reshape(qt.shape).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# size accounting (Table 1)
+def nbytes(qt: QTensor) -> int:
+    n = qt.packed.size  # uint8
+    for a in (qt.scale, qt.zero):
+        n += a.size * a.dtype.itemsize
+    if qt.meta:
+        for a in qt.meta.values():
+            n += a.size * a.dtype.itemsize
+    return int(n)
+
+
+def bits_per_param(qt: QTensor) -> float:
+    return 8.0 * nbytes(qt) / math.prod(qt.shape)
+
+
+def quant_error(w, qt) -> dict:
+    wd = dequantize(qt)
+    err = jnp.abs(wd - w.astype(jnp.float32))
+    rel = jnp.linalg.norm(wd - w) / (jnp.linalg.norm(w) + 1e-9)
+    return {"max_abs": float(err.max()), "rel_fro": float(rel),
+            "bits_per_param": bits_per_param(qt)}
+
+
+# ----------------------------------------------------------------------
+# model-level helpers
+def dense_nbytes(tree, bytes_per_el=2) -> int:
+    return sum(l.size * bytes_per_el for l in jax.tree.leaves(tree))
+
+
+def quantize_tree(tree, bits, **kw):
+    """Quantize every >=2D leaf of a param subtree (K = axis -2)."""
+    def q(leaf):
+        if leaf.ndim >= 2 and leaf.shape[-2] % (kw.get("group_size")
+                                                or PAPER_SCHEMES[bits]["group_size"]) == 0:
+            return quantize(leaf, bits, **kw)
+        return leaf  # small/odd leaves stay fp16
+
+    return jax.tree.map(q, tree)
+
+
+def dequantize_tree(tree, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda l: dequantize(l, dtype) if isinstance(l, QTensor) else l,
+        tree, is_leaf=lambda l: isinstance(l, QTensor))
+
+
+def tree_nbytes(tree) -> int:
+    total = 0
+    for l in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(l, QTensor):
+            total += nbytes(l)
+        else:
+            total += l.size * 2  # fp16 storage for unquantized leaves
+    return total

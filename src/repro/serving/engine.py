@@ -1,0 +1,72 @@
+"""Batched serving engine (non-offloaded path).
+
+Serves a batch of requests with a shared jitted decode step and per-request
+completion tracking.  This is the "has enough accelerator memory" serving
+mode; the memory-constrained interactive mode is
+``core/offload_engine.OffloadEngine`` (the paper's contribution).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import EOS
+from repro.models import transformer as T
+from repro.serving.sampler import SamplerConfig, sample
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 32
+    completed: List[int] = field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig,
+                 sampler: Optional[SamplerConfig] = None):
+        self.params = params
+        self.cfg = cfg
+        self.sampler = sampler or SamplerConfig(kind="greedy")
+        self._decode = jax.jit(
+            lambda p, st, tk: T.decode_step(p, cfg, st, tk, moe_mode="gather"))
+
+    def serve_batch(self, requests: List[Request], seed: int = 0
+                    ) -> List[Request]:
+        """Left-pads prompts to a common length and decodes the batch."""
+        cfg = self.cfg
+        B = len(requests)
+        S = max(len(r.prompt) for r in requests)
+        max_new = max(r.max_new_tokens for r in requests)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, S - len(r.prompt):] = r.prompt  # left-pad with 0
+        pre_logits, state = jax.jit(
+            lambda p, b: T.prefill(p, cfg, b, S + max_new))(
+            self.params, {"tokens": jnp.asarray(toks)})
+        rng = jax.random.key(seed)
+        rng, sub = jax.random.split(rng)
+        tok = sample(sub, pre_logits[:, -1], self.sampler)
+        done = np.zeros(B, bool)
+        for i in range(B):
+            requests[i].completed.append(int(tok[i]))
+        for step in range(max_new - 1):
+            logits, state = self._decode(self.params, state, tok[:, None])
+            rng, sub = jax.random.split(rng)
+            tok = sample(sub, logits[:, -1], self.sampler)
+            for i, r in enumerate(requests):
+                if done[i] or len(r.completed) >= r.max_new_tokens:
+                    done[i] = True
+                    continue
+                t = int(tok[i])
+                r.completed.append(t)
+                if t == EOS:
+                    done[i] = True
+            if done.all():
+                break
+        return requests

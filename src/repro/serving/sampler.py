@@ -1,0 +1,27 @@
+"""Token samplers (the paper samples proportionally to the predicted
+probabilities — plain categorical; greedy and top-k provided too)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    kind: str = "categorical"  # greedy | categorical | topk
+    temperature: float = 1.0
+    top_k: int = 40
+
+
+def sample(rng, logits, cfg: SamplerConfig):
+    """logits: (B, V) -> tokens (B,) int32."""
+    if cfg.kind == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / jnp.maximum(cfg.temperature, 1e-6)
+    if cfg.kind == "topk":
+        vals, _ = jax.lax.top_k(logits, cfg.top_k)
+        thresh = vals[..., -1:]
+        logits = jnp.where(logits < thresh, -1e30, logits)
+    return jax.random.categorical(rng, logits).astype(jnp.int32)

@@ -1,0 +1,140 @@
+"""Training loop: loss, train_step (jit/pjit-able), and a simple driver.
+
+``train_step`` is the same function the multi-pod dry-run lowers at full
+scale, so the training path exercised here on CPU is exactly the one that
+would run on the production mesh.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.training import optimizer as O
+
+
+def loss_fn(params, cfg: ModelConfig, batch, remat: bool = False):
+    logits, aux = T.forward_train(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    loss = ce
+    metrics = {"ce": ce}
+    if cfg.moe is not None:
+        n_moe = max(1, cfg.moe_layer_count)
+        lb = aux["load_balance"] / n_moe
+        loss = loss + cfg.moe.aux_loss_weight * lb
+        metrics["load_balance"] = lb
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: O.OptimizerConfig,
+                    microbatches: int = 1, remat: bool = False):
+    """Standard step, with optional gradient accumulation over
+    ``microbatches`` (scan) + per-period activation checkpointing — the
+    memory knobs that let the 104B config fit 16GB/chip in the dry-run."""
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, cfg, batch, remat)
+        else:
+            def split(a):
+                B = a.shape[0]
+                assert B % microbatches == 0
+                return a.reshape(microbatches, B // microbatches, *a.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                g_acc, m_acc = carry
+                (_, m), g = grad_fn(params, cfg, mb, remat)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b, m_acc, m)
+                return (g_acc, m_acc), ()
+
+            g0 = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), params)
+            m0 = {"ce": jnp.zeros((), jnp.float32),
+                  "loss": jnp.zeros((), jnp.float32)}
+            if cfg.moe is not None:
+                m0["load_balance"] = jnp.zeros((), jnp.float32)
+            (grads, metrics), _ = jax.lax.scan(accum, (g0, m0), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / microbatches, metrics)
+        params, opt_state, opt_metrics = O.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, cfg, batch)
+        return metrics
+
+    return eval_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 200
+    log_every: int = 10
+    eval_every: int = 100
+    checkpoint_path: Optional[str] = None
+    checkpoint_every: int = 0
+
+
+def train(params, cfg: ModelConfig, opt_cfg: O.OptimizerConfig,
+          batches: Iterable[Dict[str, np.ndarray]],
+          tcfg: TrainerConfig,
+          eval_batches: Optional[Callable[[], Iterable]] = None,
+          log: Callable[[str], None] = print):
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    eval_fn = jax.jit(make_eval_step(cfg))
+    opt_state = O.init_opt_state(params)
+    history = []
+    t0 = time.time()
+    it = iter(batches)
+    for step in range(tcfg.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = time.time() - t0
+            history.append(m)
+            log(f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+                f"lr {m['lr']:.2e} gnorm {m['grad_norm']:.2f} "
+                f"({m['wall_s']:.0f}s)")
+        if (eval_batches is not None and tcfg.eval_every
+                and step and step % tcfg.eval_every == 0):
+            evs = [float(eval_fn(params, {k: jnp.asarray(v)
+                                          for k, v in b.items()})["ce"])
+                   for b in eval_batches()]
+            log(f"  eval ce {np.mean(evs):.4f}")
+        if (tcfg.checkpoint_path and tcfg.checkpoint_every
+                and step and step % tcfg.checkpoint_every == 0):
+            from repro.checkpoint.checkpointer import save
+            save(tcfg.checkpoint_path, params,
+                 meta={"step": step, "config": cfg.name})
+    return params, opt_state, history
+
+
+def eval_ce(params, cfg: ModelConfig, batches) -> float:
+    eval_fn = jax.jit(make_eval_step(cfg))
+    vals = [float(eval_fn(params, {k: jnp.asarray(v) for k, v in b.items()})["ce"])
+            for b in batches]
+    return float(np.mean(vals))

@@ -1,0 +1,46 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the single
+real CPU device; only launch/dryrun.py forces 512 placeholder devices
+(tests that need a mesh spawn dryrun in a subprocess)."""
+import jax
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import transformer as T
+
+
+@pytest.fixture(autouse=True)
+def _clear_jax_caches(request):
+    """Drop compiled executables after memory-heavy tests: the suite
+    compiles hundreds of XLA programs and the accumulated JIT mappings can
+    exhaust process memory late in the run (LLVM 'Cannot allocate
+    memory').  Function-scoped for the big-model smoke/parity modules,
+    which compile a full train step per architecture."""
+    yield
+    if request.module.__name__ in ("test_smoke_archs", "test_parity"):
+        jax.clear_caches()
+
+
+@pytest.fixture(scope="session")
+def tiny_moe_cfg():
+    return get_config("tiny-moe")
+
+
+@pytest.fixture(scope="session")
+def tiny_moe_params(tiny_moe_cfg):
+    return T.init_model(jax.random.key(0), tiny_moe_cfg)
+
+
+def make_batch(cfg, B=2, S=24, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)}
+    batch["labels"] = np.roll(batch["tokens"], -1, axis=1)
+    if cfg.is_encoder_decoder:
+        batch["audio_embeds"] = rng.standard_normal(
+            (B, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+    if cfg.num_image_tokens:
+        batch["image_embeds"] = rng.standard_normal(
+            (B, cfg.num_image_tokens, cfg.d_model)).astype(np.float32)
+    return {k: jnp.asarray(v) for k, v in batch.items()}

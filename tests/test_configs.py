@@ -1,0 +1,78 @@
+"""Config registry + parameter-count sanity for every assigned arch."""
+import math
+
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, SKIPS,
+                           config_for_shape, get_config, list_archs)
+from repro.models.transformer import count_params_analytic
+
+EXPECTED_PARAMS = {
+    "smollm-360m": (0.36e9, 0.10),
+    "recurrentgemma-9b": (9.0e9, 0.15),
+    "command-r-plus-104b": (104e9, 0.05),
+    "granite-moe-1b-a400m": (1.3e9, 0.10),
+    "stablelm-1.6b": (1.6e9, 0.10),
+    "whisper-medium": (0.76e9, 0.15),
+    "phi-3-vision-4.2b": (4.2e9, 0.15),
+    "mixtral-8x7b": (46.7e9, 0.02),
+    "xlstm-1.3b": (1.3e9, 0.15),
+    "qwen1.5-4b": (4.0e9, 0.10),
+}
+
+
+def test_all_assigned_archs_registered():
+    archs = list_archs(assigned_only=True)
+    assert len(archs) == 10
+    for a in archs:
+        cfg = get_config(a)
+        assert cfg.name == a
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_count_matches_published(arch):
+    cfg = get_config(arch)
+    n = count_params_analytic(cfg)
+    target, tol = EXPECTED_PARAMS[arch]
+    assert abs(n - target) / target <= tol, f"{arch}: {n/1e9:.2f}B"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_variants(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers <= max(2, cfg.pattern_period)
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    assert cfg.n_heads % cfg.n_kv_heads == 0 or cfg.n_kv_heads == 1
+    # same family structure preserved
+    assert cfg.block_pattern == get_config(arch).block_pattern
+
+
+def test_layer_kinds_cover_all_layers():
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        kinds = cfg.layer_kinds()
+        assert len(kinds) == cfg.n_layers
+        assert (cfg.n_periods * cfg.pattern_period + cfg.n_tail_layers
+                == cfg.n_layers)
+
+
+def test_long500k_policy():
+    # dense archs get the SWA variant; whisper is the single noted skip
+    cfg = config_for_shape("command-r-plus-104b", "long_500k")
+    assert cfg.sliding_window == 4096
+    assert cfg.block_pattern[0].startswith("swa")
+    cfg = config_for_shape("xlstm-1.3b", "long_500k")
+    assert cfg.sliding_window is None  # attention-free, native
+    assert ("whisper-medium", "long_500k") in SKIPS
+
+
+def test_mixtral_matches_paper_expert_fraction():
+    """Paper: 45.1B of 46.7B params (96.6%) live in the experts."""
+    cfg = get_config("mixtral-8x7b")
+    expert_params = (cfg.moe_layer_count * cfg.moe.num_experts
+                     * 3 * cfg.d_model * cfg.d_ff)
+    total = count_params_analytic(cfg)
+    assert abs(expert_params / 1e9 - 45.1) < 0.2
+    assert 0.955 < expert_params / total < 0.975

@@ -1,0 +1,49 @@
+"""Dry-run machinery smoke tests.
+
+The full 40x2 matrix runs via ``python -m repro.launch.dryrun --all``
+(results under experiments/dryrun); here we spawn a few representative
+combos as subprocesses (XLA device-count must be set before jax init, so
+it cannot run in-process with the other tests)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(arch, shape, multi_pod=False, tmp=None):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", str(tmp)]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin"}
+    return subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          timeout=560)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape,mp", [
+    ("granite-moe-1b-a400m", "train_4k", False),
+    ("smollm-360m", "decode_32k", True),
+])
+def test_dryrun_combo(arch, shape, mp, tmp_path):
+    r = _run(arch, shape, mp, tmp_path)
+    assert r.returncode == 0, r.stderr[-2000:]
+    mesh = "pod2x16x16" if mp else "pod16x16"
+    data = json.loads((tmp_path / f"{arch}__{shape}__{mesh}.json").read_text())
+    assert data["status"] == "ok"
+    assert data["roofline"]["flops_per_chip"] > 0
+    assert data["roofline"]["bottleneck"] in ("compute", "memory",
+                                              "collective")
+    assert data["memory_analysis"]["peak_estimate_bytes"] < 17.2e9  # 16 GiB
+
+
+def test_skip_marker(tmp_path):
+    r = _run("whisper-medium", "long_500k", False, tmp_path)
+    assert r.returncode == 0
+    data = json.loads(
+        (tmp_path / "whisper-medium__long_500k__pod16x16.json").read_text())
+    assert data["status"] == "skipped"

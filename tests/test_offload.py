@@ -1,0 +1,89 @@
+"""Offload engine invariants (the paper's system, end to end)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import OffloadSpec
+from repro.core.offload_engine import (OffloadEngine, generate_plain,
+                                       quantize_for_offload)
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny-moe")
+    params = T.init_model(jax.random.key(0), cfg)
+    prompt = np.array([[72, 101, 108, 108, 111, 32, 119]], np.int32)
+    return cfg, params, prompt
+
+
+def test_offloading_is_pure_scheduling(setup):
+    """Offloaded generation must be bit-identical to plain decode."""
+    cfg, params, prompt = setup
+    plain = generate_plain(params, cfg, prompt, 16)
+    eng = OffloadEngine(params, cfg)
+    off, stats = eng.generate(prompt, 16)
+    assert (plain == off).all()
+    assert stats.accesses == (16 - 1) * cfg.moe_layer_count * cfg.moe.top_k
+
+
+def test_bigger_cache_fewer_demand_loads(setup):
+    cfg, params, prompt = setup
+    loads = {}
+    for k in (1, 2, 4, 8):
+        spec = OffloadSpec(cache_size=k, num_speculative=0)
+        eng = OffloadEngine(params, cfg, spec)
+        _, stats = eng.generate(prompt, 24)
+        loads[k] = stats.demand_loads
+    assert loads[1] >= loads[2] >= loads[4] >= loads[8]
+    assert loads[8] <= cfg.moe_layer_count * cfg.moe.num_experts  # warmup only
+
+
+def test_speculation_reduces_blocking_loads(setup):
+    cfg, params, prompt = setup
+    base = OffloadEngine(params, cfg, OffloadSpec(cache_size=2,
+                                                  num_speculative=0))
+    spec = OffloadEngine(params, cfg, OffloadSpec(cache_size=2,
+                                                  num_speculative=2))
+    _, s0 = base.generate(prompt, 24)
+    _, s1 = spec.generate(prompt, 24)
+    assert s1.demand_loads < s0.demand_loads
+    assert s1.spec_hits > 0
+
+
+def test_quantized_sizes_and_quality(setup):
+    cfg, params, prompt = setup
+    spec = OffloadSpec(expert_bits=3, attn_bits=4)
+    qparams, sizes = quantize_for_offload(params, cfg, spec)
+    assert sizes["experts"] > 0 and sizes["attn"] > 0
+    # experts dominate and compress well below fp16
+    from repro.quant.hqq import dense_nbytes
+    fp16_experts = sum(
+        l.size * 2 for l in jax.tree.leaves(
+            [params["stack"][0]["moe"]["experts"]]))
+    assert sizes["experts"] < 0.30 * fp16_experts  # ~3.5/16 bits
+    # quantized model still generates (finite logits, valid tokens)
+    eng = OffloadEngine(params, cfg, spec, quantized=True)
+    out, stats = eng.generate(prompt, 8)
+    assert out.shape == (1, 8)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
+
+
+def test_throughput_estimates_ordering(setup):
+    """Cost model must reproduce Table 2's hardware ordering."""
+    cfg, params, prompt = setup
+    eng = OffloadEngine(params, cfg, quantized=True)
+    _, stats = eng.generate(prompt, 16)
+    mixtral = get_config("mixtral-8x7b")  # project to paper scale
+    from repro.core import cost_model as C
+    tps = {hw: C.tokens_per_second(mixtral, C.HARDWARE[hw],
+                                   stats.per_token(), 3)
+           for hw in ("t4", "3060", "3080m", "a100")}
+    assert tps["a100"] > tps["3080m"] > tps["3060"] > tps["t4"]
+    # naive offloading is strictly worse than the cached policy
+    naive = C.tokens_per_second(mixtral, C.HARDWARE["t4"],
+                                C.TokenStats(0, 0, 0, 0), 3, naive=True)
+    assert naive < tps["t4"]

@@ -1,0 +1,120 @@
+"""THE core correctness invariant: teacher-forced decode (token-by-token,
+with KV caches / recurrent states) must reproduce the parallel training
+forward exactly, for every architecture family.  This is what makes the
+offload engine a *pure scheduling* layer (paper section 3.2: speculative
+loading "does not change the final model predictions")."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import transformer as T
+
+from conftest import make_batch
+
+TOL = 2e-4  # f32 reduced configs; accumulated over layers
+
+
+def _nodrop(cfg):
+    if cfg.moe is None:
+        return cfg
+    moe = dataclasses.replace(cfg.moe,
+                              capacity_factor=float(cfg.moe.num_experts))
+    return cfg.replace(moe=moe)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_matches_train_forward(arch):
+    cfg = _nodrop(get_config(arch).reduced())
+    params = T.init_model(jax.random.key(7), cfg)
+    B, S = 2, 24
+    batch = make_batch(cfg, B, S, seed=7)
+    full, _ = T.forward_train(params, cfg, batch)
+
+    if cfg.num_image_tokens:
+        # VLM: image positions only exist via prefill — prefill the image
+        # span, then decode the text tail and compare that region
+        S0 = cfg.num_image_tokens
+        pb = dict(batch)
+        pb["tokens"] = batch["tokens"][:, :S0]
+        pre_logits, state = T.prefill(params, cfg, pb, max_len=S)
+        outs = [pre_logits[:, -1]] if False else []
+        for t in range(S0, S):
+            logits, state = T.decode_step(params, cfg, state,
+                                          batch["tokens"][:, t: t + 1],
+                                          moe_mode="gather")
+            outs.append(logits[:, 0])
+        dec = jnp.stack(outs, axis=1)
+        err = float(jnp.abs(dec - full[:, S0:]).max())
+        assert err < TOL, f"{arch}: vlm decode/train divergence {err}"
+        return
+
+    state = T.init_decode_state(cfg, B, max_len=S)
+    if cfg.is_encoder_decoder:
+        _, st = T.prefill(params, cfg, batch, max_len=S)
+        state["enc_kv"] = st["enc_kv"]
+    outs = []
+    for t in range(S):
+        logits, state = T.decode_step(params, cfg, state,
+                                      batch["tokens"][:, t: t + 1],
+                                      moe_mode="gather")
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.abs(dec - full).max())
+    assert err < TOL, f"{arch}: decode/train divergence {err}"
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "smollm-360m",
+                                  "recurrentgemma-9b", "xlstm-1.3b"])
+def test_prefill_then_decode_matches_full_decode(arch):
+    """prefill(prompt) + decode must equal decoding from scratch."""
+    cfg = _nodrop(get_config(arch).reduced())
+    params = T.init_model(jax.random.key(8), cfg)
+    B, S, S0 = 2, 20, 12
+    batch = make_batch(cfg, B, S, seed=8)
+    toks = batch["tokens"]
+    max_len = S
+
+    # path A: full scratch decode
+    state = T.init_decode_state(cfg, B, max_len=max_len)
+    if cfg.is_encoder_decoder:
+        _, st = T.prefill(params, cfg, batch, max_len=max_len)
+        state["enc_kv"] = st["enc_kv"]
+    la = None
+    for t in range(S):
+        la, state = T.decode_step(params, cfg, state, toks[:, t: t + 1],
+                                  moe_mode="gather")
+    # path B: prefill first S0 then decode the rest
+    pb = dict(batch)
+    pb["tokens"] = toks[:, :S0]
+    _, stateb = T.prefill(params, cfg, pb, max_len=max_len)
+    lb = None
+    for t in range(S0, S):
+        lb, stateb = T.decode_step(params, cfg, stateb, toks[:, t: t + 1],
+                                   moe_mode="gather")
+    err = float(jnp.abs(la - lb).max())
+    assert err < TOL, f"{arch}: prefill-path divergence {err}"
+
+
+def test_sliding_window_decode_rolls(tiny_moe_cfg):
+    """Rolling SWA cache: decoding past the window must stay exact."""
+    cfg = _nodrop(tiny_moe_cfg).replace(sliding_window=8)
+    params = T.init_model(jax.random.key(9), cfg)
+    B, S = 1, 32  # 4x window
+    batch = make_batch(cfg, B, S, seed=9)
+    full, _ = T.forward_train(params, cfg, batch)
+    state = T.init_decode_state(cfg, B, max_len=S)
+    outs = []
+    for t in range(S):
+        lg, state = T.decode_step(params, cfg, state,
+                                  batch["tokens"][:, t: t + 1],
+                                  moe_mode="gather")
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    # cache W == window == 8 << S: rolling buffer must still be exact
+    assert state["stack"][0]["kv"]["k"].shape[-3] == 8
+    err = float(jnp.abs(dec - full).max())
+    assert err < TOL, f"SWA rolling cache divergence {err}"

@@ -1,0 +1,69 @@
+"""HQQ quantization: packing exactness, error monotonicity, size accounting
+(paper Table 1 machinery)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import hqq
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_pack_unpack_roundtrip(bits):
+    g = hqq.PAPER_SCHEMES[bits]["group_size"]
+    q = jax.random.randint(jax.random.key(bits), (3, g, 16), 0,
+                           2 ** bits).astype(jnp.uint8)
+    rt = hqq.unpack_codes(hqq.pack_codes(q, bits), bits, g)
+    assert (np.asarray(rt) == np.asarray(q)).all()
+
+
+def test_error_monotone_in_bits():
+    w = jax.random.normal(jax.random.key(0), (512, 256)) * 0.04
+    errs = {b: hqq.quant_error(w, hqq.quantize(w, b))["rel_fro"]
+            for b in (2, 3, 4, 8)}
+    assert errs[8] < errs[4] < errs[3] < errs[2]
+    assert errs[8] < 0.02 and errs[2] < 0.5
+
+
+def test_hqq_beats_round_to_nearest():
+    """The half-quadratic zero-point optimization must reduce error vs
+    plain min-max affine quantization (iters=0)."""
+    w = jax.random.normal(jax.random.key(1), (512, 128)) * 0.05
+    # heavy-tailed outliers, where HQQ's lp<1 objective matters
+    w = w + (jax.random.uniform(jax.random.key(2), w.shape) < 0.01) * 0.5
+    e_hqq = hqq.quant_error(w, hqq.quantize(w, 3, iters=20))["rel_fro"]
+    e_rtn = hqq.quant_error(w, hqq.quantize(w, 3, iters=0))["rel_fro"]
+    assert e_hqq < e_rtn
+
+
+def test_bits_per_param_accounting():
+    w = jax.random.normal(jax.random.key(3), (1024, 256))
+    # paper's 2-bit scheme (g=16 + 8-bit meta scales) costs ~3 bits real
+    bpp2 = hqq.bits_per_param(hqq.quantize(w, 2))
+    assert 2.5 < bpp2 < 3.5
+    bpp4 = hqq.bits_per_param(hqq.quantize(w, 4))
+    assert 4.0 < bpp4 < 5.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(k_groups=st.integers(1, 8), n=st.integers(1, 64),
+       bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**16))
+def test_quantize_dequantize_shape_property(k_groups, n, bits, seed):
+    g = hqq.PAPER_SCHEMES[bits]["group_size"]
+    w = jax.random.normal(jax.random.key(seed), (k_groups * g, n)) * 0.1
+    qt = hqq.quantize(w, bits)
+    wd = hqq.dequantize(qt)
+    assert wd.shape == w.shape
+    # dequantized values stay within the observed range of each group
+    assert float(jnp.abs(wd).max()) <= float(jnp.abs(w).max()) * 1.5 + 1e-3
+
+
+def test_tree_quantization_sizes():
+    tree = {"a": jax.random.normal(jax.random.key(4), (128, 64)),
+            "b": jax.random.normal(jax.random.key(5), (7,))}
+    qtree = hqq.quantize_tree(tree, 4)
+    assert isinstance(qtree["a"], hqq.QTensor)
+    assert not isinstance(qtree["b"], hqq.QTensor)  # 1-D stays dense
+    nb = hqq.tree_nbytes(qtree)
+    assert nb < hqq.dense_nbytes(tree)

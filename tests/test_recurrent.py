@@ -1,0 +1,108 @@
+"""Recurrent mixers: chunkwise mLSTM == recurrent oracle; RG-LRU assoc-scan
+== step recurrence; sLSTM stability."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import recurrent as R
+
+CFG = get_config("xlstm-1.3b").reduced()
+RG = get_config("recurrentgemma-9b").reduced()
+
+
+@pytest.mark.parametrize("S,chunk", [(16, 4), (32, 8), (24, 24), (17, 8)])
+def test_mlstm_chunkwise_equals_recurrent(S, chunk):
+    B, H, dh = 2, 2, 16
+    ks = jax.random.split(jax.random.key(S * 31 + chunk), 5)
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[3], (B, S, H)) + 2.0)
+    li = jax.random.normal(ks[4], (B, S, H)) - 1.0
+    state = {"C": jnp.zeros((B, H, dh, dh)), "n": jnp.zeros((B, H, dh)),
+             "m": jnp.zeros((B, H))}
+    h_ref, st_ref = R.mlstm_recurrent_ref(q, k, v, lf, li, state)
+    h_chk, st_chk = R.mlstm_scan_core(q, k, v, lf, li, state, chunk)
+    np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_ref),
+                               rtol=2e-5, atol=2e-5)
+    for key in ("C", "n", "m"):
+        np.testing.assert_allclose(np.asarray(st_chk[key]),
+                                   np.asarray(st_ref[key]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(S=st.integers(2, 40), chunk=st.sampled_from([2, 4, 8, 16]),
+       seed=st.integers(0, 2**16))
+def test_mlstm_chunkwise_property(S, chunk, seed):
+    B, H, dh = 1, 1, 8
+    ks = jax.random.split(jax.random.key(seed), 5)
+    q, k, v = (jax.random.normal(ks[i], (B, S, H, dh)) for i in range(3))
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[3], (B, S, H)) * 3)
+    li = jax.random.normal(ks[4], (B, S, H)) * 2
+    state = {"C": jnp.zeros((B, H, dh, dh)), "n": jnp.zeros((B, H, dh)),
+             "m": jnp.zeros((B, H))}
+    h_ref, _ = R.mlstm_recurrent_ref(q, k, v, lf, li, state)
+    h_chk, _ = R.mlstm_scan_core(q, k, v, lf, li, state, chunk)
+    np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_ref),
+                               rtol=5e-5, atol=5e-5)
+
+
+def test_mlstm_extreme_gates_stable():
+    """log-space stabilizers: huge input gates must not overflow."""
+    B, S, H, dh = 1, 12, 1, 8
+    ks = jax.random.split(jax.random.key(0), 3)
+    q, k, v = (jax.random.normal(ks[i], (B, S, H, dh)) for i in range(3))
+    lf = jnp.full((B, S, H), -0.01)
+    li = jnp.full((B, S, H), 50.0)  # e^50 would overflow unstabilized f32
+    state = {"C": jnp.zeros((B, H, dh, dh)), "n": jnp.zeros((B, H, dh)),
+             "m": jnp.zeros((B, H))}
+    h, st = R.mlstm_scan_core(q, k, v, lf, li, state, 4)
+    assert bool(jnp.isfinite(h).all()) and bool(jnp.isfinite(st["C"]).all())
+
+
+def test_rglru_train_equals_decode_steps():
+    B, S = 2, 10
+    p = R.init_rglru(jax.random.key(1), RG)
+    x = jax.random.normal(jax.random.key(2), (B, S, RG.d_model),
+                          jnp.float32)
+    y_full, st_full = R.rglru_train(p, RG, x)
+    st = R.init_rglru_state(RG, B)
+    ys = []
+    for t in range(S):
+        y_t, st = R.rglru_decode(p, RG, x[:, t: t + 1], st)
+        ys.append(y_t[:, 0])
+    y_dec = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_full),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st["h"]), np.asarray(st_full["h"]),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_rglru_decay_bounds():
+    """RG-LRU a = exp(-c softplus(L) r) must lie in (0, 1)."""
+    p = R.init_rglru(jax.random.key(3), RG)
+    x = jax.random.normal(jax.random.key(4), (1, 8, RG.d_model)) * 3
+    xi = jnp.einsum("bsd,dr->bsr", x, p["w_x"])
+    a, b = R._rglru_gates(p, xi)
+    assert float(a.min()) > 0.0 and float(a.max()) < 1.0
+
+
+def test_slstm_train_equals_decode_steps():
+    B, S = 2, 8
+    p = R.init_slstm(jax.random.key(5), CFG)
+    x = jax.random.normal(jax.random.key(6), (B, S, CFG.d_model),
+                          jnp.float32)
+    y_full, st_full = R.slstm_train(p, CFG, x)
+    st = R.init_slstm_state(CFG, B)
+    ys = []
+    for t in range(S):
+        y_t, st = R.slstm_decode(p, CFG, x[:, t: t + 1], st)
+        ys.append(y_t[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_full), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st["h"]), np.asarray(st_full["h"]),
+                               rtol=2e-4, atol=2e-5)

@@ -1,0 +1,48 @@
+"""Speculative expert prediction (paper §3.2) behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import speculative as S
+
+
+def test_predict_shapes():
+    router = jax.random.normal(jax.random.key(0), (16, 8))
+    hidden = jax.random.normal(jax.random.key(1), (3, 16))
+    ids = S.predict_experts(router, hidden, 2)
+    assert ids.shape == (3, 2)
+    assert bool((ids >= 0).all()) and bool((ids < 8).all())
+
+
+def test_recall_perfect_when_hidden_identical():
+    """If hidden states don't change between layers, lookahead-1 recall at
+    n=top_k is exactly 1 (the inductive bias the paper exploits, in the
+    limit)."""
+    rng = np.random.default_rng(0)
+    T, L, D, E, K = 40, 5, 16, 8, 2
+    hiddens = np.repeat(rng.standard_normal((T, 1, D)), L, axis=1)
+    routers = np.repeat(rng.standard_normal((1, D, E)), L, axis=0)
+    logits = np.einsum("tld,lde->tle", hiddens, routers)
+    actual = np.argsort(-logits, -1)[..., :K]
+    rec = S.recall_curve(hiddens, routers, actual, lookaheads=[1],
+                         n_fetch_list=[K])
+    assert rec[(1, K)] == 1.0
+
+
+def test_recall_increases_with_n_fetch():
+    rng = np.random.default_rng(1)
+    T, L, D, E, K = 60, 6, 16, 8, 2
+    hiddens = rng.standard_normal((T, L, D))
+    # consecutive hidden states correlated (residual stream)
+    for l in range(1, L):
+        hiddens[:, l] = 0.9 * hiddens[:, l - 1] + 0.45 * hiddens[:, l]
+    routers = rng.standard_normal((L, D, E))
+    logits = np.einsum("tld,lde->tle", hiddens, routers)
+    actual = np.argsort(-logits, -1)[..., :K]
+    rec = S.recall_curve(hiddens, routers, actual, [1, 2],
+                         [1, 2, 4, 8])
+    vals = [rec[(1, n)] for n in (1, 2, 4, 8)]
+    assert all(b >= a for a, b in zip(vals, vals[1:]))
+    assert rec[(1, 8)] == 1.0  # fetching all experts is always perfect
+    # correlated stream: nearer lookahead predicts at least as well
+    assert rec[(1, 2)] >= rec[(2, 2)] - 0.05
