@@ -13,7 +13,7 @@ import sys
 import time
 
 SUITES = ["fig2_lru", "fig2_spec", "table1_quant", "table2_speed",
-          "kernels"]
+          "kernels", "serve"]
 
 
 def main() -> None:
@@ -25,12 +25,12 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (fig2_lru, fig2_spec, kernels_bench, table1_quant,
-                            table2_speed)
+    from benchmarks import (fig2_lru, fig2_spec, kernels_bench, serve_bench,
+                            table1_quant, table2_speed)
 
     mods = {"fig2_lru": fig2_lru, "fig2_spec": fig2_spec,
             "table1_quant": table1_quant, "table2_speed": table2_speed,
-            "kernels": kernels_bench}
+            "kernels": kernels_bench, "serve": serve_bench}
     print("name,us_per_call,derived")
     failures = []
     for name in SUITES:

@@ -149,6 +149,16 @@ class ModelConfig:
         return any(parse_block(k)[0] in ("attn", "swa", "xattn") for k in self.block_pattern)
 
     @property
+    def attention_only_stack(self) -> bool:
+        """All mixers are causal self-attention (attn/swa) — the stacks
+        that support left-pad isolation and slotted continuous batching
+        (recurrent mixers accumulate state over pads; enc-dec adds a
+        second KV family)."""
+        return (not self.is_encoder_decoder and
+                all(parse_block(k)[0] in ("attn", "swa")
+                    for k in self.block_pattern))
+
+    @property
     def is_encoder_decoder(self) -> bool:
         return self.encoder_layers > 0
 

@@ -73,6 +73,77 @@ class OffloadStats:
 
 
 # ----------------------------------------------------------------------
+def routing_from_info(cfg: ModelConfig, info_stack, want_hiddens=True):
+    """Unpack one ``decode_step(..., collect_info=True)`` result into
+    layer-major per-MoE-layer routing: returns (ids, hiddens) lists of
+    length n_moe_layers with arrays (B, top_k) int32 and (B, D)
+    (``hiddens`` is empty with ``want_hiddens=False``, skipping that
+    device->host transfer for callers that only count expert ids).
+
+    This is the single decode-side source of routing truth, shared by the
+    offload accounting below and by the serving scheduler's expert-overlap
+    policy (``serving/scheduler.ExpertOverlapPolicy``).
+    """
+    ids, hiddens = [], []
+    for per in range(cfg.n_periods):
+        for i in range(cfg.pattern_period):
+            info = info_stack[i]
+            if "route" not in info:
+                continue
+            ids.append(np.asarray(info["route"]["ids"][per]))
+            if want_hiddens:
+                hiddens.append(np.asarray(info["hidden_pre_moe"][per]))
+    return ids, hiddens
+
+
+class ExpertUsageTracker:
+    """Decayed per-MoE-layer histogram of expert activations.
+
+    Tracks which experts the in-flight batch has recently routed to —
+    i.e. what the offload engine's per-layer caches are hot with.  The
+    continuous-batching admission policy scores waiting requests by
+    overlap with this histogram (MoBiLE-style expert-aware grouping:
+    admitting requests that reuse the already-loaded experts amortises
+    expert-load cost on memory-constrained hardware).
+    """
+
+    def __init__(self, n_layers: int, n_experts: int, decay: float = 0.9):
+        self.n_layers = n_layers
+        self.n_experts = n_experts
+        self.decay = decay
+        self.counts = np.zeros((n_layers, n_experts), np.float64)
+
+    @classmethod
+    def for_config(cls, cfg: ModelConfig, decay: float = 0.9
+                   ) -> "ExpertUsageTracker":
+        n = len(moe_positions(cfg)) * cfg.n_periods
+        return cls(n, cfg.moe.num_experts, decay)
+
+    def update(self, ids_per_layer, rows=None) -> None:
+        """ids_per_layer: list of (B, K) int32 (from ``routing_from_info``);
+        ``rows`` restricts accounting to the active batch rows."""
+        self.counts *= self.decay
+        for l, ids in enumerate(ids_per_layer):
+            sel = ids if rows is None else ids[np.asarray(rows, np.int64)]
+            np.add.at(self.counts[l], np.asarray(sel).ravel(), 1.0)
+
+    def normalized(self) -> np.ndarray:
+        """(L, E) rows summing to 1 (uniform when a layer has no counts)."""
+        tot = self.counts.sum(-1, keepdims=True)
+        uniform = np.full_like(self.counts, 1.0 / self.n_experts)
+        return np.where(tot > 0, self.counts / np.maximum(tot, 1e-9), uniform)
+
+    def overlap(self, pred_ids_per_layer) -> float:
+        """Score a candidate's predicted expert set against the in-flight
+        histogram: expected fraction of its expert hits already hot."""
+        hist = self.normalized()
+        score = 0.0
+        for l, ids in enumerate(pred_ids_per_layer[: self.n_layers]):
+            score += float(hist[l, np.asarray(ids, np.int64).ravel()].sum())
+        return score / max(1, len(pred_ids_per_layer))
+
+
+# ----------------------------------------------------------------------
 def quantize_for_offload(params, cfg: ModelConfig, spec: OffloadSpec):
     """Mixed quantization of the model (paper §3.3): experts at
     ``spec.expert_bits``, attention/shared weights at ``spec.attn_bits``;
@@ -146,8 +217,10 @@ class OffloadEngine:
         self.expert_bytes = cost_model.expert_param_count(cfg) * eff_bits / 8.0
         self._step = jax.jit(lambda p, st, tk: T.decode_step(
             p, cfg, st, tk, moe_mode="gather", collect_info=True))
-        self._prefill = jax.jit(lambda p, b, ml: T.prefill(p, cfg, b, ml),
-                                static_argnums=2)
+        self._prefill = T.make_prefill(cfg)
+        # live routing histogram, readable by serving-admission policies
+        self.usage = ExpertUsageTracker(self.n_moe_layers,
+                                        cfg.moe.num_experts)
 
     # ------------------------------------------------------------------
     def generate(self, prompt: np.ndarray, max_new_tokens: int,
@@ -192,26 +265,16 @@ class OffloadEngine:
         """Feed one decode step's routing decisions to the cache machinery,
         layer by layer, staging lookahead predictions as the paper does
         (prefetch for l+j fires while 'computing' layer l)."""
-        cfg, spec = self.cfg, self.spec
-        pos = moe_positions(cfg)
-        l = 0
-        hiddens = {}
-        ids = {}
-        for per in range(cfg.n_periods):
-            for i in range(cfg.pattern_period):
-                info = info_stack[i]
-                if "route" not in info:
-                    continue
-                ids[l] = np.asarray(info["route"]["ids"][per][0])
-                hiddens[l] = np.asarray(info["hidden_pre_moe"][per][0])
-                l += 1
+        spec = self.spec
+        ids, hiddens = routing_from_info(self.cfg, info_stack)
+        self.usage.update(ids)
         for l in range(self.n_moe_layers):
-            caches[l].access(ids[l])
+            caches[l].access(ids[l][0])
             tgt = l + spec.lookahead
             if tgt < self.n_moe_layers:
                 pred = speculative.predict_experts(
                     jnp.asarray(self.routers[tgt]),
-                    jnp.asarray(hiddens[l])[None],
+                    jnp.asarray(hiddens[l][0])[None],
                     spec.num_speculative)
                 caches[tgt].stage(np.asarray(pred[0]))
 

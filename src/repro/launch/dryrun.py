@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, SKIPS,
                            config_for_shape)
 from repro.launch import roofline
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.models import transformer as T
 from repro.sharding import specs as SP
 from repro.training import optimizer as O
@@ -209,7 +209,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: Path
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.size
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered, meta = build_lowering(arch, shape_name, mesh)
         t_lower = time.time() - t0
         t0 = time.time()
@@ -218,7 +218,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: Path
 
     mem = compiled.memory_analysis()
     print(mem)
-    ca = compiled.cost_analysis() or {}
+    ca = roofline.xla_cost_analysis(compiled)
     print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
     cfg = config_for_shape(arch, shape_name)
     hlo = compiled.as_text()

@@ -17,7 +17,7 @@ import jax
 from repro.configs import INPUT_SHAPES, config_for_shape
 from repro.launch import roofline as R
 from repro.launch.dryrun import build_lowering
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 
 _META_RE = re.compile(r'op_name="([^"]+)"')
 
@@ -69,7 +69,7 @@ def main():
     args = ap.parse_args()
 
     mesh = make_production_mesh(multi_pod=args.multi_pod)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered, meta = build_lowering(args.arch, args.shape, mesh)
         compiled = lowered.compile()
     txt = compiled.as_text()

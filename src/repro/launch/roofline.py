@@ -64,6 +64,15 @@ _CONST_RE = re.compile(r"constant\((\d+)\)")
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as one dict across jax versions
+    (jax < 0.5 returns a per-program list of dicts)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _parse_shape(typestr: str) -> float:
     """Total bytes of a (possibly tuple) type string."""
     total = 0.0

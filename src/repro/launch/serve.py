@@ -1,13 +1,18 @@
-"""Serving launcher — both serving modes:
+"""Serving launcher — all three serving modes:
 
-* plain batched serving (fits-in-memory):
+* plain batched serving (fits-in-memory, static batch):
     PYTHONPATH=src python -m repro.launch.serve --arch tiny-moe \
         --prompt "def main(" --max-new 64
+* continuous batching with simulated request arrivals (DESIGN.md §4):
+    ... --continuous [--n-requests 16] [--arrival-rate 0.5] \
+        [--max-slots 4] [--slot-len 256] [--policy overlap]
 * the paper's offloaded interactive mode (MoE archs):
     ... --offload [--quantize] [--cache-size 4] [--num-speculative 2]
 
 With ``--offload`` the engine reports cache statistics and the cost-model
-tokens/s projection for the paper's four hardware targets.
+tokens/s projection for the paper's four hardware targets.  With
+``--continuous`` requests arrive over time (seeded Bernoulli per decode
+step), join the running batch as slots free up, and stream per-request.
 """
 from __future__ import annotations
 
@@ -35,6 +40,15 @@ def main():
     ap.add_argument("--quantize", action="store_true")
     ap.add_argument("--cache-size", type=int, default=None)
     ap.add_argument("--num-speculative", type=int, default=None)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching with simulated arrivals")
+    ap.add_argument("--n-requests", type=int, default=12)
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="P(new request arrives) per decode step")
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--slot-len", type=int, default=256)
+    ap.add_argument("--policy", default="overlap",
+                    choices=["fcfs", "overlap"])
     ap.add_argument("--sampler", default="greedy",
                     choices=["greedy", "categorical", "topk"])
     ap.add_argument("--seed", type=int, default=0)
@@ -83,9 +97,56 @@ def main():
                                        for k, v in eng.size_report.items()})
         return
 
+    if args.continuous:
+        from repro.serving.engine import ContinuousEngine
+        from repro.serving.scheduler import ExpertOverlapPolicy, fcfs_policy
+        policy = (ExpertOverlapPolicy(params, cfg)
+                  if args.policy == "overlap" and cfg.moe is not None
+                  else fcfs_policy)
+        try:
+            eng = ContinuousEngine(
+                params, cfg, max_slots=args.max_slots,
+                slot_len=args.slot_len,
+                sampler=SamplerConfig(kind=args.sampler), policy=policy,
+                seed=args.seed)
+        except ValueError as e:
+            raise SystemExit(f"--continuous: {e}")
+
+        def on_finish(req):
+            print(f"[step {eng.step_count:4d}] req {req.rid} finished "
+                  f"({req.finish_reason}, waited "
+                  f"{req.arrival}→{eng.step_count}): "
+                  f"{decode_bytes(np.array(req.generated))!r}")
+
+        arrivals = np.random.default_rng(args.seed)
+        submitted = 0
+        while submitted < args.n_requests or eng.sched.has_waiting \
+                or eng.sched.n_running:
+            idle = (not eng.sched.has_waiting) and eng.sched.n_running == 0
+            while (submitted < args.n_requests
+                   and (idle or arrivals.random() < args.arrival_rate)):
+                idle = False
+                e = enc[submitted % len(enc)]
+                try:
+                    eng.submit(e, args.max_new, on_finish=on_finish)
+                except ValueError as err:
+                    raise SystemExit(f"--continuous: {err} (raise "
+                                     f"--slot-len or lower --max-new)")
+                submitted += 1
+            eng.step()
+        s = eng.stats()
+        print(f"[continuous] {s['finished']} requests, {s['tokens']} tokens "
+              f"in {s['steps']} steps ({s['tokens_per_step']:.2f} tok/step, "
+              f"{args.max_slots} slots)")
+        return
+
     eng = ServeEngine(params, cfg, SamplerConfig(kind=args.sampler))
     reqs = [Request(e, args.max_new) for e in enc]
-    for p, r in zip(prompts, eng.serve_batch(reqs, seed=args.seed)):
+    try:
+        served = eng.serve_batch(reqs, seed=args.seed)
+    except ValueError as e:
+        raise SystemExit(f"serve_batch: {e}")
+    for p, r in zip(prompts, served):
         print(f"--- prompt {p!r}\ngen: {decode_bytes(np.array(r.completed))!r}")
 
 

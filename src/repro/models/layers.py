@@ -68,18 +68,19 @@ def rope_frequencies(cfg):
 
 
 def apply_rope(x, positions, cfg):
-    """x: (..., S, H, hd) or (..., 1, H, hd); positions: (S,) int32."""
+    """x: (..., S, H, hd) or (..., 1, H, hd); positions: (S,) int32 shared
+    across the batch, or (B, S) per-row (padded / continuous batching)."""
     inv, rot = rope_frequencies(cfg)
     if rot == 0:
         return x
-    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]  # (S, rot/2)
+    ang = positions.astype(jnp.float32)[..., :, None] * inv  # (..., S, rot/2)
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     xr, xp = x[..., :rot], x[..., rot:]
     xf = xr.astype(jnp.float32)
     x1, x2 = xf[..., 0::2], xf[..., 1::2]
-    # broadcast (S, rot/2) -> (..., S, 1, rot/2)
-    c = cos[:, None, :]
-    s = sin[:, None, :]
+    # broadcast (..., S, rot/2) -> (..., S, 1, rot/2) over the head axis
+    c = jnp.expand_dims(cos, -2)
+    s = jnp.expand_dims(sin, -2)
     y1 = x1 * c - x2 * s
     y2 = x2 * c + x1 * s
     yr = jnp.stack([y1, y2], axis=-1).reshape(xf.shape).astype(x.dtype)
@@ -145,14 +146,19 @@ def attention_core(q, k, v, qpos, kpos, *, causal, window, q_chunk=DEFAULT_Q_CHU
     """Exact query-chunked GQA attention.
 
     q: (B, Sq, H, hd)  k, v: (B, Skv, Hkv, hd)
-    qpos: (Sq,) int32 absolute positions; kpos: (Skv,) int32 (−1 = invalid
-    slot, used by the rolling decode cache).
+    qpos: (Sq,) or (B, Sq) int32 absolute positions; kpos: (Skv,) or
+    (B, Skv) int32 (−1 = invalid slot, used by the rolling decode cache
+    and by padded / per-slot batches where rows sit at different
+    positions).
     """
     B, Sq, H, hd = q.shape
     Hkv = k.shape[2]
     G = H // Hkv
     qg = q.reshape(B, Sq, Hkv, G, hd)
     scale = 1.0 / math.sqrt(hd)
+    qpos2 = jnp.broadcast_to(qpos, (B, Sq)) if qpos.ndim == 1 else qpos
+    kpos2 = (jnp.broadcast_to(kpos, (B, k.shape[1]))
+             if kpos.ndim == 1 else kpos)
 
     q_chunk = min(q_chunk, Sq)
     if Sq % q_chunk:
@@ -162,15 +168,15 @@ def attention_core(q, k, v, qpos, kpos, *, causal, window, q_chunk=DEFAULT_Q_CHU
     def chunk_fn(carry, idx):
         start = idx * q_chunk
         qc = jax.lax.dynamic_slice_in_dim(qg, start, q_chunk, axis=1)
-        qp = jax.lax.dynamic_slice_in_dim(qpos, start, q_chunk, axis=0)
+        qp = jax.lax.dynamic_slice_in_dim(qpos2, start, q_chunk, axis=1)
         s = jnp.einsum("bqhgk,bthk->bhgqt", qc.astype(jnp.float32),
                        k.astype(jnp.float32)) * scale
-        valid = (kpos >= 0)[None, :]
+        valid = (kpos2 >= 0)[:, None, :]  # (B, 1, Skv)
         if causal:
-            valid = valid & (kpos[None, :] <= qp[:, None])
+            valid = valid & (kpos2[:, None, :] <= qp[:, :, None])
         if window is not None:
-            valid = valid & ((qp[:, None] - kpos[None, :]) < window)
-        s = jnp.where(valid[None, None, None], s, NEG_INF)
+            valid = valid & ((qp[:, :, None] - kpos2[:, None, :]) < window)
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
         w = jax.nn.softmax(s, axis=-1).astype(q.dtype)  # bf16 AV matmul
         oc = jnp.einsum("bhgqt,bthk->bqhgk", w, v)
         return carry, oc
@@ -188,14 +194,23 @@ def attention_core(q, k, v, qpos, kpos, *, causal, window, q_chunk=DEFAULT_Q_CHU
 
 
 def attention_train(p, cfg, x, positions, *, window=None, causal=True,
-                    kv_override=None, kv_positions=None):
-    """Full-sequence attention.  ``kv_override`` (enc output) => cross-attn."""
+                    kv_override=None, kv_positions=None, pad_mask=None):
+    """Full-sequence attention.  ``kv_override`` (enc output) => cross-attn.
+
+    ``pad_mask``: optional (B, S) bool, True at real tokens.  Pad
+    positions are excluded from every key/value set (their own queries
+    produce garbage that callers must ignore — pad rows never feed real
+    outputs because their cache slots carry pos = −1).
+    """
     q = _project_q(p, cfg, x)
     if kv_override is None:
         k, v = _project_kv(p, cfg, x)
         q = apply_rope(q, positions, cfg)
         k = apply_rope(k, positions, cfg)
         kpos = positions
+        if pad_mask is not None:
+            kpos = jnp.where(pad_mask,
+                             jnp.broadcast_to(positions, pad_mask.shape), -1)
     else:
         k, v = _project_kv(p, cfg, kv_override)
         kpos = kv_positions
@@ -213,34 +228,52 @@ def attention_train(p, cfg, x, positions, *, window=None, causal=True,
 
 
 def init_attn_cache(cfg, batch, max_len, window=None):
+    # ``pos`` is per-row so batch rows can sit at different absolute
+    # positions (continuous batching / padded prefill); −1 = empty slot.
     W = min(max_len, window) if window else max_len
     dt = _pdt(cfg)
     return {
         "k": jnp.zeros((batch, W, cfg.n_kv_heads, cfg.head_dim), dt),
         "v": jnp.zeros((batch, W, cfg.n_kv_heads, cfg.head_dim), dt),
-        "pos": jnp.full((W,), -1, jnp.int32),
+        "pos": jnp.full((batch, W), -1, jnp.int32),
     }
 
 
 def attention_decode(p, cfg, x_t, cache, cur_pos, *, window=None):
     """One-token decode step with a (possibly rolling) KV cache.
 
-    x_t: (B, 1, D); cur_pos: scalar int32 absolute position.
+    x_t: (B, 1, D); cur_pos: scalar int32 absolute position (whole batch
+    in lock-step) or (B,) int32 per-row positions (continuous batching).
     """
+    B = x_t.shape[0]
     W = cache["k"].shape[1]
-    pos1 = jnp.reshape(cur_pos, (1,))
+    per_row = getattr(cur_pos, "ndim", 0) == 1
     q = _project_q(p, cfg, x_t)
     k_new, v_new = _project_kv(p, cfg, x_t)
-    q = apply_rope(q, pos1, cfg)
-    k_new = apply_rope(k_new, pos1, cfg)
-    slot = jnp.mod(cur_pos, W)
-    cache = {
-        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1),
-        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1),
-        "pos": jax.lax.dynamic_update_slice_in_dim(
-            cache["pos"], pos1.astype(jnp.int32), slot, axis=0),
-    }
-    o = attention_core(q, cache["k"], cache["v"], pos1, cache["pos"],
+    if per_row:
+        posq = cur_pos[:, None]  # (B, 1)
+        q = apply_rope(q, posq, cfg)
+        k_new = apply_rope(k_new, posq, cfg)
+        slot = jnp.mod(cur_pos, W)
+        bidx = jnp.arange(B)
+        cache = {
+            "k": cache["k"].at[bidx, slot].set(k_new[:, 0]),
+            "v": cache["v"].at[bidx, slot].set(v_new[:, 0]),
+            "pos": cache["pos"].at[bidx, slot].set(cur_pos.astype(jnp.int32)),
+        }
+    else:
+        posq = jnp.reshape(cur_pos, (1,))
+        q = apply_rope(q, posq, cfg)
+        k_new = apply_rope(k_new, posq, cfg)
+        slot = jnp.mod(cur_pos, W)
+        pos_col = jnp.broadcast_to(posq.astype(jnp.int32), (B, 1))
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1),
+            "pos": jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], pos_col, slot, axis=1),
+        }
+    o = attention_core(q, cache["k"], cache["v"], posq, cache["pos"],
                        causal=True, window=window, q_chunk=1)
     return _out_proj(p, cfg, o), cache
 

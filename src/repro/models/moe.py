@@ -78,12 +78,20 @@ def capacity(spec, T: int) -> int:
     return max(4, c + (-c) % 4)
 
 
-def aux_losses(spec, probs, ids):
-    """Switch-style load-balance loss + router z-ish entropy diagnostics."""
+def aux_losses(spec, probs, ids, token_mask=None):
+    """Switch-style load-balance loss + router z-ish entropy diagnostics.
+    ``token_mask`` excludes pad tokens (their garbage routing must not
+    bias the balance statistics)."""
     T, E = probs.shape
     assign = jax.nn.one_hot(ids, E, dtype=jnp.float32).sum(1)  # (T, E)
-    frac_tokens = assign.mean(0) / spec.top_k
-    frac_probs = probs.mean(0)
+    if token_mask is None:
+        frac_tokens = assign.mean(0) / spec.top_k
+        frac_probs = probs.mean(0)
+    else:
+        w = token_mask.astype(jnp.float32)[:, None]  # (T, 1)
+        n = jnp.maximum(w.sum(), 1.0)
+        frac_tokens = (assign * w).sum(0) / (n * spec.top_k)
+        frac_probs = (probs * w).sum(0) / n
     lb = E * jnp.sum(frac_tokens * frac_probs)
     return {"load_balance": lb}
 
@@ -104,8 +112,13 @@ def moe_apply_dense(p, cfg, x2d):
     return y.astype(x2d.dtype), aux_losses(spec, probs, ids)
 
 
-def moe_apply_dispatch(p, cfg, x2d, capacity_factor=None, groups=None):
+def moe_apply_dispatch(p, cfg, x2d, capacity_factor=None, groups=None,
+                       token_mask=None):
     """Scatter-dispatch production path (train / large-batch decode).
+
+    ``token_mask`` (T,) bool marks real tokens: masked-out tokens (pads in
+    a left-padded serving batch) are dropped from dispatch so they never
+    consume expert capacity that belongs to real tokens.
 
     ``groups`` splits tokens into independently-dispatched groups with
     per-group capacity (the real-EP-system semantics: capacity is per
@@ -128,12 +141,18 @@ def moe_apply_dispatch(p, cfg, x2d, capacity_factor=None, groups=None):
     E, K = spec.num_experts, spec.top_k
     C = capacity(spec, Tg)
 
-    def dispatch_one(xg, idsg, wg):
+    def dispatch_one(xg, idsg, wg, mg):
         flat_e = idsg.reshape(Tg * K)  # slot -> expert, token-major priority
+        flat_valid = jnp.repeat(mg, K)
+        # masked tokens point at a virtual expert E so they never claim a
+        # capacity position of a real expert
+        flat_e = jnp.where(flat_valid, flat_e, E)
         onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (Tg*K, E)
         pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
-        pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
-        keep = pos < C
+        pos = jnp.take_along_axis(pos_in_e, jnp.minimum(flat_e, E - 1)[:, None],
+                                  axis=1)[:, 0]
+        keep = (pos < C) & flat_valid
+        flat_e = jnp.minimum(flat_e, E - 1)  # safe index; dropped via keep
         pos_c = jnp.where(keep, pos, C)  # C = out-of-range -> dropped
         tok_idx = jnp.repeat(jnp.arange(Tg), K)
         xslot = jnp.take(xg, tok_idx, axis=0)  # (Tg*K, D)
@@ -162,7 +181,9 @@ def moe_apply_dispatch(p, cfg, x2d, capacity_factor=None, groups=None):
     xg = x2d.reshape(g, Tg, D)
     idsg = ids.reshape(g, Tg, K)
     wg = w.reshape(g, Tg, K)
-    buf, meta = jax.vmap(dispatch_one)(xg, idsg, wg)  # (g, E, C, D)
+    mg = (jnp.ones((g, Tg), bool) if token_mask is None
+          else token_mask.reshape(g, Tg).astype(bool))
+    buf, meta = jax.vmap(dispatch_one)(xg, idsg, wg, mg)  # (g, E, C, D)
     # group axis -> batch shards (local dispatch); expert axis -> "model"
     # (expert parallel) when divisible.  The expert FFN below is the only
     # cross-group op -> all-to-all.
@@ -171,7 +192,7 @@ def moe_apply_dispatch(p, cfg, x2d, capacity_factor=None, groups=None):
     ybuf = constrain(ybuf, ("pod", "data"), "model", None, None)
     y = jax.vmap(combine_one)(ybuf, meta, wg)  # (g, Tg, D)
     return (y.reshape(T, D).astype(x2d.dtype),
-            aux_losses(spec, probs, ids))
+            aux_losses(spec, probs, ids, token_mask=token_mask))
 
 
 def moe_apply_gather(p, cfg, x2d, experts_override=None):

@@ -108,8 +108,13 @@ def count_params_analytic(cfg: ModelConfig) -> int:
 # Block apply (train / prefill)
 def _block_train(p, cfg: ModelConfig, kind: str, x, positions, *,
                  want_state: bool, enc_out=None, enc_pos=None,
-                 batch_for_state: int = 0, max_len: int = 0):
-    """Returns (x, state_or_None, aux)."""
+                 batch_for_state: int = 0, max_len: int = 0, pad_mask=None):
+    """Returns (x, state_or_None, aux).
+
+    ``positions`` is (S,) shared or (B, S) per-row; ``pad_mask`` (B, S)
+    marks real tokens (attention mixers only — recurrent mixers process
+    pads and callers must not left-pad recurrent archs).
+    """
     mixer, ffn = parse_block(kind)
     aux = {}
     state = {}
@@ -129,19 +134,23 @@ def _block_train(p, cfg: ModelConfig, kind: str, x, positions, *,
         if want_state and causal:
             # compute and also fill the rolling KV cache for decode
             y, kvstate = _attn_train_with_cache(p["attn"], cfg, h, positions,
-                                                window, max_len)
+                                                window, max_len,
+                                                pad_mask=pad_mask)
             state["kv"] = kvstate
         else:
             y = L.attention_train(p["attn"], cfg, h, positions,
-                                  window=window, causal=causal)
+                                  window=window, causal=causal,
+                                  pad_mask=pad_mask)
     elif mixer == "xattn":
         window = None
         if want_state:
             y, kvstate = _attn_train_with_cache(p["attn"], cfg, h, positions,
-                                                None, max_len)
+                                                None, max_len,
+                                                pad_mask=pad_mask)
             state["kv"] = kvstate
         else:
-            y = L.attention_train(p["attn"], cfg, h, positions, window=None)
+            y = L.attention_train(p["attn"], cfg, h, positions, window=None,
+                                  pad_mask=pad_mask)
     elif mixer == "rglru":
         y, st = R.rglru_train(p["rglru"], cfg, h)
         if want_state:
@@ -166,27 +175,44 @@ def _block_train(p, cfg: ModelConfig, kind: str, x, positions, *,
             x = x + seq_shard(L.apply_mlp(p["mlp"], cfg, h2))
         else:
             B, S, D = h2.shape
-            y2d, moe_aux = M.moe_apply_dispatch(p["moe"], cfg, h2.reshape(B * S, D))
+            y2d, moe_aux = M.moe_apply_dispatch(
+                p["moe"], cfg, h2.reshape(B * S, D),
+                token_mask=(pad_mask.reshape(B * S)
+                            if pad_mask is not None else None))
             aux.update(moe_aux)
             x = x + seq_shard(y2d.reshape(B, S, D))
     return x, (state if want_state else None), aux
 
 
-def _attn_train_with_cache(p, cfg, h, positions, window, max_len):
-    """Full-seq attention that also produces the decode KV cache."""
+def _attn_train_with_cache(p, cfg, h, positions, window, max_len,
+                           pad_mask=None):
+    """Full-seq attention that also produces the decode KV cache.
+
+    With a left-pad ``pad_mask``, pad entries carry pos = −1 and land in
+    ring slots that real entries never occupy (real logical positions of
+    a row with R real tokens fill slots 0..min(R,W)−1; pads only appear
+    in the written tail when R < W, so the pads' slot mod(−1, W) = W−1
+    is free).  Decode then naturally skips them via the pos >= 0 mask.
+    """
     B, S, _ = h.shape
-    y = L.attention_train(p, cfg, h, positions, window=window)
+    y = L.attention_train(p, cfg, h, positions, window=window,
+                          pad_mask=pad_mask)
     cache = L.init_attn_cache(cfg, B, max_len, window)
     W = cache["k"].shape[1]
     k_full, v_full = L._project_kv(p, cfg, h)
     k_full = L.apply_rope(k_full, positions, cfg)
     n = min(W, S)
-    tail_pos = positions[-n:]
-    slots = jnp.mod(tail_pos, W)
+    pos2 = jnp.broadcast_to(positions, (B, S)) if positions.ndim == 1 \
+        else positions
+    tail_pos = pos2[:, -n:]
+    if pad_mask is not None:
+        tail_pos = jnp.where(pad_mask[:, -n:], tail_pos, -1)
+    slots = jnp.mod(tail_pos, W)  # (B, n); pos −1 (pads) -> slot W−1
+    bidx = jnp.arange(B)[:, None]
     cache = {
-        "k": cache["k"].at[:, slots].set(k_full[:, -n:]),
-        "v": cache["v"].at[:, slots].set(v_full[:, -n:]),
-        "pos": cache["pos"].at[slots].set(tail_pos.astype(jnp.int32)),
+        "k": cache["k"].at[bidx, slots].set(k_full[:, -n:]),
+        "v": cache["v"].at[bidx, slots].set(v_full[:, -n:]),
+        "pos": cache["pos"].at[bidx, slots].set(tail_pos.astype(jnp.int32)),
     }
     return y, cache
 
@@ -311,7 +337,16 @@ def forward_train(params, cfg: ModelConfig, batch, *, want_state=False,
     x = _embed_inputs(params, cfg, batch)
     B, S, _ = x.shape
     x = constrain(x, ("pod", "data"), None, None)
-    positions = jnp.arange(S, dtype=jnp.int32)
+    pad_mask = batch.get("pad_mask")  # (B, S) bool, True at real tokens
+    if pad_mask is not None:
+        # left-pad layout: real token j of a row gets logical position
+        # j − n_pads (so rows start at position 0 regardless of padding);
+        # pads get −1 and are masked out of every attention.
+        pad_mask = pad_mask.astype(bool)
+        positions = jnp.cumsum(pad_mask.astype(jnp.int32), axis=1) - 1
+        positions = jnp.where(pad_mask, positions, -1)
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)
     max_len = max_len or S
 
     enc_out = enc_pos = None
@@ -334,7 +369,8 @@ def forward_train(params, cfg: ModelConfig, batch, *, want_state=False,
             kind = cfg.block_pattern[i]
             x, st, aux = _block_train(pslices[i], cfg, kind, x, positions,
                                       want_state=want_state, enc_out=enc_out,
-                                      enc_pos=enc_pos, max_len=max_len)
+                                      enc_pos=enc_pos, max_len=max_len,
+                                      pad_mask=pad_mask)
             if "load_balance" in aux:
                 aux_lb = aux_lb + aux["load_balance"]
             st_out.append(st if st is not None else {})
@@ -354,7 +390,8 @@ def forward_train(params, cfg: ModelConfig, batch, *, want_state=False,
     for i, kind in enumerate(cfg.tail_kinds()):
         x, st, aux = _block_train(params["tail"][i], cfg, kind, x, positions,
                                   want_state=want_state, enc_out=enc_out,
-                                  enc_pos=enc_pos, max_len=max_len)
+                                  enc_pos=enc_pos, max_len=max_len,
+                                  pad_mask=pad_mask)
         if "load_balance" in aux:
             lb = lb + aux["load_balance"]
         if want_state:
@@ -364,7 +401,10 @@ def forward_train(params, cfg: ModelConfig, batch, *, want_state=False,
     logits = L.unembed(params, cfg, x)
     aux_acc["load_balance"] = lb
     if want_state:
-        states["pos"] = jnp.asarray(S, jnp.int32)
+        # per-row decode positions when rows have different true lengths
+        states["pos"] = (pad_mask.sum(1).astype(jnp.int32)
+                         if pad_mask is not None
+                         else jnp.asarray(S, jnp.int32))
         if cfg.is_encoder_decoder:
             states["enc_kv"] = _collect_enc_kv(params, cfg, enc_out)
         return logits, aux_acc, states
@@ -385,16 +425,27 @@ def _collect_enc_kv(params, cfg, enc_out):
 
 
 def prefill(params, cfg: ModelConfig, batch, max_len: int):
+    """``batch`` may carry ``pad_mask`` (B, S) for left-padded prompts of
+    unequal length; the returned state then has per-row ``pos`` (B,)."""
     logits, aux, state = forward_train(params, cfg, batch, want_state=True,
                                        max_len=max_len)
     return logits, state
+
+
+def make_prefill(cfg: ModelConfig):
+    """Jitted prefill with static ``max_len`` — the one wrapper every
+    engine shares: ``fn(params, batch, max_len)``."""
+    return jax.jit(lambda p, b, ml: prefill(p, cfg, b, ml), static_argnums=2)
 
 
 # ======================================================================
 # Decode
 def decode_step(params, cfg: ModelConfig, state, tokens, *,
                 moe_mode: str = "dispatch", collect_info: bool = False):
-    """tokens: (B, 1) int32. Returns (logits (B,1,V), new_state[, infos])."""
+    """tokens: (B, 1) int32. Returns (logits (B,1,V), new_state[, infos]).
+
+    ``state["pos"]`` may be a scalar (whole batch in lock-step) or (B,)
+    per-row positions (continuous batching / padded prefill)."""
     x = L.embed(params["embed"], cfg, tokens)
     pos = state["pos"]
     period = cfg.pattern_period

@@ -1,23 +1,41 @@
-"""Batched serving engine (non-offloaded path).
+"""Serving engines (non-offloaded accelerator path).
 
-Serves a batch of requests with a shared jitted decode step and per-request
-completion tracking.  This is the "has enough accelerator memory" serving
-mode; the memory-constrained interactive mode is
+Two modes:
+
+* :class:`ServeEngine` — static batch: left-pads a fixed request set to a
+  common length and decodes until every request finishes.  Pad positions
+  are excluded from attention and from MoE dispatch capacity via the
+  ``pad_mask`` threaded through ``T.prefill`` (DESIGN.md §2).
+* :class:`ContinuousEngine` — continuous batching: requests join and
+  leave a *running* batch (DESIGN.md §4).  A slotted KV state
+  (``serving/kv_manager``) holds ``max_slots`` sequences at independent
+  positions; each admitted request is prefilled alone (B=1, exact
+  length — bitwise identical to the ``generate_plain`` oracle, since MoE
+  dispatch capacity depends on batch composition) and scattered into a
+  free slot; finished requests release their slot the same step.  Which
+  waiting request joins next is the scheduler policy's call — the
+  expert-overlap policy groups requests that reuse the experts the
+  in-flight batch keeps hot (``serving/scheduler``).
+
+The memory-constrained interactive mode is
 ``core/offload_engine.OffloadEngine`` (the paper's contribution).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, parse_block
+from repro.core.offload_engine import (ExpertUsageTracker, routing_from_info)
 from repro.data.pipeline import EOS
 from repro.models import transformer as T
+from repro.serving.kv_manager import KVSlotManager
 from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.scheduler import GenRequest, Scheduler
 
 
 @dataclass
@@ -35,20 +53,37 @@ class ServeEngine:
         self.sampler = sampler or SamplerConfig(kind="greedy")
         self._decode = jax.jit(
             lambda p, st, tk: T.decode_step(p, cfg, st, tk, moe_mode="gather"))
+        # one persistent jit so repeated serve_batch calls with the same
+        # shapes reuse the compiled prefill instead of retracing
+        self._prefill = T.make_prefill(cfg)
 
     def serve_batch(self, requests: List[Request], seed: int = 0
                     ) -> List[Request]:
-        """Left-pads prompts to a common length and decodes the batch."""
+        """Left-pads prompts to a common length and decodes the batch.
+        The pad mask keeps shorter prompts from attending to (or spending
+        MoE capacity on) pad positions; each row decodes from its own
+        true length (per-row ``pos``).  Pad isolation only exists for
+        causal-attention stacks — recurrent mixers fold pad tokens into
+        their state, so unequal-length batches are rejected there."""
         cfg = self.cfg
         B = len(requests)
         S = max(len(r.prompt) for r in requests)
+        needs_pad = any(len(r.prompt) != S for r in requests)
+        if needs_pad and not cfg.attention_only_stack:
+            raise ValueError(
+                f"left-padded serve_batch needs a causal-attention stack; "
+                f"{cfg.name}'s mixers accumulate state over pad tokens "
+                f"— batch equal-length prompts for this arch")
         max_new = max(r.max_new_tokens for r in requests)
         toks = np.zeros((B, S), np.int32)
+        mask = np.zeros((B, S), bool)
         for i, r in enumerate(requests):
             toks[i, S - len(r.prompt):] = r.prompt  # left-pad with 0
-        pre_logits, state = jax.jit(
-            lambda p, b: T.prefill(p, cfg, b, S + max_new))(
-            self.params, {"tokens": jnp.asarray(toks)})
+            mask[i, S - len(r.prompt):] = True
+        batch = {"tokens": jnp.asarray(toks)}
+        if needs_pad:
+            batch["pad_mask"] = jnp.asarray(mask)
+        pre_logits, state = self._prefill(self.params, batch, S + max_new)
         rng = jax.random.key(seed)
         rng, sub = jax.random.split(rng)
         tok = sample(sub, pre_logits[:, -1], self.sampler)
@@ -70,3 +105,174 @@ class ServeEngine:
             if done.all():
                 break
         return requests
+
+
+# ======================================================================
+class ContinuousEngine:
+    """Continuous-batching decode loop over a slotted KV state.
+
+    Per step: (1) admit policy-selected waiting requests into free slots
+    (B=1 prefill, scattered into the slot), (2) one batched
+    ``decode_step`` over all slots with per-row positions, (3) sample,
+    stream tokens to request callbacks, evict finished requests.  Free
+    slots decode a dummy token whose output is ignored and whose state is
+    fully overwritten at the next admission.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, max_slots: int = 4,
+                 slot_len: int = 256, sampler: Optional[SamplerConfig] = None,
+                 policy=None, eos_id: Optional[int] = EOS,
+                 prefill_bucket: int = 1, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.sampler = sampler or SamplerConfig(kind="greedy")
+        self.max_slots = max_slots
+        self.slot_len = slot_len
+        self.eos_id = eos_id
+        self.prefill_bucket = max(1, prefill_bucket)
+        self.kv = KVSlotManager(cfg, max_slots, slot_len)
+        self.sched = Scheduler(max_slots, policy)
+        # routing collection costs per-step host transfers; only pay for
+        # it when the admission policy actually reads the usage histogram
+        self._collect = (cfg.moe is not None
+                         and getattr(policy, "needs_usage", False))
+        self.usage = (ExpertUsageTracker.for_config(cfg)
+                      if self._collect else None)
+        # greedy decode folds argmax into the jitted step and feeds the
+        # token straight back on-device — the host only sees (B,) ints
+        self._greedy = self.sampler.kind == "greedy"
+        if self._collect:
+            def _step_fn(p, st, tk):
+                logits, st, infos = T.decode_step(
+                    p, cfg, st, tk, moe_mode="gather", collect_info=True)
+                nxt = (jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                       if self._greedy else logits[:, -1])
+                return nxt, st, infos
+        else:
+            def _step_fn(p, st, tk):
+                logits, st = T.decode_step(p, cfg, st, tk, moe_mode="gather")
+                nxt = (jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                       if self._greedy else logits[:, -1])
+                return nxt, st
+        self._decode = jax.jit(_step_fn, donate_argnums=1)
+        self._prefill = T.make_prefill(cfg)
+        # all-SWA stacks roll their window inside the slot, so a request
+        # may decode past slot_len; anything else must fit the slot ring
+        mixers = {parse_block(k)[0] for k in cfg.block_pattern}
+        self._unbounded = (mixers == {"swa"} and cfg.sliding_window
+                           and slot_len >= cfg.sliding_window)
+        self.tokens = np.zeros((max_slots, 1), np.int32)
+        self.step_count = 0
+        self._rng = jax.random.key(seed)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int = 32, on_token=None,
+               on_finish=None) -> GenRequest:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert prompt.size > 0, "empty prompt"
+        if not self._unbounded and prompt.size + max_new_tokens > self.slot_len:
+            raise ValueError(
+                f"request needs {prompt.size + max_new_tokens} KV positions "
+                f"> slot_len={self.slot_len}")
+        req = GenRequest(prompt=prompt, max_new_tokens=max_new_tokens,
+                         arrival=self.step_count, on_token=on_token,
+                         on_finish=on_finish)
+        return self.sched.submit(req)
+
+    # ------------------------------------------------------------------
+    def _sample(self, logits) -> np.ndarray:
+        """logits (B, V) -> (B,) int32 next tokens."""
+        if self.sampler.kind == "greedy":
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._rng, sub = jax.random.split(self._rng)
+        return np.asarray(sample(sub, logits, self.sampler))
+
+    def _admit(self) -> List[GenRequest]:
+        finished = []
+        while self.kv.n_free and self.sched.has_waiting:
+            req = self.sched.pop_next(self.usage)
+            slot = self.kv.allocate(req.rid)
+            req.slot = slot
+            S = len(req.prompt)
+            Sb = -(-S // self.prefill_bucket) * self.prefill_bucket
+            batch = {"tokens": np.zeros((1, Sb), np.int32)}
+            batch["tokens"][0, Sb - S:] = req.prompt
+            if Sb != S:
+                m = np.zeros((1, Sb), bool)
+                m[0, Sb - S:] = True
+                batch["pad_mask"] = m
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            logits, small = self._prefill(self.params, batch, self.slot_len)
+            self.kv.write_prefill(small, slot)
+            first = int(self._sample(logits[:, -1])[0])
+            req.emit(first)
+            if self._done(req, first):
+                self.kv.release(slot)
+                self.sched.evict(req, self._reason(req, first))
+                finished.append(req)
+            else:
+                self.tokens[slot, 0] = first
+        return finished
+
+    def _done(self, req: GenRequest, tok: int) -> bool:
+        return (len(req.generated) >= req.max_new_tokens
+                or (self.eos_id is not None and tok == self.eos_id))
+
+    def _reason(self, req: GenRequest, tok: int) -> str:
+        return ("eos" if self.eos_id is not None and tok == self.eos_id
+                else "length")
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[GenRequest]:
+        """Admit + one decode step.  Returns requests finished this step."""
+        finished = self._admit()
+        if not self.sched.n_running:
+            return finished
+        out = self._decode(self.params, self.kv.state,
+                           jnp.asarray(self.tokens))
+        if self._collect:
+            nxt_dev, state, (info_stack, _) = out
+            ids, _ = routing_from_info(self.cfg, info_stack,
+                                       want_hiddens=False)
+            rows = sorted(r.slot for r in self.sched.running)
+            self.usage.update(ids, rows=rows)
+        else:
+            nxt_dev, state = out
+        self.kv.state = state
+        if self._greedy:
+            nxt = np.asarray(nxt_dev)
+        else:
+            self._rng, sub = jax.random.split(self._rng)
+            nxt = np.asarray(sample(sub, nxt_dev, self.sampler))
+        for req in list(self.sched.running):
+            t = int(nxt[req.slot])
+            req.emit(t)
+            if self._done(req, t):
+                self.kv.release(req.slot)
+                self.sched.evict(req, self._reason(req, t))
+                finished.append(req)
+            else:
+                self.tokens[req.slot, 0] = t
+        self.step_count += 1
+        self.sched.check_invariants()
+        return finished
+
+    def run(self, max_steps: Optional[int] = None) -> List[GenRequest]:
+        """Drive until every submitted request finishes; returns them in
+        completion order."""
+        steps = 0
+        while self.sched.has_waiting or self.sched.n_running:
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return self.sched.finished
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        toks = sum(len(r.generated) for r in self.sched.finished)
+        return {"steps": self.step_count, "joins": self.sched.joins,
+                "evictions": self.sched.evictions,
+                "finished": len(self.sched.finished),
+                "tokens": toks,
+                "tokens_per_step": toks / max(1, self.step_count)}

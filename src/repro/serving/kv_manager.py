@@ -1,0 +1,101 @@
+"""Slotted KV-cache manager for continuous batching.
+
+One preallocated decode state (``models/transformer.init_decode_state``
+layout) holds ``n_slots`` independent sequences; the batch axis is the
+slot table.  Requests of different lengths join and leave a *running*
+batch by writing a freshly prefilled B=1 state into a free slot
+(block-table indirection at slot granularity — every slot owns a
+fixed-width ring of ``slot_len`` KV positions) and releasing it when the
+request finishes.  Nothing else in the batch is touched: per-row ``pos``
+(see ``decode_step``) keeps every slot at its own absolute position, and
+ring slots carrying pos = −1 are invisible to attention, so a freed slot
+needs no scrubbing before reuse — the next prefill overwrites every leaf
+of that row.
+
+The manager is deliberately model-agnostic: it treats the decode state as
+an opaque pytree and only assumes the seed layout's axis convention
+(``stack`` leaves carry batch at axis 1 under the scan axis, ``tail``
+leaves at axis 0, ``pos`` is per-row).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+def _write_slot(big, small, i):
+    """Scatter a B=1 decode state into row ``i`` of the slotted state."""
+    out = dict(big)
+    out["stack"] = [jax.tree.map(lambda b, s: b.at[:, i].set(s[:, 0]), bs, ss)
+                    for bs, ss in zip(big["stack"], small["stack"])]
+    out["tail"] = [jax.tree.map(lambda b, s: b.at[i].set(s[0]), bt, st)
+                   for bt, st in zip(big["tail"], small["tail"])]
+    # small pos is a scalar (unpadded prefill) or (1,) (padded prefill)
+    out["pos"] = big["pos"].at[i].set(
+        jnp.reshape(jnp.asarray(small["pos"]), (-1,))[0].astype(jnp.int32))
+    return out
+
+
+class KVSlotManager:
+    """Free-list over the batch axis of one preallocated decode state."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, slot_len: int):
+        if not cfg.attention_only_stack:
+            raise ValueError(
+                f"continuous batching supports causal-attention stacks; "
+                f"{cfg.name} has mixers that keep cross-token state "
+                f"(or an encoder) that slot writes cannot isolate")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.slot_len = slot_len
+        state = T.init_decode_state(cfg, n_slots, slot_len)
+        state["pos"] = jnp.zeros((n_slots,), jnp.int32)  # per-row positions
+        self.state = state
+        self._free: List[int] = list(range(n_slots))
+        self._owner: List[Optional[object]] = [None] * n_slots
+        # donate the big state: the write is a pure row update, so XLA
+        # reuses the (KV-stack-sized) buffers instead of copying them
+        self._write = jax.jit(_write_slot, donate_argnums=0)
+
+    # ------------------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def owner(self, slot: int):
+        return self._owner[slot]
+
+    def allocate(self, owner=None) -> int:
+        slot = self._free.pop(0)
+        self._owner[slot] = owner
+        return slot
+
+    def release(self, slot: int) -> None:
+        assert self._owner[slot] is not None, f"slot {slot} already free"
+        self._owner[slot] = None
+        self._free.append(slot)
+        self._free.sort()
+
+    # ------------------------------------------------------------------
+    def write_prefill(self, small_state, slot: int) -> None:
+        """Install a prefilled B=1 state (``max_len == slot_len``) into
+        ``slot``; the request's remaining KV budget is slot_len − pos."""
+        kshape = small_state["stack"][0]["kv"]["k"].shape \
+            if small_state["stack"] and "kv" in small_state["stack"][0] else None
+        if kshape is not None and kshape[2] != self.state["stack"][0]["kv"]["k"].shape[2]:
+            raise ValueError(
+                f"prefill state width {kshape[2]} != slot width "
+                f"{self.state['stack'][0]['kv']['k'].shape[2]}; prefill with "
+                f"max_len == slot_len")
+        self.state = self._write(self.state, small_state, slot)
+
+    def remaining(self, slot: int) -> int:
+        """Decode steps this slot can still take before its ring would
+        overwrite live context (conservative for SWA stacks, where the
+        window may be narrower than the slot)."""
+        return self.slot_len - int(self.state["pos"][slot])

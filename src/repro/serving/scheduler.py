@@ -1,0 +1,156 @@
+"""Continuous-batching scheduler: admission queue + expert-aware policy.
+
+Requests are submitted at any time; the engine asks the scheduler for the
+next request whenever a KV slot frees up.  Which waiting request joins is
+a *policy* decision:
+
+* :func:`fcfs_policy` — arrival order (the throughput-neutral default);
+* :class:`ExpertOverlapPolicy` — MoE-offload-aware: scores each waiting
+  request by the predicted overlap between the experts it is about to
+  route to and the experts the in-flight batch is already keeping hot
+  (``core/offload_engine.ExpertUsageTracker``).  Predictions reuse the
+  paper's speculative gate trick (``core/speculative.predict_experts``):
+  apply each MoE layer's router to the request's last prompt-token
+  embedding — the same "an early hidden state is a decent estimate"
+  argument, pushed back to layer 0.  Grouping co-routed requests
+  amortises expert-load cost on memory-constrained hardware (MoBiLE).
+
+The scheduler never touches model state; slot bookkeeping lives in
+``serving/kv_manager`` and the decode loop in ``serving/engine``.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import speculative
+from repro.core.offload_engine import ExpertUsageTracker
+from repro.core.trace import stacked_routers
+
+_rid_counter = itertools.count()
+
+WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
+
+
+@dataclass(eq=False)  # identity equality: the prompt array is unhashable
+class GenRequest:
+    """One generation request's full lifecycle record."""
+
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 32
+    rid: int = field(default_factory=lambda: next(_rid_counter))
+    arrival: int = 0  # engine step at which the request became visible
+    on_token: Optional[Callable[["GenRequest", int], None]] = None
+    on_finish: Optional[Callable[["GenRequest"], None]] = None
+    state: str = WAITING
+    slot: Optional[int] = None
+    generated: List[int] = field(default_factory=list)
+    finish_reason: Optional[str] = None  # "length" | "eos"
+    # filled lazily by ExpertOverlapPolicy (per-layer predicted expert ids)
+    _pred_experts: Optional[List[np.ndarray]] = None
+
+    def emit(self, tok: int) -> None:
+        self.generated.append(tok)
+        if self.on_token is not None:
+            self.on_token(self, tok)
+
+    def finish(self, reason: str) -> None:
+        self.state = FINISHED
+        self.finish_reason = reason
+        if self.on_finish is not None:
+            self.on_finish(self)
+
+
+# ----------------------------------------------------------------------
+# Admission policies: (waiting, usage) -> index into waiting
+def fcfs_policy(waiting: Sequence[GenRequest],
+                usage: Optional[ExpertUsageTracker]) -> int:
+    return 0
+
+
+class ExpertOverlapPolicy:
+    """Pick the waiting request whose predicted experts overlap most with
+    the in-flight batch's hot experts; FCFS tie-break keeps it fair."""
+
+    needs_usage = True  # makes the engine collect per-step routing info
+
+    def __init__(self, params, cfg: ModelConfig, n_spec: int = 2):
+        assert cfg.moe is not None, "expert-overlap policy needs an MoE arch"
+        self.cfg = cfg
+        self.n_spec = min(n_spec, cfg.moe.num_experts)
+        self.routers = stacked_routers(params, cfg)  # (L_moe, D, E)
+        self.embed = np.asarray(params["embed"]["table"])
+
+    def _predict(self, req: GenRequest) -> List[np.ndarray]:
+        if req._pred_experts is None:
+            h = jnp.asarray(self.embed[int(req.prompt[-1])])[None]  # (1, D)
+            req._pred_experts = [
+                np.asarray(speculative.predict_experts(
+                    jnp.asarray(self.routers[l]), h, self.n_spec)[0])
+                for l in range(self.routers.shape[0])]
+        return req._pred_experts
+
+    def __call__(self, waiting: Sequence[GenRequest],
+                 usage: Optional[ExpertUsageTracker]) -> int:
+        if usage is None or len(waiting) == 1:
+            return 0
+        scores = [usage.overlap(self._predict(r)) for r in waiting]
+        return int(np.argmax(scores))  # argmax takes first on ties = FCFS
+
+
+# ----------------------------------------------------------------------
+class Scheduler:
+    """Admission queue with pluggable policy and invariant accounting."""
+
+    def __init__(self, max_slots: int,
+                 policy: Optional[Callable] = None):
+        self.max_slots = max_slots
+        self.policy = policy or fcfs_policy
+        self.waiting: List[GenRequest] = []
+        self.running: List[GenRequest] = []
+        self.finished: List[GenRequest] = []
+        self.joins = 0
+        self.evictions = 0
+
+    def submit(self, req: GenRequest) -> GenRequest:
+        assert req.state == WAITING
+        self.waiting.append(req)
+        return req
+
+    @property
+    def has_waiting(self) -> bool:
+        return bool(self.waiting)
+
+    @property
+    def n_running(self) -> int:
+        return len(self.running)
+
+    def pop_next(self, usage: Optional[ExpertUsageTracker] = None
+                 ) -> GenRequest:
+        """Policy-selected waiting request, moved to running."""
+        assert self.waiting and len(self.running) < self.max_slots
+        idx = self.policy(self.waiting, usage)
+        req = self.waiting.pop(idx)
+        req.state = RUNNING
+        self.running.append(req)
+        self.joins += 1
+        return req
+
+    def evict(self, req: GenRequest, reason: str) -> None:
+        self.running.remove(req)
+        req.finish(reason)
+        self.finished.append(req)
+        self.evictions += 1
+
+    def check_invariants(self) -> None:
+        assert len(self.running) <= self.max_slots
+        slots = [r.slot for r in self.running]
+        assert len(slots) == len(set(slots)), "duplicate slot assignment"
+        assert all(r.state == RUNNING for r in self.running)
+        assert all(r.state == WAITING for r in self.waiting)
+        assert all(r.state == FINISHED for r in self.finished)

@@ -33,7 +33,15 @@ def _current_mesh():
     try:
         m = jax.sharding.get_abstract_mesh()
     except Exception:
-        return None
+        m = None
+    if m is None or not getattr(m, "axis_names", ()):
+        # jax < 0.5: the ambient mesh is the legacy global-mesh context
+        # entered via ``with mesh:`` (launch/mesh.mesh_context)
+        try:
+            from jax.interpreters import pxla
+            m = pxla.thread_resources.env.physical_mesh
+        except Exception:
+            return None
     if m is None or not getattr(m, "axis_names", ()):
         return None
     return m
@@ -254,6 +262,9 @@ def decode_state_spec_tree(cfg, mesh, global_batch: int, state_shapes):
                 and len(core) >= 4:
             return kv_spec(shape, lead)
         if name == "pos":
+            if len(core) == 2:  # per-row (B, W) ring position map: shard
+                # batch with the sibling k/v, replicate the ring axis
+                return P(*(lead + (b_ax, None)))
             return P(*([None] * len(shape)))
         # recurrent states: shard trailing feature axis on model if divisible
         if name in ("h", "c", "n", "m", "C", "conv", "rec"):
