@@ -80,4 +80,11 @@ def run(quick=False):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", "--quick", action="store_true",
+                    dest="smoke",
+                    help="reduced shapes, jnp reference paths only "
+                         "(CI smoke)")
+    run(quick=ap.parse_args().smoke)

@@ -4,7 +4,12 @@ protocol ("sample proportionally to the predicted probabilities").
 
     PYTHONPATH=src python examples/serve_batch.py
 """
+import sys
+from pathlib import Path
+
 import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # benchmarks.*
 
 from benchmarks.common import get_trained_tiny_moe
 from repro.data.pipeline import decode_bytes, encode_text

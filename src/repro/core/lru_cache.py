@@ -20,7 +20,16 @@ paper's):
   experts").
 
 Everything is fixed-shape jnp so the whole decode loop jits; ``PyLRU`` is
-the plain-python oracle used by the property tests.
+the plain-python oracle (property-tested equal in
+``tests/test_lru.py::test_jnp_matches_python_oracle``, including the
+eviction sequence).
+
+Since the packed-offloading refactor (DESIGN.md §6) this state machine is
+not only accounting: :func:`access_plan` / :func:`stage_plan` additionally
+report *which pool slot* serves each routed expert and *where its packed
+bytes come from* (LRU pool / staging buffer / host store), and
+``core/expert_pool`` uses those plans to perform the actual buffer swaps.
+The slot index into ``cache_ids`` IS the device-pool slot index.
 """
 from __future__ import annotations
 
@@ -71,20 +80,41 @@ def set_layer(state: LayerCacheState, l: int, new: LayerCacheState):
 
 
 # ----------------------------------------------------------------------
-def access(state: LayerCacheState, needed: jnp.ndarray
-           ) -> Tuple[LayerCacheState, AccessStats]:
-    """Serve ``needed`` (K,) int32 expert ids for one layer, one token."""
+class AccessPlan(NamedTuple):
+    """Per-needed-expert slot decisions of one :func:`access_plan` call.
+
+    ``slots[j]`` is the pool slot (index into ``cache_ids``) that serves
+    ``needed[j]`` after the access; ``in_cache``/``in_spec`` say where its
+    packed bytes already reside (mutually exclusive; neither = demand load
+    from the host store); ``spec_slot`` is the staging-buffer index when
+    ``in_spec``; ``evicted`` is the expert id displaced by the insertion
+    (-1 when the slot was empty or the access was a cache hit).
+    """
+
+    slots: jnp.ndarray      # (K,) int32
+    in_cache: jnp.ndarray   # (K,) bool
+    in_spec: jnp.ndarray    # (K,) bool
+    spec_slot: jnp.ndarray  # (K,) int32
+    evicted: jnp.ndarray    # (K,) int32
+
+
+def access_plan(state: LayerCacheState, needed: jnp.ndarray
+                ) -> Tuple[LayerCacheState, AccessStats, AccessPlan]:
+    """Serve ``needed`` (K,) int32 expert ids for one layer, one token,
+    additionally returning the slot plan that lets a buffer pool perform
+    the swaps this state transition implies (DESIGN.md §6)."""
     K = needed.shape[0]
     ids, clock_arr, spec, clk = state
     hits = jnp.zeros((), jnp.int32)
     spec_hits = jnp.zeros((), jnp.int32)
     demand = jnp.zeros((), jnp.int32)
+    slots, in_cache_a, in_spec_a, spec_slot_a, evicted_a = [], [], [], [], []
     for j in range(K):  # K is static (top_k)
         e = needed[j]
         in_cache = jnp.any(ids == e)
-        in_spec = jnp.any(spec == e)
+        in_spec = jnp.logical_and(~in_cache, jnp.any(spec == e))
         hit = in_cache
-        s_hit = jnp.logical_and(~in_cache, in_spec)
+        s_hit = in_spec
         miss = jnp.logical_and(~in_cache, ~in_spec)
         hits += hit.astype(jnp.int32)
         spec_hits += s_hit.astype(jnp.int32)
@@ -93,12 +123,80 @@ def access(state: LayerCacheState, needed: jnp.ndarray
         hit_slot = jnp.argmax(ids == e)
         lru_slot = jnp.argmin(clock_arr)
         slot = jnp.where(in_cache, hit_slot, lru_slot)
+        evicted = jnp.where(in_cache, jnp.asarray(-1, jnp.int32),
+                            ids[slot]).astype(jnp.int32)
         clk = clk + 1
         ids = ids.at[slot].set(e)
         clock_arr = clock_arr.at[slot].set(clk)
+        slots.append(slot.astype(jnp.int32))
+        in_cache_a.append(in_cache)
+        in_spec_a.append(in_spec)
+        spec_slot_a.append(jnp.argmax(spec == e).astype(jnp.int32))
+        evicted_a.append(evicted)
     new = LayerCacheState(ids, clock_arr, spec, clk)
-    return new, AccessStats(hits, spec_hits, demand,
-                            jnp.zeros((), jnp.int32))
+    stats = AccessStats(hits, spec_hits, demand, jnp.zeros((), jnp.int32))
+    plan = AccessPlan(jnp.stack(slots), jnp.stack(in_cache_a),
+                      jnp.stack(in_spec_a), jnp.stack(spec_slot_a),
+                      jnp.stack(evicted_a))
+    return new, stats, plan
+
+
+def access(state: LayerCacheState, needed: jnp.ndarray
+           ) -> Tuple[LayerCacheState, AccessStats]:
+    """Serve ``needed`` (K,) int32 expert ids for one layer, one token."""
+    new, stats, _ = access_plan(state, needed)
+    return new, stats
+
+
+class StagePlan(NamedTuple):
+    """Per-prediction sourcing decisions of one :func:`stage_plan` call.
+
+    ``loads[j]`` charges one overlappable host->device transfer (the
+    prediction is resident nowhere); otherwise the staging buffer is
+    filled from the LRU pool slot ``cache_slot[j]`` (when ``in_cache``)
+    or from the *previous* staging buffer ``old_spec_slot[j]`` (when
+    ``in_old_spec``) — device-local copies that cost no host traffic.
+    """
+
+    loads: jnp.ndarray         # (n_spec,) bool
+    in_cache: jnp.ndarray      # (n_spec,) bool
+    cache_slot: jnp.ndarray    # (n_spec,) int32
+    in_old_spec: jnp.ndarray   # (n_spec,) bool
+    old_spec_slot: jnp.ndarray  # (n_spec,) int32
+
+
+def stage_plan(state: LayerCacheState, predicted: jnp.ndarray
+               ) -> Tuple[LayerCacheState, StagePlan, jnp.ndarray]:
+    """Stage ``predicted`` (n_spec,) experts into this layer's buffers,
+    returning the transfer/copy plan alongside the transfer count."""
+    ids, clock_arr, old_spec, clk = state
+    n = predicted.shape[0]
+    transfers = jnp.zeros((), jnp.int32)
+    loads, in_cache_a, cache_slot_a, in_old_a, old_slot_a = [], [], [], [], []
+    for j in range(n):
+        e = predicted[j]
+        in_cache = jnp.any(ids == e)
+        in_old = jnp.any(old_spec == e)
+        resident = in_cache | in_old
+        if j > 0:
+            resident = resident | jnp.any(predicted[:j] == e)
+        load = jnp.logical_and(e >= 0, ~resident)
+        transfers += load.astype(jnp.int32)
+        loads.append(load)
+        in_cache_a.append(in_cache)
+        cache_slot_a.append(jnp.argmax(ids == e).astype(jnp.int32))
+        in_old_a.append(jnp.logical_and(~in_cache, in_old))
+        old_slot_a.append(jnp.argmax(old_spec == e).astype(jnp.int32))
+    new = LayerCacheState(ids, clock_arr, predicted.astype(jnp.int32), clk)
+    if n == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        plan = StagePlan(z.astype(bool), z.astype(bool), z,
+                         z.astype(bool), z)
+    else:
+        plan = StagePlan(jnp.stack(loads), jnp.stack(in_cache_a),
+                         jnp.stack(cache_slot_a), jnp.stack(in_old_a),
+                         jnp.stack(old_slot_a))
+    return new, plan, transfers
 
 
 def stage_speculative(state: LayerCacheState, predicted: jnp.ndarray
@@ -108,28 +206,22 @@ def stage_speculative(state: LayerCacheState, predicted: jnp.ndarray
     Returns (new_state, n_transfers) — transfers are charged only for
     predictions not already resident (cache or previous staging).
     """
-    ids, clock_arr, old_spec, clk = state
-    n = predicted.shape[0]
-    transfers = jnp.zeros((), jnp.int32)
-    for j in range(n):
-        e = predicted[j]
-        resident = jnp.any(ids == e) | jnp.any(old_spec == e)
-        if j > 0:
-            resident = resident | jnp.any(predicted[:j] == e)
-        transfers += jnp.logical_and(e >= 0, ~resident).astype(jnp.int32)
-    new = LayerCacheState(ids, clock_arr, predicted.astype(jnp.int32), clk)
+    new, _, transfers = stage_plan(state, predicted)
     return new, transfers
 
 
 # ----------------------------------------------------------------------
 class PyLRU:
-    """Plain-python oracle with identical semantics (property-tested)."""
+    """Plain-python oracle with identical semantics (property-tested
+    against :func:`access_plan`/:func:`stage_plan`, down to the eviction
+    sequence — ``tests/test_lru.py::test_jnp_matches_python_oracle``)."""
 
     def __init__(self, k: int, n_spec: int):
         self.k = k
         self.cache: List[int] = []   # most-recent-last
         self.spec: List[int] = []
         self.hits = self.spec_hits = self.demand = self.spec_loads = 0
+        self.evictions: List[int] = []  # expert ids displaced, in order
 
     def access(self, needed: Sequence[int]):
         for e in needed:
@@ -144,7 +236,7 @@ class PyLRU:
                     self.demand += 1
                 if self.k > 0:  # k=0 = caching disabled (ablation)
                     while len(self.cache) >= self.k:
-                        self.cache.pop(0)
+                        self.evictions.append(self.cache.pop(0))
                     self.cache.append(e)
 
     def stage(self, predicted: Sequence[int]):

@@ -11,17 +11,27 @@ under the paper's full algorithm:
 * byte-accurate transfer accounting (contiguous per-expert buffers — one
   copy per expert, matching the paper's pinned-buffer design).
 
-Key invariant (tested): offloading is *pure scheduling* — with
-quantization disabled the generated tokens and logits are bit-identical
-to plain decoding; with quantization they are identical to decoding the
-dequantized model.  The engine consumes the model's real routing
-decisions online, exactly as the CUDA-stream implementation would, and
-the cost model turns the counted transfers into wall-clock estimates for
-the paper's hardware table.
+Two execution modes (DESIGN.md §3/§6):
 
-On a real TPU deployment the ``PyLRU`` bookkeeping below is replaced by
-the jit-compatible state machine in ``core/lru_cache`` driving async host
-DMA; both implementations are property-tested equal.
+* **accounting** (``quantized=False``): the model decodes normally and
+  the engine replays its routing decisions through ``PyLRU`` — offloading
+  as *pure scheduling*, so generated tokens are bit-identical to plain
+  decoding (tested).  This is the trace/ablation mode behind the Fig-2 /
+  Table-2 benchmarks.
+* **packed** (``quantized=True``, the default for quantized engines):
+  expert weights stay HQQ-packed in a host-side store and stream through
+  a per-layer device buffer pool of ``cache_size`` slots, driven by the
+  jit-compatible LRU state machine (``core/lru_cache.access_plan`` /
+  ``stage_plan`` decide the slot swaps, ``core/expert_pool`` performs
+  them).  MoE compute reads the packed slots directly
+  (``models/moe.moe_apply_packed`` -> ``kernels/ops.dequant_matmul``).
+  Generated tokens are bit-identical to decoding the dequantized model
+  (tested), transfer byte counts are *measured* packed copies, and no
+  dense expert stack is ever materialized outside per-slot dequant.
+
+``PyLRU`` and the jit state machine are property-tested equal — including
+the eviction sequence — in
+``tests/test_lru.py::test_jnp_matches_python_oracle``.
 """
 from __future__ import annotations
 
@@ -34,9 +44,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, OffloadSpec, parse_block
-from repro.core import cost_model, speculative
+from repro.core import cost_model, expert_pool as EP, speculative
 from repro.core.lru_cache import PyLRU
 from repro.core.trace import moe_positions, stacked_routers
+from repro.models import moe as M
 from repro.models import transformer as T
 from repro.quant import hqq
 
@@ -144,17 +155,30 @@ class ExpertUsageTracker:
 
 
 # ----------------------------------------------------------------------
-def quantize_for_offload(params, cfg: ModelConfig, spec: OffloadSpec):
+def quantize_for_offload(params, cfg: ModelConfig, spec: OffloadSpec, *,
+                         pack_experts: bool = False):
     """Mixed quantization of the model (paper §3.3): experts at
     ``spec.expert_bits``, attention/shared weights at ``spec.attn_bits``;
     embeddings / router / norms stay 16-bit.
 
-    Returns (exec_params, size_report).  ``exec_params`` carries the
-    dequantized weights (what the accelerator computes with after the HQQ
-    dequant kernel); ``size_report`` carries the true packed sizes.
+    By default returns ``(exec_params, size_report)`` with every
+    quantized weight eagerly dequantized back to dense — this is the
+    *parity oracle* (what a dequantize-then-matmul execution computes),
+    NOT the memory-saving path; ``size_report`` carries the true packed
+    sizes.
+
+    With ``pack_experts=True`` expert weights are never dequantized:
+    returns ``(exec_params, size_report, store)`` where ``store`` is the
+    packed host store (``core/expert_pool.build_store``, bitwise the same
+    quantization as the oracle path) and ``exec_params`` carries
+    zero-size placeholders for the expert stacks — the packed engine
+    below computes MoE straight from the store/pool, so no dense expert
+    tensor exists to materialize.  ``size_report["experts"]`` is then the
+    measured store size.
     """
     qsizes = {"experts": 0, "attn": 0, "fp16": 0}
     dtype = jnp.dtype(cfg.dtype)
+    store = EP.build_store(params, cfg, spec) if pack_experts else None
 
     def quant_leaf(path, leaf, bits):
         if leaf.ndim < 2:
@@ -186,6 +210,11 @@ def quantize_for_offload(params, cfg: ModelConfig, spec: OffloadSpec):
                               for i, v in enumerate(tree))
         name = path[-1]
         if "experts" in path:
+            if pack_experts:
+                # weights live packed in the host store; leave a zero-size
+                # placeholder so the param tree keeps its structure (and
+                # nothing dense can be computed with by accident)
+                return jnp.zeros(tree.shape[:1] + (0,), tree.dtype)
             return quant_leaf(path, tree, spec.expert_bits)
         if name in ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
                     "w_in", "w_out"):
@@ -194,30 +223,201 @@ def quantize_for_offload(params, cfg: ModelConfig, spec: OffloadSpec):
         return tree
 
     exec_params = walk(params, ())
+    if pack_experts:
+        qsizes["experts"] = store.nbytes()
     qsizes["total"] = qsizes["experts"] + qsizes["attn"] + qsizes["fp16"]
+    if pack_experts:
+        return exec_params, qsizes, store
     return exec_params, qsizes
 
 
 # ----------------------------------------------------------------------
+class PackedDecoder:
+    """Layer-wise executor for a model whose MoE experts live HQQ-packed
+    in a host store and stream through per-layer device buffer pools
+    (DESIGN.md §6).
+
+    Decode (and prefill) run one block at a time through per-kind jitted
+    functions instead of the scanned ``T.decode_step``: the pool state
+    threads *across* layers (speculative staging writes to layer ``l+j``
+    while layer ``l`` computes — the paper's overlap structure), which a
+    host-driven layer loop expresses naturally.  On this backend the
+    layerwise loop is bitwise-identical to the scanned step (verified in
+    ``tests/test_offload.py``).  Both decode state and prefill output use
+    the standard stacked layouts, so serving engines can swap this in for
+    their jitted step (``ContinuousEngine(offload=...)``).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, spec: OffloadSpec,
+                 store: EP.PackedExperts, *, fused: bool = True):
+        self.cfg = cfg
+        self.spec = spec
+        self.store = store
+        self.params = params
+        self.fused = fused
+        self.routers = jnp.asarray(stacked_routers(params, cfg))
+        self.n_moe_layers = int(self.routers.shape[0])
+        self.kinds = cfg.layer_kinds()
+        # MoE ordinal of each absolute layer (period-major — the order
+        # stacked_routers / the store use)
+        self.moe_ordinal: Dict[int, int] = {}
+        for l, k in enumerate(self.kinds):
+            if parse_block(k)[1] == "moe":
+                self.moe_ordinal[l] = len(self.moe_ordinal)
+        self._layer_p = [T.layer_params(params, cfg, l)
+                         for l in range(cfg.n_layers)]
+        self._jit_embed = jax.jit(lambda p, t: T.embed_tokens(p, cfg, t))
+        self._jit_head = jax.jit(lambda p, x: T.apply_head(p, cfg, x))
+        self._blk: Dict[str, object] = {}
+        self._pre: Dict[tuple, object] = {}
+
+    def init_pool_state(self) -> EP.PoolState:
+        return EP.init_pool_state(self.store, self.spec)
+
+    # ------------------------------------------------------------------
+    def _decode_blk(self, kind: str):
+        if kind not in self._blk:
+            cfg, spec = self.cfg, self.spec
+            if parse_block(kind)[1] == "moe":
+                fn = lambda p, x, st, pos, store, ps, lm, routers, act: \
+                    T.decode_block_packed(
+                        p, cfg, kind, x, st, pos, store, ps, lm, routers,
+                        lookahead=spec.lookahead,
+                        n_spec=spec.num_speculative, fused=self.fused,
+                        active=act)
+                self._blk[kind] = jax.jit(fn, donate_argnums=(5,))
+            else:
+                fn = lambda p, x, st, pos: T._block_decode(
+                    p, cfg, kind, x, st, pos, moe_mode="gather")
+                self._blk[kind] = jax.jit(fn)
+        return self._blk[kind]
+
+    def decode(self, state, tokens, pstate: EP.PoolState, active=None):
+        """One token for every row: layerwise ``decode_step`` with MoE
+        served from the buffer pool.  Returns
+        (logits, state', pstate', route_ids per MoE layer)."""
+        cfg = self.cfg
+        x = self._jit_embed(self.params, tokens)
+        pos = state["pos"]
+        route_ids = []
+        for l, kind in enumerate(self.kinds):
+            st_l = T.decode_state_layer(state, cfg, l)
+            if l in self.moe_ordinal:
+                x, st_l, pstate, info = self._decode_blk(kind)(
+                    self._layer_p[l], x, st_l, pos, self.store, pstate,
+                    jnp.asarray(self.moe_ordinal[l], jnp.int32),
+                    self.routers, active)
+                route_ids.append(info["route"]["ids"])
+            else:
+                x, st_l, _ = self._decode_blk(kind)(
+                    self._layer_p[l], x, st_l, pos)
+            state = T.set_decode_state_layer(state, cfg, l, st_l)
+        logits = self._jit_head(self.params, x)
+        state = dict(state, pos=pos + 1)
+        return logits, state, pstate, route_ids
+
+    # ------------------------------------------------------------------
+    def _prefill_blk(self, kind: str, S: int, max_len: int, has_mask: bool):
+        key = (kind, S, max_len, has_mask)
+        if key not in self._pre:
+            cfg = self.cfg
+            if parse_block(kind)[1] == "moe":
+                def fn(p, x, positions, store, lm, pad_mask):
+                    return T._block_train(
+                        p, cfg, kind, x, positions, want_state=True,
+                        max_len=max_len, pad_mask=pad_mask,
+                        moe_ffn_fn=M.packed_expert_ffn(store, lm, cfg))
+            else:
+                def fn(p, x, positions, store, lm, pad_mask):
+                    return T._block_train(
+                        p, cfg, kind, x, positions, want_state=True,
+                        max_len=max_len, pad_mask=pad_mask)
+            self._pre[key] = jax.jit(fn)
+        return self._pre[key]
+
+    def prefill(self, batch, max_len: int):
+        """Layerwise prefill: experts stream through per-slot dequant one
+        at a time (``moe.packed_expert_ffn``) — the encode phase loads
+        each expert of each layer exactly once, as the paper notes
+        existing algorithms already handle; no cache accounting.
+        Returns (logits, stacked decode state), bitwise-identical to
+        ``T.prefill`` of the dequantized model on this backend."""
+        cfg = self.cfg
+        tokens = jnp.asarray(batch["tokens"])
+        B, S = tokens.shape
+        pad_mask = batch.get("pad_mask")
+        pad_mask, positions = T.pad_positions(
+            None if pad_mask is None else jnp.asarray(pad_mask), S)
+        x = self._jit_embed(self.params, tokens)
+        states = []
+        for l, kind in enumerate(self.kinds):
+            fn = self._prefill_blk(kind, S, max_len, pad_mask is not None)
+            lm = jnp.asarray(self.moe_ordinal.get(l, 0), jnp.int32)
+            x, st, _ = fn(self._layer_p[l], x, positions, self.store, lm,
+                          pad_mask)
+            states.append(st)
+        logits = self._jit_head(self.params, x)
+        period = cfg.pattern_period
+        n_scanned = cfg.n_periods * period
+        stack = [jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[states[per * period + i]
+                                for per in range(cfg.n_periods)])
+                 for i in range(period)]
+        pos = (pad_mask.sum(1).astype(jnp.int32) if pad_mask is not None
+               else jnp.asarray(S, jnp.int32))
+        state = {"stack": stack, "tail": list(states[n_scanned:]),
+                 "pos": pos}
+        return logits, state
+
+
+# ----------------------------------------------------------------------
 class OffloadEngine:
-    """Stateful wrapper around one model + offload configuration."""
+    """Stateful wrapper around one model + offload configuration.
+
+    ``quantized=False`` — accounting mode (pure scheduling, PyLRU replay).
+    ``quantized=True``  — packed mode: real HQQ-packed execution through
+    the device buffer pool (module docstring).  ``packed=False`` opts a
+    quantized engine back into accounting over the eagerly-dequantized
+    model (the parity oracle the packed mode is tested against).
+    """
 
     def __init__(self, params, cfg: ModelConfig,
-                 spec: Optional[OffloadSpec] = None, quantized: bool = False):
+                 spec: Optional[OffloadSpec] = None, quantized: bool = False,
+                 *, packed: Optional[bool] = None, fused: bool = True):
         assert cfg.moe is not None, "offloading targets MoE architectures"
         self.cfg = cfg
         self.spec = spec or cfg.offload or OffloadSpec()
         self.size_report = None
+        self.packed = bool(quantized) if packed is None else bool(packed)
+        if self.packed and not quantized:
+            raise ValueError("packed execution requires quantized=True "
+                             "(the store holds HQQ-packed experts)")
+        self.store = None
+        self._decoder = None
+        self._last_pool_state = None
         if quantized:
-            params, self.size_report = quantize_for_offload(params, cfg, self.spec)
+            if self.packed:
+                params, self.size_report, self.store = quantize_for_offload(
+                    params, cfg, self.spec, pack_experts=True)
+            else:
+                params, self.size_report = quantize_for_offload(
+                    params, cfg, self.spec)
         self.params = params
         self.routers = stacked_routers(params, cfg)  # (L_moe, D, E)
         self.n_moe_layers = self.routers.shape[0]
-        eff_bits = cost_model.EFFECTIVE_BITS[self.spec.expert_bits if quantized else 16]
-        self.expert_bytes = cost_model.expert_param_count(cfg) * eff_bits / 8.0
-        self._step = jax.jit(lambda p, st, tk: T.decode_step(
-            p, cfg, st, tk, moe_mode="gather", collect_info=True))
-        self._prefill = T.make_prefill(cfg)
+        if self.packed:
+            self._decoder = PackedDecoder(params, cfg, self.spec, self.store,
+                                          fused=fused)
+            # measured: what one demand load / prefetch actually copies
+            self.expert_bytes = EP.per_expert_nbytes(self.store)
+        else:
+            eff_bits = cost_model.EFFECTIVE_BITS[
+                self.spec.expert_bits if quantized else 16]
+            self.expert_bytes = (cost_model.expert_param_count(cfg)
+                                 * eff_bits / 8.0)
+            self._step = jax.jit(lambda p, st, tk: T.decode_step(
+                p, cfg, st, tk, moe_mode="gather", collect_info=True))
+            self._prefill = T.make_prefill(cfg)
         # live routing histogram, readable by serving-admission policies
         self.usage = ExpertUsageTracker(self.n_moe_layers,
                                         cfg.moe.num_experts)
@@ -226,7 +426,13 @@ class OffloadEngine:
     def generate(self, prompt: np.ndarray, max_new_tokens: int,
                  greedy: bool = True, rng=None
                  ) -> Tuple[np.ndarray, OffloadStats]:
-        """prompt: (1, S) int32.  Returns (generated (1, n), stats)."""
+        """prompt: (1, S) int32.  Returns (generated (1, n), stats).
+
+        Packed engines really perform the slot swaps (stats are measured
+        copies); accounting engines replay routing through PyLRU."""
+        if self._decoder is not None:
+            return self._generate_packed(prompt, max_new_tokens,
+                                         greedy=greedy, rng=rng)
         cfg, spec = self.cfg, self.spec
         caches = [PyLRU(spec.cache_size, spec.num_speculative)
                   for _ in range(self.n_moe_layers)]
@@ -258,6 +464,41 @@ class OffloadEngine:
             stats.spec_hits += c.spec_hits
             stats.demand_loads += c.demand
             stats.spec_loads += c.spec_loads
+        return np.asarray(out)[None], stats
+
+    # ------------------------------------------------------------------
+    def _generate_packed(self, prompt: np.ndarray, max_new_tokens: int,
+                         greedy: bool = True, rng=None
+                         ) -> Tuple[np.ndarray, OffloadStats]:
+        """Packed-execution generate: prefill streams experts through
+        per-slot dequant; every decode token is served from the device
+        buffer pool with the LRU/speculative machinery performing real
+        slot swaps (DESIGN.md §6)."""
+        dec = self._decoder
+        pstate = dec.init_pool_state()
+        max_len = prompt.shape[1] + max_new_tokens
+        pre_logits, state = dec.prefill({"tokens": jnp.asarray(prompt)},
+                                        max_len)
+        first = jnp.argmax(pre_logits[:, -1], axis=-1)
+        out = [int(first[0])]
+        tok = first[:, None].astype(jnp.int32)
+        for _ in range(max_new_tokens - 1):
+            logits, state, pstate, route_ids = dec.decode(state, tok, pstate)
+            self.usage.update([np.asarray(i) for i in route_ids])
+            if greedy:
+                nxt = jnp.argmax(logits[:, -1], axis=-1)
+            else:
+                rng, sub = jax.random.split(rng)
+                nxt = jax.random.categorical(sub, logits[:, -1])
+            tok = nxt[:, None].astype(jnp.int32)
+            out.append(int(nxt[0]))
+        counts = np.asarray(pstate.counts)
+        stats = OffloadStats(
+            n_tokens=max_new_tokens - 1,
+            hits=int(counts[0]), spec_hits=int(counts[1]),
+            demand_loads=int(counts[2]), spec_loads=int(counts[3]),
+            expert_bytes=self.expert_bytes)
+        self._last_pool_state = pstate  # inspectable by tests/examples
         return np.asarray(out)[None], stats
 
     # ------------------------------------------------------------------

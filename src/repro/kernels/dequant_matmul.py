@@ -15,7 +15,11 @@ keeps it in VMEM).
 
 3-bit codes don't unpack with static strides (8 codes span 3 bytes), so
 3-bit uses the jnp reference path (``ops.dequant_matmul`` dispatches);
-noted in DESIGN.md.
+noted in DESIGN.md §6.
+
+This kernel is the compute path of packed-offloaded MoE execution:
+``models/moe.moe_apply_packed`` feeds each served pool slot's packed
+weights through ``ops.dequant_matmul`` (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -29,8 +33,7 @@ from jax.experimental import pallas as pl
 from repro.quant.hqq import unpack_codes
 
 
-def _kernel(x_ref, p_ref, s_ref, z_ref, o_ref, *, bits, group_size,
-            n_k_steps):
+def _kernel(x_ref, p_ref, s_ref, z_ref, o_ref, *, bits, group_size):
     k_step = pl.program_id(2)
 
     @pl.when(k_step == 0)
@@ -65,8 +68,7 @@ def dequant_matmul_pallas(x, packed, scale, zero, *, bits, group_size,
 
     grid = (M // bm, N // bn, n_k)
     return pl.pallas_call(
-        functools.partial(_kernel, bits=bits, group_size=group_size,
-                          n_k_steps=n_k),
+        functools.partial(_kernel, bits=bits, group_size=group_size),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         grid=grid,
         in_specs=[

@@ -1,6 +1,11 @@
 """Jit'd public wrappers around the Pallas kernels with automatic fallback
 to the pure-jnp oracle for shapes/bitwidths the kernels don't tile
-(3-bit codes, non-divisible shapes, scalar decode queries)."""
+(3-bit codes, non-divisible shapes, scalar decode queries).
+
+``dequant_matmul`` is the dispatch point for packed-offloaded MoE
+execution (``models/moe.moe_apply_packed``, DESIGN.md §6): batch-1 decode
+and 3-bit codes take the reference path on this host; MXU-aligned 2/4/8-
+bit shapes take the fused Pallas kernel."""
 from __future__ import annotations
 
 from typing import Optional

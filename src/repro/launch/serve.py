@@ -8,6 +8,11 @@
         [--max-slots 4] [--slot-len 256] [--policy overlap]
 * the paper's offloaded interactive mode (MoE archs):
     ... --offload [--quantize] [--cache-size 4] [--num-speculative 2]
+  (--quantize runs REAL packed execution: HQQ-packed experts streamed
+  through the device buffer pool, DESIGN.md §6)
+* continuous batching + offloading composed (packed pool shared across
+  the running batch):
+    ... --continuous --offload --quantize
 
 With ``--offload`` the engine reports cache statistics and the cost-model
 tokens/s projection for the paper's four hardware targets.  With
@@ -68,6 +73,7 @@ def main():
     prompts = args.prompt or ["def main(", "import os\n"]
     enc = [encode_text(p) % cfg.vocab_size for p in prompts]
 
+    offload_eng = None
     if args.offload:
         if cfg.moe is None:
             raise SystemExit("--offload targets MoE archs (the paper's "
@@ -81,6 +87,15 @@ def main():
                 cache_size=args.cache_size or spec.cache_size,
                 num_speculative=args.num_speculative or spec.num_speculative)
         eng = OffloadEngine(params, cfg, spec, quantized=args.quantize)
+        if args.continuous:
+            # continuous + offloaded decode compose (DESIGN.md §6); the
+            # packed pool needs quantized weights
+            if not args.quantize:
+                raise SystemExit("--continuous --offload needs --quantize "
+                                 "(the buffer pool serves HQQ-packed "
+                                 "experts)")
+            offload_eng = eng
+    if args.offload and not args.continuous:
         for p, e in zip(prompts, enc):
             out, stats = eng.generate(e[None], args.max_new)
             print(f"--- prompt {p!r}")
@@ -108,7 +123,7 @@ def main():
                 params, cfg, max_slots=args.max_slots,
                 slot_len=args.slot_len,
                 sampler=SamplerConfig(kind=args.sampler), policy=policy,
-                seed=args.seed)
+                seed=args.seed, offload=offload_eng)
         except ValueError as e:
             raise SystemExit(f"--continuous: {e}")
 
@@ -138,6 +153,11 @@ def main():
         print(f"[continuous] {s['finished']} requests, {s['tokens']} tokens "
               f"in {s['steps']} steps ({s['tokens_per_step']:.2f} tok/step, "
               f"{args.max_slots} slots)")
+        if offload_eng is not None:
+            print(f"[offloaded] pool traffic: {s['offload_demand_loads']} "
+                  f"demand + {s['offload_spec_loads']} spec loads, "
+                  f"{s['offload_hits']} hits "
+                  f"({s['offload_bytes_h2d']/1e6:.1f}MB h2d measured)")
         return
 
     eng = ServeEngine(params, cfg, SamplerConfig(kind=args.sampler))

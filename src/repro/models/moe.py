@@ -1,6 +1,6 @@
 """Sparse Mixture-of-Experts FFN: token-level top-k routing.
 
-Three apply paths, all producing *identical* outputs (unit-tested):
+Four apply paths, all producing *identical* outputs (unit-tested):
 
 * :func:`moe_apply_dense` — reference: every expert computed for every
   token, combined with the (sparse) routing weights.  O(E) compute; used
@@ -11,11 +11,18 @@ Three apply paths, all producing *identical* outputs (unit-tested):
   expert FFNs run as one batched einsum, results gather back.  Under the
   production mesh the buffer's expert axis is sharded on ``"model"``
   (expert parallelism -> all-to-all) when E divides the axis.
-* :func:`moe_apply_gather` — offloading path (paper): for interactive
-  decode only the *selected* experts' weights are touched — a per-token
-  gather of (k) expert weight slices.  This is the computational shape the
-  paper's offloading system executes on the accelerator, and the one the
-  offload engine charges transfers for.
+* :func:`moe_apply_gather` — per-token expert-weight gather over a dense
+  resident expert stack: only the (T, K) selected experts' weight slices
+  are read.  The computational shape of offloaded decode, and the parity
+  oracle for the packed path below.
+* :func:`moe_apply_packed` — the real offloaded path (DESIGN.md §6):
+  expert weights stay HQQ-packed in a host store; the selected experts
+  are served from a per-layer device buffer pool (``core/expert_pool``)
+  driven by the LRU/speculative state machine, and computed either by
+  per-slot dequantization into the *same* einsums as the gather path
+  (bitwise-equal by construction) or by the fused dequant-matmul kernel
+  (``kernels/ops.dequant_matmul`` — Pallas when shapes/bits tile, jnp
+  reference fallback for 3-bit and non-aligned shapes).
 
 Capacity-overflow tokens in the dispatch path are dropped (standard GShard
 semantics); with ``capacity_factor >= top_k * E`` no token can ever drop,
@@ -24,11 +31,14 @@ which the tests exploit to check dispatch == dense exactly.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import expert_pool as EP
+from repro.core import speculative
+from repro.quant import hqq
 from repro.sharding.specs import constrain
 
 
@@ -113,7 +123,7 @@ def moe_apply_dense(p, cfg, x2d):
 
 
 def moe_apply_dispatch(p, cfg, x2d, capacity_factor=None, groups=None,
-                       token_mask=None):
+                       token_mask=None, expert_ffn_fn=None):
     """Scatter-dispatch production path (train / large-batch decode).
 
     ``token_mask`` (T,) bool marks real tokens: masked-out tokens (pads in
@@ -128,6 +138,11 @@ def moe_apply_dispatch(p, cfg, x2d, capacity_factor=None, groups=None,
     (all-to-all when experts are model-sharded).  Without grouping GSPMD
     replicates the global scatter (74GB/chip for granite train_4k —
     caught by the dry-run).
+
+    ``expert_ffn_fn`` overrides the expert computation (``(E, C, D) ->
+    (E, C, D)``); the packed-offload prefill streams experts one at a
+    time from the host store this way (:func:`packed_expert_ffn`) instead
+    of reading a dense resident stack.
     """
     spec = cfg.moe
     if capacity_factor is not None:
@@ -188,7 +203,8 @@ def moe_apply_dispatch(p, cfg, x2d, capacity_factor=None, groups=None,
     # (expert parallel) when divisible.  The expert FFN below is the only
     # cross-group op -> all-to-all.
     buf = constrain(buf, ("pod", "data"), "model", None, None)
-    ybuf = jax.vmap(lambda b: expert_ffn(p["experts"], cfg, b))(buf)
+    ffn = expert_ffn_fn or (lambda b: expert_ffn(p["experts"], cfg, b))
+    ybuf = jax.vmap(ffn)(buf)
     ybuf = constrain(ybuf, ("pod", "data"), "model", None, None)
     y = jax.vmap(combine_one)(ybuf, meta, wg)  # (g, Tg, D)
     return (y.reshape(T, D).astype(x2d.dtype),
@@ -216,3 +232,99 @@ def moe_apply_gather(p, cfg, x2d, experts_override=None):
     yk = jnp.einsum("tkf,tkfd->tkd", h, wd)  # (T, K, D)
     y = jnp.einsum("tkd,tk->td", yk.astype(jnp.float32), w)
     return y.astype(x2d.dtype), {"ids": ids, "weights": w, "probs": probs}
+
+
+# ----------------------------------------------------------------------
+def moe_apply_packed(p, cfg, x2d, store, pstate, l, routers=None, *,
+                     lookahead: int = 1, n_spec: int = 0, fused: bool = True,
+                     active=None):
+    """Offloaded-decode MoE over HQQ-packed weights (DESIGN.md §6).
+
+    The routed experts of layer ``l`` are served from the per-layer device
+    buffer pool (``core/expert_pool.acquire`` performs the LRU slot swaps
+    and host-store gathers the state machine decides), then computed
+    straight from the packed slot contents:
+
+    * ``fused=True`` — each (token, k) pair runs the fused
+      dequant-matmul (``kernels/ops.dequant_matmul``: Pallas kernel when
+      shapes/bits tile, pure-jnp reference otherwise).
+    * ``fused=False`` — per-slot dequantization assembled into exactly
+      :func:`moe_apply_gather`'s einsums (bitwise-equal by construction).
+
+    After serving layer ``l``, the lookahead layer's likely experts are
+    predicted from the *current* hidden state (paper §3.2) and staged into
+    its staging buffers — batch-1 interactive decode only, matching the
+    paper's setting (batched continuous decode disables speculation).
+
+    ``p`` only needs the router (packed mode strips dense expert stacks
+    from the executable params).  Returns ``(y2d, route_info, pstate')``.
+    """
+    from repro.kernels import ops  # local import: keep kernels optional
+
+    spec_moe = cfg.moe
+    w, ids, probs = route_topk(p, spec_moe, x2d)
+    pstate, served = EP.acquire(store, pstate, l, ids, active)
+    T, K = ids.shape
+    dt = x2d.dtype
+    ddt = jnp.dtype(cfg.dtype)
+    act = jax.nn.silu if cfg.mlp_act == "swiglu" else jax.nn.gelu
+    if fused:
+        yk_rows = []
+        for t in range(T):
+            xt = x2d[t:t + 1]
+            for k in range(K):
+                sl = served.slice(t * K + k)
+                g = ops.dequant_matmul(xt, sl.w_gate).astype(dt)
+                u = ops.dequant_matmul(xt, sl.w_up).astype(dt)
+                h = act(g.astype(jnp.float32)).astype(dt) * u
+                yk_rows.append(ops.dequant_matmul(h, sl.w_down))
+        yk = jnp.stack(yk_rows).reshape(T, K, -1)  # (T, K, D) f32
+        y = jnp.einsum("tkd,tk->td", yk.astype(jnp.float32), w)
+    else:
+        dq = lambda qt: jnp.stack(
+            [hqq.dequantize(hqq.slice_leading(qt, i), ddt)
+             for i in range(T * K)]).reshape((T, K) + qt.shape[1:])
+        wg = dq(served.w_gate)   # (T, K, D, F)
+        wu = dq(served.w_up)
+        wd = dq(served.w_down)   # (T, K, F, D)
+        g = jnp.einsum("td,tkdf->tkf", x2d, wg)
+        u = jnp.einsum("td,tkdf->tkf", x2d, wu)
+        h = act(g.astype(jnp.float32)).astype(dt) * u
+        yk = jnp.einsum("tkf,tkfd->tkd", h, wd)
+        y = jnp.einsum("tkd,tk->td", yk.astype(jnp.float32), w)
+    if T == 1 and n_spec > 0 and routers is not None:
+        tgt = l + lookahead
+        L = store.n_layers
+        pred = speculative.predict_experts(
+            routers[jnp.clip(tgt, 0, L - 1)], x2d, n_spec)[0]
+        pstate = EP.stage(store, pstate, tgt, pred, tgt < L)
+    return (y.astype(dt), {"ids": ids, "weights": w, "probs": probs},
+            pstate)
+
+
+def packed_expert_ffn(store, l, cfg) -> Callable:
+    """Expert FFN over the packed host store for the *prefill* phase:
+    experts stream through one at a time (per-slot dequantization, no
+    dense (E, ...) weight stack), computing per-expert slices of exactly
+    :func:`expert_ffn`'s einsums — bitwise-equal on this backend (the
+    encode phase "works relatively well with existing algorithms", so no
+    cache accounting here).  Use as ``moe_apply_dispatch(...,
+    expert_ffn_fn=packed_expert_ffn(store, l, cfg))``.
+    """
+    act = jax.nn.silu if cfg.mlp_act == "swiglu" else jax.nn.gelu
+    ddt = jnp.dtype(cfg.dtype)
+
+    def ffn(xbuf):  # (E, C, D) -> (E, C, D)
+        outs = []
+        for e in range(store.n_slots):
+            sl = store.slice(l, e)
+            wg = hqq.dequantize(sl.w_gate, ddt)
+            wu = hqq.dequantize(sl.w_up, ddt)
+            wd = hqq.dequantize(sl.w_down, ddt)
+            g = jnp.einsum("cd,df->cf", xbuf[e], wg)
+            u = jnp.einsum("cd,df->cf", xbuf[e], wu)
+            h = act(g.astype(jnp.float32)).astype(xbuf.dtype) * u
+            outs.append(jnp.einsum("cf,fd->cd", h, wd))
+        return jnp.stack(outs)
+
+    return ffn

@@ -108,12 +108,15 @@ def count_params_analytic(cfg: ModelConfig) -> int:
 # Block apply (train / prefill)
 def _block_train(p, cfg: ModelConfig, kind: str, x, positions, *,
                  want_state: bool, enc_out=None, enc_pos=None,
-                 batch_for_state: int = 0, max_len: int = 0, pad_mask=None):
+                 batch_for_state: int = 0, max_len: int = 0, pad_mask=None,
+                 moe_ffn_fn=None):
     """Returns (x, state_or_None, aux).
 
     ``positions`` is (S,) shared or (B, S) per-row; ``pad_mask`` (B, S)
     marks real tokens (attention mixers only — recurrent mixers process
-    pads and callers must not left-pad recurrent archs).
+    pads and callers must not left-pad recurrent archs).  ``moe_ffn_fn``
+    overrides the MoE expert computation (packed-offload prefill streams
+    experts from the host store this way — DESIGN.md §6).
     """
     mixer, ffn = parse_block(kind)
     aux = {}
@@ -178,7 +181,8 @@ def _block_train(p, cfg: ModelConfig, kind: str, x, positions, *,
             y2d, moe_aux = M.moe_apply_dispatch(
                 p["moe"], cfg, h2.reshape(B * S, D),
                 token_mask=(pad_mask.reshape(B * S)
-                            if pad_mask is not None else None))
+                            if pad_mask is not None else None),
+                expert_ffn_fn=moe_ffn_fn)
             aux.update(moe_aux)
             x = x + seq_shard(y2d.reshape(B, S, D))
     return x, (state if want_state else None), aux
@@ -219,11 +223,15 @@ def _attn_train_with_cache(p, cfg, h, positions, window, max_len,
 
 # ======================================================================
 # Block decode (single token)
-def _block_decode(p, cfg: ModelConfig, kind: str, x_t, state, pos, *,
-                  enc_kv=None, moe_mode: str = "dispatch", offload_hook=None):
-    mixer, ffn = parse_block(kind)
+def _mixer_decode(p, cfg: ModelConfig, kind: str, x_t, state, pos, *,
+                  enc_kv=None):
+    """Mixer half of one block's decode step (norm1 + mixer + residual,
+    plus the cross-attention sub-block for enc-dec decoders).  Shared by
+    the scanned :func:`decode_step` and the layerwise packed-offload
+    driver (:func:`decode_block_packed`) so both run the exact same
+    non-MoE computation."""
+    mixer, _ = parse_block(kind)
     h = L.apply_norm(p["norm1"], cfg, x_t)
-    info = {}
     if mixer in ("attn", "swa", "xattn"):
         window = cfg.sliding_window if mixer == "swa" else None
         y, kv = L.attention_decode(p["attn"], cfg, h, state["kv"], pos,
@@ -244,6 +252,14 @@ def _block_decode(p, cfg: ModelConfig, kind: str, x_t, state, pos, *,
         ek, ev, ep = enc_kv
         y = L.cross_attention_decode(p["xattn"], cfg, hx, ek, ev, ep)
         x_t = x_t + y
+    return x_t, state
+
+
+def _block_decode(p, cfg: ModelConfig, kind: str, x_t, state, pos, *,
+                  enc_kv=None, moe_mode: str = "dispatch", offload_hook=None):
+    mixer, ffn = parse_block(kind)
+    info = {}
+    x_t, state = _mixer_decode(p, cfg, kind, x_t, state, pos, enc_kv=enc_kv)
     if ffn != "none":
         h2 = L.apply_norm(p["norm2"], cfg, x_t)
         B, S, D = h2.shape
@@ -259,6 +275,34 @@ def _block_decode(p, cfg: ModelConfig, kind: str, x_t, state, pos, *,
             y2d = L.apply_mlp(p["mlp"], cfg, h2).reshape(B * S, D)
         x_t = x_t + y2d.reshape(B, S, D)
     return x_t, state, info
+
+
+def decode_block_packed(p, cfg: ModelConfig, kind: str, x_t, state, pos,
+                        store, pstate, l_moe, routers, *, lookahead: int = 1,
+                        n_spec: int = 0, fused: bool = True, active=None):
+    """One block's decode step with MoE served from the packed expert
+    buffer pool — ``moe_mode="packed"`` (DESIGN.md §6).  Identical mixer
+    computation to :func:`_block_decode`; the MoE FFN reads HQQ-packed
+    slots through :func:`repro.models.moe.moe_apply_packed` and threads
+    the pool state through.  Returns (x_t, state, pstate, info)."""
+    mixer, ffn = parse_block(kind)
+    info = {}
+    x_t, state = _mixer_decode(p, cfg, kind, x_t, state, pos)
+    if ffn != "none":
+        h2 = L.apply_norm(p["norm2"], cfg, x_t)
+        B, S, D = h2.shape
+        h2d = h2.reshape(B * S, D)
+        if ffn == "moe":
+            y2d, route, pstate = M.moe_apply_packed(
+                p["moe"], cfg, h2d, store, pstate, l_moe, routers,
+                lookahead=lookahead, n_spec=n_spec, fused=fused,
+                active=active)
+            info["route"] = route
+            info["hidden_pre_moe"] = h2d
+        else:
+            y2d = L.apply_mlp(p["mlp"], cfg, h2).reshape(B * S, D)
+        x_t = x_t + y2d.reshape(B, S, D)
+    return x_t, state, pstate, info
 
 
 # ======================================================================
@@ -332,21 +376,26 @@ def _run_encoder(params, cfg: ModelConfig, audio_embeds, remat=False):
 
 # ======================================================================
 # Forward (train) and prefill
+def pad_positions(pad_mask, S: int):
+    """Prefill position layout shared by every prefill driver (scanned
+    ``forward_train`` and the packed layerwise prefill): with a left-pad
+    mask, real token j of a row gets logical position j − n_pads (rows
+    start at position 0 regardless of padding) and pads get −1, masking
+    them out of every attention; without one, plain ``arange``.
+    Returns (pad_mask as bool or None, positions)."""
+    if pad_mask is None:
+        return None, jnp.arange(S, dtype=jnp.int32)
+    pad_mask = pad_mask.astype(bool)
+    positions = jnp.cumsum(pad_mask.astype(jnp.int32), axis=1) - 1
+    return pad_mask, jnp.where(pad_mask, positions, -1)
+
+
 def forward_train(params, cfg: ModelConfig, batch, *, want_state=False,
                   max_len: int = 0, remat: bool = False):
     x = _embed_inputs(params, cfg, batch)
     B, S, _ = x.shape
     x = constrain(x, ("pod", "data"), None, None)
-    pad_mask = batch.get("pad_mask")  # (B, S) bool, True at real tokens
-    if pad_mask is not None:
-        # left-pad layout: real token j of a row gets logical position
-        # j − n_pads (so rows start at position 0 regardless of padding);
-        # pads get −1 and are masked out of every attention.
-        pad_mask = pad_mask.astype(bool)
-        positions = jnp.cumsum(pad_mask.astype(jnp.int32), axis=1) - 1
-        positions = jnp.where(pad_mask, positions, -1)
-    else:
-        positions = jnp.arange(S, dtype=jnp.int32)
+    pad_mask, positions = pad_positions(batch.get("pad_mask"), S)
     max_len = max_len or S
 
     enc_out = enc_pos = None
@@ -445,7 +494,21 @@ def decode_step(params, cfg: ModelConfig, state, tokens, *,
     """tokens: (B, 1) int32. Returns (logits (B,1,V), new_state[, infos]).
 
     ``state["pos"]`` may be a scalar (whole batch in lock-step) or (B,)
-    per-row positions (continuous batching / padded prefill)."""
+    per-row positions (continuous batching / padded prefill).
+
+    ``moe_mode``: "dispatch" (scatter into capacity buffers), "gather"
+    (per-token expert-weight gather — interactive decode / routing
+    collection).  The third mode, "packed" (HQQ-packed experts served
+    from the device buffer pool), runs through the layerwise driver
+    (``core/offload_engine.PackedDecoder`` -> :func:`decode_block_packed`)
+    rather than this scanned step, because its slot state threads across
+    layers; on this backend the layerwise loop is bitwise-identical to
+    the scan (tests/test_offload.py)."""
+    if moe_mode == "packed":
+        raise ValueError(
+            "moe_mode='packed' threads buffer-pool state across layers; "
+            "drive it with core/offload_engine.PackedDecoder.decode "
+            "(layerwise decode_block_packed), not the scanned decode_step")
     x = L.embed(params["embed"], cfg, tokens)
     pos = state["pos"]
     period = cfg.pattern_period
@@ -507,8 +570,8 @@ def decode_step(params, cfg: ModelConfig, state, tokens, *,
 
 
 # ======================================================================
-# Per-layer param access (used by the offload engine / tracing, which run
-# an unscanned python loop over layers on small models).
+# Per-layer param/state access (used by the offload engine / tracing,
+# which run an unscanned python loop over layers).
 def layer_params(params, cfg: ModelConfig, layer_idx: int):
     period = cfg.pattern_period
     n_scanned = cfg.n_periods * period
@@ -521,3 +584,41 @@ def layer_params(params, cfg: ModelConfig, layer_idx: int):
 
 def layer_kind(cfg: ModelConfig, layer_idx: int) -> str:
     return cfg.block_pattern[layer_idx % cfg.pattern_period]
+
+
+def decode_state_layer(state, cfg: ModelConfig, layer_idx: int):
+    """Slice one layer's decode state out of the stacked layout."""
+    period = cfg.pattern_period
+    n_scanned = cfg.n_periods * period
+    if layer_idx < n_scanned:
+        per = layer_idx // period
+        return jax.tree.map(lambda a: a[per], state["stack"][layer_idx % period])
+    return state["tail"][layer_idx - n_scanned]
+
+
+def set_decode_state_layer(state, cfg: ModelConfig, layer_idx: int, new):
+    """Write one layer's decode state back into the stacked layout
+    (pure: returns an updated state dict)."""
+    period = cfg.pattern_period
+    n_scanned = cfg.n_periods * period
+    out = dict(state)
+    if layer_idx < n_scanned:
+        per = layer_idx // period
+        i = layer_idx % period
+        out["stack"] = list(state["stack"])
+        out["stack"][i] = jax.tree.map(lambda a, b: a.at[per].set(b),
+                                       state["stack"][i], new)
+    else:
+        out["tail"] = list(state["tail"])
+        out["tail"][layer_idx - n_scanned] = new
+    return out
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    """(B, S) int32 -> (B, S, D) embeddings (layerwise-driver frontend)."""
+    return L.embed(params["embed"], cfg, tokens)
+
+
+def apply_head(params, cfg: ModelConfig, x):
+    """Final norm + unembed (layerwise-driver backend)."""
+    return L.unembed(params, cfg, L.apply_norm(params["final_norm"], cfg, x))

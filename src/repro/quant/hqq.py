@@ -213,6 +213,26 @@ def dequantize(qt: QTensor, dtype=jnp.float32) -> jnp.ndarray:
     return w.reshape(qt.shape).astype(dtype)
 
 
+def slice_leading(qt: QTensor, idx) -> QTensor:
+    """Index a stacked :class:`QTensor` along its leading (batch) axes.
+
+    ``quantize`` of a ``(..., K, N)`` weight keeps every leading axis on
+    all its leaves, so a stack of homogeneous weights (e.g. the packed
+    expert store's ``(L, E, K, N)``) is itself one QTensor; this returns
+    the sub-QTensor at ``idx`` (an int/scalar or tuple of them — traced
+    scalars are fine, making per-slot gathers jittable).  All quantization
+    math is elementwise per leading slice, so slicing commutes bitwise
+    with pack/dequant.
+    """
+    if not isinstance(idx, tuple):
+        idx = (idx,)
+    nd = len(idx)
+    assert nd < len(qt.shape) - 1, (idx, qt.shape)
+    meta = None if qt.meta is None else {k: v[idx] for k, v in qt.meta.items()}
+    return QTensor(qt.packed[idx], qt.scale[idx], qt.zero[idx], meta,
+                   qt.bits, qt.group_size, tuple(qt.shape[nd:]))
+
+
 # ----------------------------------------------------------------------
 # size accounting (Table 1)
 def nbytes(qt: QTensor) -> int:

@@ -19,6 +19,10 @@ Two modes:
 
 The memory-constrained interactive mode is
 ``core/offload_engine.OffloadEngine`` (the paper's contribution).
+:class:`ContinuousEngine` composes with it: passing a packed offload
+engine (``offload=...``) switches decode to the HQQ-packed expert
+buffer pool — continuous batching over offloaded experts, with the pool
+shared across the running batch (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -122,7 +126,26 @@ class ContinuousEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_slots: int = 4,
                  slot_len: int = 256, sampler: Optional[SamplerConfig] = None,
                  policy=None, eos_id: Optional[int] = EOS,
-                 prefill_bucket: int = 1, seed: int = 0):
+                 prefill_bucket: int = 1, seed: int = 0, offload=None):
+        """``offload``: a packed :class:`~repro.core.offload_engine.
+        OffloadEngine` (``quantized=True``) switches this engine into
+        **offloaded decode mode** (DESIGN.md §6): experts stay HQQ-packed
+        in the offload engine's host store, every decode step serves the
+        batch's routed experts from the per-layer device buffer pool
+        (shared across requests — the expert-overlap admission policy is
+        what makes that sharing pay), and admissions prefill through
+        per-slot-dequant expert streaming.  ``params`` is ignored in that
+        mode (the offload engine's executable params are used)."""
+        self.offload = offload
+        if offload is not None:
+            if offload._decoder is None:
+                raise ValueError("offloaded decode mode needs a packed "
+                                 "OffloadEngine (quantized=True)")
+            if offload.cfg is not cfg and offload.cfg != cfg:
+                raise ValueError("offload engine config mismatch")
+            params = offload.params
+            self._dec = offload._decoder
+            self._pstate = self._dec.init_pool_state()
         self.params = params
         self.cfg = cfg
         self.sampler = sampler or SamplerConfig(kind="greedy")
@@ -134,28 +157,35 @@ class ContinuousEngine:
         self.sched = Scheduler(max_slots, policy)
         # routing collection costs per-step host transfers; only pay for
         # it when the admission policy actually reads the usage histogram
+        # (the packed path surfaces routing for free)
         self._collect = (cfg.moe is not None
-                         and getattr(policy, "needs_usage", False))
+                         and (getattr(policy, "needs_usage", False)
+                              or offload is not None))
         self.usage = (ExpertUsageTracker.for_config(cfg)
                       if self._collect else None)
         # greedy decode folds argmax into the jitted step and feeds the
         # token straight back on-device — the host only sees (B,) ints
         self._greedy = self.sampler.kind == "greedy"
-        if self._collect:
-            def _step_fn(p, st, tk):
-                logits, st, infos = T.decode_step(
-                    p, cfg, st, tk, moe_mode="gather", collect_info=True)
-                nxt = (jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-                       if self._greedy else logits[:, -1])
-                return nxt, st, infos
+        if offload is not None:
+            self._decode = None  # layerwise packed path in step()
+            self._prefill = lambda p, b, ml: self._dec.prefill(b, ml)
         else:
-            def _step_fn(p, st, tk):
-                logits, st = T.decode_step(p, cfg, st, tk, moe_mode="gather")
-                nxt = (jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-                       if self._greedy else logits[:, -1])
-                return nxt, st
-        self._decode = jax.jit(_step_fn, donate_argnums=1)
-        self._prefill = T.make_prefill(cfg)
+            if self._collect:
+                def _step_fn(p, st, tk):
+                    logits, st, infos = T.decode_step(
+                        p, cfg, st, tk, moe_mode="gather", collect_info=True)
+                    nxt = (jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                           if self._greedy else logits[:, -1])
+                    return nxt, st, infos
+            else:
+                def _step_fn(p, st, tk):
+                    logits, st = T.decode_step(p, cfg, st, tk,
+                                               moe_mode="gather")
+                    nxt = (jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                           if self._greedy else logits[:, -1])
+                    return nxt, st
+            self._decode = jax.jit(_step_fn, donate_argnums=1)
+            self._prefill = T.make_prefill(cfg)
         # all-SWA stacks roll their window inside the slot, so a request
         # may decode past slot_len; anything else must fit the slot ring
         mixers = {parse_block(k)[0] for k in cfg.block_pattern}
@@ -228,16 +258,31 @@ class ContinuousEngine:
         finished = self._admit()
         if not self.sched.n_running:
             return finished
-        out = self._decode(self.params, self.kv.state,
-                           jnp.asarray(self.tokens))
-        if self._collect:
-            nxt_dev, state, (info_stack, _) = out
-            ids, _ = routing_from_info(self.cfg, info_stack,
-                                       want_hiddens=False)
-            rows = sorted(r.slot for r in self.sched.running)
-            self.usage.update(ids, rows=rows)
+        rows = sorted(r.slot for r in self.sched.running)
+        if self.offload is not None:
+            # offloaded decode: layerwise packed step over the slotted
+            # state; free slots bypass the expert pool (active mask), so
+            # their dummy tokens never pollute the cache or the stats
+            active = np.zeros((self.max_slots,), bool)
+            active[rows] = True
+            logits, state, self._pstate, route_ids = self._dec.decode(
+                self.kv.state, jnp.asarray(self.tokens), self._pstate,
+                jnp.asarray(active))
+            if self._collect:
+                self.usage.update([np.asarray(i) for i in route_ids],
+                                  rows=rows)
+            nxt_dev = (jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                       if self._greedy else logits[:, -1])
         else:
-            nxt_dev, state = out
+            out = self._decode(self.params, self.kv.state,
+                               jnp.asarray(self.tokens))
+            if self._collect:
+                nxt_dev, state, (info_stack, _) = out
+                ids, _ = routing_from_info(self.cfg, info_stack,
+                                           want_hiddens=False)
+                self.usage.update(ids, rows=rows)
+            else:
+                nxt_dev, state = out
         self.kv.state = state
         if self._greedy:
             nxt = np.asarray(nxt_dev)
@@ -271,8 +316,17 @@ class ContinuousEngine:
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
         toks = sum(len(r.generated) for r in self.sched.finished)
-        return {"steps": self.step_count, "joins": self.sched.joins,
-                "evictions": self.sched.evictions,
-                "finished": len(self.sched.finished),
-                "tokens": toks,
-                "tokens_per_step": toks / max(1, self.step_count)}
+        out = {"steps": self.step_count, "joins": self.sched.joins,
+               "evictions": self.sched.evictions,
+               "finished": len(self.sched.finished),
+               "tokens": toks,
+               "tokens_per_step": toks / max(1, self.step_count)}
+        if self.offload is not None:
+            hits, spec_hits, demand, spec = (
+                int(c) for c in np.asarray(self._pstate.counts))
+            out.update(offload_hits=hits, offload_spec_hits=spec_hits,
+                       offload_demand_loads=demand,
+                       offload_spec_loads=spec,
+                       offload_bytes_h2d=(demand + spec)
+                       * self.offload.expert_bytes)
+        return out

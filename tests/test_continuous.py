@@ -105,6 +105,36 @@ def test_kv_manager_rejects_recurrent():
 
 
 # ----------------------------------------------------------------------
+def test_continuous_offloaded_decode_parity(tiny_moe_cfg, tiny_moe_params):
+    """Offloaded decode mode (DESIGN.md §6): continuous batching over
+    HQQ-packed experts must produce, for every request, the bitwise
+    tokens of decoding the dequantized model alone — and the shared
+    buffer pool must actually carry the traffic."""
+    from repro.configs.base import OffloadSpec
+    from repro.core.offload_engine import OffloadEngine, quantize_for_offload
+
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    spec = OffloadSpec(cache_size=4, num_speculative=2, expert_bits=3,
+                       attn_bits=4)
+    qdeq, _ = quantize_for_offload(params, cfg, spec)
+    off = OffloadEngine(params, cfg, spec, quantized=True)
+    eng = ContinuousEngine(None, cfg, max_slots=2, slot_len=48,
+                           eos_id=None, offload=off)
+    prompts = _prompts(cfg, 4, seed=13, lo=4, hi=14)
+    max_news = [5, 9, 3, 7]
+    reqs = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+    eng.run(max_steps=300)
+    assert all(r.state == "finished" for r in reqs)
+    for p, m, r in zip(prompts, max_news, reqs):
+        oracle = generate_plain(qdeq, cfg, p[None], m)[0].tolist()
+        assert r.generated == oracle, f"request {r.rid} diverged"
+    s = eng.stats()
+    assert s["offload_demand_loads"] > 0
+    assert s["offload_bytes_h2d"] == (s["offload_demand_loads"]
+                                      + s["offload_spec_loads"]) \
+        * off.expert_bytes
+
+
 def test_scheduler_policy_and_accounting():
     reqs = [GenRequest(prompt=np.array([1, 2], np.int32)) for _ in range(3)]
     sched = Scheduler(max_slots=2, policy=fcfs_policy)

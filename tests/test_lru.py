@@ -53,19 +53,29 @@ def test_stage_skips_resident():
     n_steps=st.integers(1, 40),
 )
 def test_jnp_matches_python_oracle(k, n_spec, n_experts, seed, n_steps):
+    """PyLRU and the jit state machine produce identical hit/evict
+    sequences on random traces (the claim ``core/offload_engine``'s
+    docstring points here for)."""
     rng = np.random.default_rng(seed)
     top_k = min(2, n_experts)
     n_spec = min(n_spec, n_experts)
     js = L.init_layer_state(k, n_spec)
     py = L.PyLRU(k, n_spec)
     tot = {"hits": 0, "spec_hits": 0, "demand": 0, "spec_loads": 0}
+    evictions = []
     for _ in range(n_steps):
         needed = rng.choice(n_experts, size=top_k, replace=False)
-        js, stats = L.access(js, jnp.asarray(needed, jnp.int32))
+        js, stats, plan = L.access_plan(js, jnp.asarray(needed, jnp.int32))
         py.access(needed.tolist())
         tot["hits"] += int(stats.hits)
         tot["spec_hits"] += int(stats.spec_hits)
         tot["demand"] += int(stats.demand_loads)
+        # the plan must place every needed expert in the slot table
+        for j, e in enumerate(needed):
+            assert int(np.asarray(js.cache_ids)[int(plan.slots[j])]) in \
+                set(needed[j:].tolist()) | {int(e)}
+        evictions.extend(int(v) for v in np.asarray(plan.evicted)
+                         if int(v) >= 0)
         pred = rng.choice(n_experts, size=n_spec, replace=False)
         js, n = L.stage_speculative(js, jnp.asarray(pred, jnp.int32))
         py.stage(pred.tolist())
@@ -77,6 +87,9 @@ def test_jnp_matches_python_oracle(k, n_spec, n_experts, seed, n_steps):
     assert tot["spec_hits"] == py.spec_hits
     assert tot["demand"] == py.demand
     assert tot["spec_loads"] == py.spec_loads
+    # identical EVICT sequence, not just counts: the buffer pool replaces
+    # exactly the experts the python oracle would
+    assert evictions == py.evictions
 
 
 def test_access_is_jittable():

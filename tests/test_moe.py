@@ -101,3 +101,8 @@ def test_router_weights_renormalized():
     w, ids, probs = M.route_topk(p, cfg.moe, x)
     np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
     assert bool((ids >= 0).all()) and bool((ids < 4).all())
+
+
+# NOTE: the packed MoE path (moe_apply_packed / packed_expert_ffn,
+# DESIGN.md §6) is unit-tested in tests/test_offload.py, which does not
+# gate on the optional hypothesis dependency this module skips without.

@@ -1,4 +1,7 @@
-"""Offload engine invariants (the paper's system, end to end)."""
+"""Offload engine invariants (the paper's system, end to end):
+accounting mode is pure scheduling; packed mode executes on HQQ-packed
+weights through the device buffer pool and stays bit-identical to the
+dequantized model (DESIGN.md §6)."""
 import dataclasses
 
 import jax
@@ -7,9 +10,11 @@ import pytest
 
 from repro.configs import get_config
 from repro.configs.base import OffloadSpec
+from repro.core import expert_pool as EP
 from repro.core.offload_engine import (OffloadEngine, generate_plain,
                                        quantize_for_offload)
 from repro.models import transformer as T
+from repro.quant import hqq
 
 
 @pytest.fixture(scope="module")
@@ -70,6 +75,176 @@ def test_quantized_sizes_and_quality(setup):
     out, stats = eng.generate(prompt, 8)
     assert out.shape == (1, 8)
     assert (out >= 0).all() and (out < cfg.vocab_size).all()
+
+
+# ----------------------------------------------------------------------
+# packed execution (DESIGN.md §6)
+SPEC = OffloadSpec(cache_size=2, num_speculative=2, lookahead=1,
+                   expert_bits=3, attn_bits=4)
+
+
+def test_packed_generate_bit_identical_to_dequantized(setup):
+    """Acceptance: quantized (packed) generation is bit-identical to
+    decoding the dequantized model, while experts stay HQQ-packed —
+    the only dense expert weights ever built are per-slot dequants."""
+    cfg, params, prompt = setup
+    qdeq, _ = quantize_for_offload(params, cfg, SPEC)
+    oracle = generate_plain(qdeq, cfg, prompt, 12)
+    eng = OffloadEngine(params, cfg, SPEC, quantized=True)
+    out, stats = eng.generate(prompt, 12)
+    assert (out == oracle).all()
+    # real traffic happened and the LRU worked
+    assert stats.demand_loads > 0 and stats.hits > 0
+    assert stats.n_tokens == 11
+    # no dense expert stack exists in the executable params
+    for i in range(cfg.pattern_period):
+        ex = eng.params["stack"][i]["moe"]["experts"]
+        assert all(leaf.size == 0 for leaf in jax.tree.leaves(ex))
+
+
+def test_packed_einsum_mode_matches_fused(setup):
+    """fused=False (per-slot dequant into the gather einsums) and
+    fused=True (kernels/ops.dequant_matmul) agree bitwise on f32."""
+    cfg, params, prompt = setup
+    a = OffloadEngine(params, cfg, SPEC, quantized=True, fused=True)
+    b = OffloadEngine(params, cfg, SPEC, quantized=True, fused=False)
+    out_a, _ = a.generate(prompt, 10)
+    out_b, _ = b.generate(prompt, 10)
+    assert (out_a == out_b).all()
+
+
+def test_device_buffer_pool_holds_cache_size_slots(setup):
+    """Acceptance: the device buffer pool holds exactly ``cache_size``
+    expert slots per MoE layer (plus ``num_speculative`` staging
+    buffers); only the host store holds all E experts."""
+    cfg, params, prompt = setup
+    spec = OffloadSpec(cache_size=3, num_speculative=2, expert_bits=3,
+                       attn_bits=4)
+    eng = OffloadEngine(params, cfg, spec, quantized=True)
+    _, _ = eng.generate(prompt, 6)
+    ps = eng._last_pool_state
+    L = eng.n_moe_layers
+    for qt in ps.pool:
+        assert qt.shape[:2] == (L, spec.cache_size)
+    for qt in ps.staging:
+        assert qt.shape[:2] == (L, spec.num_speculative)
+    for qt in eng.store:
+        assert qt.shape[:2] == (L, cfg.moe.num_experts)
+    assert ps.lru.cache_ids.shape == (L, spec.cache_size)
+
+
+def test_packed_stats_are_measured_copies(setup):
+    """expert_bytes equals the real packed size of one expert's slot
+    (packed codes + scale/zero + meta), not a cost-model estimate."""
+    cfg, params, prompt = setup
+    eng = OffloadEngine(params, cfg, SPEC, quantized=True)
+    one = eng.store.slice(0, 0)
+    assert eng.expert_bytes == one.nbytes()
+    assert eng.size_report["experts"] == eng.store.nbytes()
+
+
+def test_packed_counters_match_accounting_replay(setup):
+    """The packed engine's measured hit/load counters equal the
+    accounting engine's PyLRU replay over the (bitwise-identical)
+    dequantized model — same routing, same cache policy, two
+    implementations."""
+    cfg, params, prompt = setup
+    qdeq, _ = quantize_for_offload(params, cfg, SPEC)
+    packed = OffloadEngine(params, cfg, SPEC, quantized=True)
+    acct = OffloadEngine(qdeq, cfg, SPEC, quantized=False)
+    out_p, sp = packed.generate(prompt, 12)
+    out_a, sa = acct.generate(prompt, 12)
+    assert (out_p == out_a).all()
+    assert (sp.hits, sp.spec_hits, sp.demand_loads, sp.spec_loads) == \
+        (sa.hits, sa.spec_hits, sa.demand_loads, sa.spec_loads)
+
+
+def test_pool_slots_agree_with_lru_state(setup):
+    """Data-plane/state-machine coherence: after generation, each LRU
+    slot's packed bytes are exactly the host store's bytes for the
+    expert the state machine says lives there."""
+    cfg, params, prompt = setup
+    eng = OffloadEngine(params, cfg, SPEC, quantized=True)
+    eng.generate(prompt, 10)
+    ps = eng._last_pool_state
+    ids = np.asarray(ps.lru.cache_ids)  # (L, k)
+    for l in range(eng.n_moe_layers):
+        for s in range(SPEC.cache_size):
+            e = int(ids[l, s])
+            if e < 0:
+                continue
+            slot = ps.pool.slice(l, s)
+            ref = eng.store.slice(l, e)
+            for qs, qr in zip(slot, ref):
+                assert (np.asarray(qs.packed) == np.asarray(qr.packed)).all()
+                assert (np.asarray(qs.scale) == np.asarray(qr.scale)).all()
+
+
+def _packed_moe_setup(bits=3):
+    """Store + cold pool for moe-level packed-path unit tests."""
+    cfg = get_config("tiny-moe")  # dims divide every scheme's group size
+    params = T.init_model(jax.random.key(20), cfg)
+    spec = OffloadSpec(cache_size=2, num_speculative=2, expert_bits=bits,
+                       attn_bits=4)
+    store = EP.build_store(params, cfg, spec)
+    pstate = EP.init_pool_state(store, spec)
+    return cfg, params, spec, store, pstate
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_moe_packed_matches_gather_on_dequantized_stack(fused):
+    """moe_apply_packed == moe_apply_gather over the dequantized expert
+    stack, bitwise — per-slot dequant commutes with stacking and both
+    paths run the same matmuls (the packed-execution parity invariant
+    at the single-layer level)."""
+    import jax.numpy as jnp
+
+    from repro.core.trace import stacked_routers
+    from repro.models import moe as M
+
+    cfg, params, spec, store, pstate = _packed_moe_setup()
+    l = 2
+    p_moe = T.layer_params(params, cfg, l)["moe"]
+    ex_deq = {name: hqq.dequantize(hqq.slice_leading(qt, l),
+                                   jnp.dtype(cfg.dtype))
+              for name, qt in zip(("w_gate", "w_up", "w_down"), store)}
+    x = jax.random.normal(jax.random.key(21), (1, cfg.d_model))
+    y_ref, route_ref = M.moe_apply_gather(
+        {"router": p_moe["router"], "experts": ex_deq}, cfg, x)
+    routers = jnp.asarray(stacked_routers(params, cfg))
+    y, route, pstate2 = M.moe_apply_packed(
+        p_moe, cfg, x, store, pstate, jnp.asarray(l), routers,
+        lookahead=spec.lookahead, n_spec=spec.num_speculative, fused=fused)
+    assert (np.asarray(route["ids"]) == np.asarray(route_ref["ids"])).all()
+    assert (np.asarray(y) == np.asarray(y_ref)).all()
+    # cold pool -> both routed experts were demand loads
+    counts = np.asarray(pstate2.counts)
+    assert counts[2] == cfg.moe.top_k
+    # speculation staged into layer l+1's buffers
+    assert counts[3] > 0
+    assert (np.asarray(pstate2.lru.spec_ids[l + 1]) >= 0).all()
+
+
+def test_moe_packed_prefill_ffn_matches_dense_dispatch():
+    """Expert-streaming dispatch (the packed prefill path) == dispatch
+    over the dequantized stack, bitwise."""
+    import jax.numpy as jnp
+
+    from repro.models import moe as M
+
+    cfg, params, spec, store, pstate = _packed_moe_setup()
+    l = 0
+    p_moe = T.layer_params(params, cfg, l)["moe"]
+    ex_deq = {name: hqq.dequantize(hqq.slice_leading(qt, l),
+                                   jnp.dtype(cfg.dtype))
+              for name, qt in zip(("w_gate", "w_up", "w_down"), store)}
+    x = jax.random.normal(jax.random.key(22), (24, cfg.d_model))
+    y_ref, _ = M.moe_apply_dispatch(
+        {"router": p_moe["router"], "experts": ex_deq}, cfg, x)
+    y, _ = M.moe_apply_dispatch(
+        p_moe, cfg, x,
+        expert_ffn_fn=M.packed_expert_ffn(store, jnp.asarray(l), cfg))
+    assert (np.asarray(y) == np.asarray(y_ref)).all()
 
 
 def test_throughput_estimates_ordering(setup):

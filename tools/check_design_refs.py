@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Docs-consistency check: every ``DESIGN.md §N`` reference in the code
+base must resolve to an existing ``## §N`` section of DESIGN.md.
+
+Run from the repo root (CI does):
+
+    python tools/check_design_refs.py
+
+Exits non-zero listing every dangling reference.  Also fails if DESIGN.md
+or the references vanish entirely (the check silently passing on an empty
+set would hide a rename of the file itself).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+SCAN_FILES = ("README.md", "ROADMAP.md", "CHANGES.md")
+REF = re.compile(r"DESIGN\.md\s+§(\d+)")
+SECTION = re.compile(r"^##\s+§(\d+)\b", re.MULTILINE)
+
+
+def main() -> int:
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        print("check_design_refs: DESIGN.md missing", file=sys.stderr)
+        return 1
+    sections = {int(n) for n in SECTION.findall(design.read_text())}
+    if not sections:
+        print("check_design_refs: DESIGN.md has no '## §N' sections",
+              file=sys.stderr)
+        return 1
+
+    paths = [ROOT / f for f in SCAN_FILES if (ROOT / f).exists()]
+    for d in SCAN_DIRS:
+        paths += sorted((ROOT / d).rglob("*.py"))
+    n_refs = 0
+    bad = []
+    for path in paths:
+        text = path.read_text(errors="replace")
+        for m in REF.finditer(text):
+            n_refs += 1
+            sec = int(m.group(1))
+            if sec not in sections:
+                line = text[: m.start()].count("\n") + 1
+                bad.append(f"{path.relative_to(ROOT)}:{line}: "
+                           f"DESIGN.md §{sec} does not exist "
+                           f"(sections: {sorted(sections)})")
+    if not n_refs:
+        print("check_design_refs: no DESIGN.md § references found — "
+              "did the convention change?", file=sys.stderr)
+        return 1
+    if bad:
+        print("\n".join(bad), file=sys.stderr)
+        return 1
+    print(f"check_design_refs: {n_refs} references OK against sections "
+          f"{sorted(sections)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
