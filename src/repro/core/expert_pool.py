@@ -222,10 +222,60 @@ def pe_stack(pes) -> PackedExperts:
                            for n in EXPERT_MATS))
 
 
+def _qt_gather(qt: hqq.QTensor, l, idx: jnp.ndarray) -> hqq.QTensor:
+    """Gather ``idx`` (n,) slices of layer ``l`` from a (L, S, ...) stacked
+    QTensor as ONE indexed read per leaf — the vectorized replacement for
+    n sequential ``slice_leading`` + ``qt_stack`` round trips."""
+    g = lambda a: a[l, idx]
+    meta = None if qt.meta is None else {k: g(v) for k, v in qt.meta.items()}
+    return hqq.QTensor(g(qt.packed), g(qt.scale), g(qt.zero), meta,
+                       qt.bits, qt.group_size,
+                       (idx.shape[0],) + tuple(qt.shape[2:]))
+
+
+def pe_gather(pe: PackedExperts, l, idx: jnp.ndarray) -> PackedExperts:
+    """(L, S, ...) tier -> (n, ...) gathered slices at ``idx`` (n,)."""
+    return PackedExperts(*(_qt_gather(qt, l, idx) for qt in pe))
+
+
+def _qt_where_rows(mask: jnp.ndarray, a: hqq.QTensor, b: hqq.QTensor
+                   ) -> hqq.QTensor:
+    """Row-wise select between two (n, ...) stacked QTensors; ``mask`` is
+    (n,) bool, broadcast over each leaf's trailing axes."""
+    def w(x, y):
+        m = mask.reshape(mask.shape + (1,) * (x.ndim - 1))
+        return jnp.where(m, x, y)
+    meta = None if a.meta is None else \
+        {k: w(a.meta[k], b.meta[k]) for k in a.meta}
+    return hqq.QTensor(w(a.packed, b.packed), w(a.scale, b.scale),
+                       w(a.zero, b.zero), meta, a.bits, a.group_size,
+                       a.shape)
+
+
+def pe_where_rows(mask, a: PackedExperts, b: PackedExperts) -> PackedExperts:
+    return PackedExperts(*(_qt_where_rows(mask, x, y) for x, y in zip(a, b)))
+
+
+def _pe_set_row(pe: PackedExperts, l, mask: jnp.ndarray,
+                new_row: PackedExperts) -> PackedExperts:
+    """Write layer ``l``'s whole (S, ...) row of a tier in one update,
+    keeping old contents where ``mask`` (S,) is False."""
+    def upd(qt: hqq.QTensor, sub: hqq.QTensor) -> hqq.QTensor:
+        def u(a, v):
+            m = mask.reshape(mask.shape + (1,) * (v.ndim - 1))
+            return a.at[l].set(jnp.where(m, v, a[l]))
+        meta = None if qt.meta is None else \
+            {k: u(qt.meta[k], sub.meta[k]) for k in qt.meta}
+        return hqq.QTensor(u(qt.packed, sub.packed), u(qt.scale, sub.scale),
+                           u(qt.zero, sub.zero), meta, qt.bits,
+                           qt.group_size, qt.shape)
+    return PackedExperts(*(upd(qt, sq) for qt, sq in zip(pe, new_row)))
+
+
 # ----------------------------------------------------------------------
 def acquire(store: PackedExperts, st: PoolState, l, ids: jnp.ndarray,
-            active: Optional[jnp.ndarray] = None
-            ) -> Tuple[PoolState, PackedExperts]:
+            active: Optional[jnp.ndarray] = None, *,
+            vectorized: bool = True) -> Tuple[PoolState, PackedExperts]:
     """Serve layer ``l``'s routed experts ``ids`` (T, K) from its buffer
     pool, performing the slot swaps the LRU state machine decides.
 
@@ -237,7 +287,62 @@ def acquire(store: PackedExperts, st: PoolState, l, ids: jnp.ndarray,
     ``active`` (T,) bool masks rows whose output is discarded (free slots
     of a continuous-batching batch): they bypass the cache entirely —
     weights straight from the host store, no state change, no accounting.
+
+    ``vectorized`` (default) performs all swaps as one batched
+    gather/scatter over the whole-batch plan (DESIGN.md §7);
+    ``vectorized=False`` is the PR-2 per-(token, k) sequential data plane,
+    kept as the measured baseline of ``benchmarks/offload_bench.py``.
+    Both are bitwise-identical (tested).
     """
+    if vectorized:
+        return _acquire_vectorized(store, st, l, ids, active)
+    return _acquire_unrolled(store, st, l, ids, active)
+
+
+def _acquire_vectorized(store: PackedExperts, st: PoolState, l,
+                        ids: jnp.ndarray,
+                        active: Optional[jnp.ndarray] = None
+                        ) -> Tuple[PoolState, PackedExperts]:
+    """One-gather/one-scatter data plane (DESIGN.md §7).
+
+    The state machine plans the whole batch (:func:`~repro.core.lru_cache.
+    access_plan_batch`); the pool row is then rewritten in ONE masked
+    scatter — every written slot receives the store bytes of the expert
+    the final LRU table says lives there, which is exactly what the
+    sequential swap sequence leaves behind (slot contents are a function
+    of the final ``cache_ids``, the coherence invariant §6 tests) — and
+    the served weights come from ONE batched gather: pool slots for
+    accesses that survive the batch, host store for the rest (bitwise
+    identical either way, since a pool slot always holds its expert's
+    store bytes).
+    """
+    T, K = ids.shape
+    lru = LC.layer_slice(st.lru, l)
+    new_lru, delta, plan = LC.access_plan_batch(lru, ids, active)
+    # scatter: rewrite the written pool slots from the store in one update
+    safe_ids = jnp.clip(new_lru.cache_ids, 0, store.n_slots - 1)
+    pool = _pe_set_row(st.pool, l, plan.written,
+                       pe_gather(store, l, safe_ids))
+    # gather: serve every access from its pool slot when it survived the
+    # batch, else from the store (access-time capture)
+    flat = ids.reshape(T * K)
+    from_pool = pe_gather(pool, l, plan.slots.reshape(T * K))
+    from_store = pe_gather(store, l, flat)
+    served = pe_where_rows(plan.survives.reshape(T * K),
+                           from_pool, from_store)
+    st = PoolState(LC.set_layer(st.lru, l, new_lru), pool, st.staging,
+                   st.counts + delta)
+    return st, served
+
+
+def _acquire_unrolled(store: PackedExperts, st: PoolState, l,
+                      ids: jnp.ndarray,
+                      active: Optional[jnp.ndarray] = None
+                      ) -> Tuple[PoolState, PackedExperts]:
+    """PR-2 sequential data plane: T*K full-tensor where/set updates plus
+    a ``pe_stack`` of per-access weight copies.  Kept (unused by the
+    engines) as the synchronous baseline ``benchmarks/offload_bench.py``
+    measures the vectorized plane against."""
     T, K = ids.shape
     lru = LC.layer_slice(st.lru, l)
     pool, staging = st.pool, st.staging
@@ -273,7 +378,7 @@ def acquire(store: PackedExperts, st: PoolState, l, ids: jnp.ndarray,
 
 
 def stage(store: PackedExperts, st: PoolState, tgt, predicted: jnp.ndarray,
-          valid) -> PoolState:
+          valid, *, vectorized: bool = True) -> PoolState:
     """Stage ``predicted`` (n_spec,) experts into layer ``tgt``'s staging
     buffers (the paper's speculative prefetch, fired while the current
     layer computes).  ``valid`` gates the whole update (False when the
@@ -281,6 +386,12 @@ def stage(store: PackedExperts, st: PoolState, tgt, predicted: jnp.ndarray,
     per :func:`~repro.core.lru_cache.stage_plan`: residents copy
     device-locally (pool slot / previous staging buffer), everything else
     streams from the host store — only those count as transfers.
+
+    ``vectorized`` (default) fills the whole staging row with one gather
+    (DESIGN.md §7); ``vectorized=False`` is the PR-2 per-buffer loop,
+    kept for the offload benchmark's baseline.  Bitwise identical: every
+    staged buffer ends up holding its prediction's store bytes whichever
+    resident tier the sequential plane copies them from.
     """
     n_spec = predicted.shape[0]
     if n_spec == 0:
@@ -289,16 +400,26 @@ def stage(store: PackedExperts, st: PoolState, tgt, predicted: jnp.ndarray,
     tgt_c = jnp.clip(tgt, 0, L - 1)
     lru = LC.layer_slice(st.lru, tgt_c)
     new_lru, plan, transfers = LC.stage_plan(lru, predicted)
-    old_staging = st.staging  # pre-update contents: sources stay intact
-    staging = st.staging
-    for j in range(n_spec):
-        content = _pe_where(
-            plan.in_cache[j], st.pool.slice(tgt_c, plan.cache_slot[j]),
-            _pe_where(plan.in_old_spec[j],
-                      old_staging.slice(tgt_c, plan.old_spec_slot[j]),
-                      store.slice(tgt_c, predicted[j])))
-        keep = old_staging.slice(tgt_c, j)
-        staging = _pe_set(staging, tgt_c, j, _pe_where(valid, content, keep))
+    if vectorized:
+        # one gather fills the whole staging row with the predictions'
+        # store bytes (== whatever resident tier the sequential plane
+        # would have copied them from)
+        fill = pe_gather(store, tgt_c,
+                         jnp.clip(predicted, 0, store.n_slots - 1))
+        mask = jnp.broadcast_to(jnp.asarray(valid), (n_spec,))
+        staging = _pe_set_row(st.staging, tgt_c, mask, fill)
+    else:
+        old_staging = st.staging  # pre-update contents: sources intact
+        staging = st.staging
+        for j in range(n_spec):
+            content = _pe_where(
+                plan.in_cache[j], st.pool.slice(tgt_c, plan.cache_slot[j]),
+                _pe_where(plan.in_old_spec[j],
+                          old_staging.slice(tgt_c, plan.old_spec_slot[j]),
+                          store.slice(tgt_c, predicted[j])))
+            keep = old_staging.slice(tgt_c, j)
+            staging = _pe_set(staging, tgt_c, j,
+                              _pe_where(valid, content, keep))
     new_lru = jax.tree.map(lambda n, o: jnp.where(valid, n, o), new_lru, lru)
     counts = st.counts + jnp.where(valid, transfers, 0) * \
         jnp.asarray([0, 0, 0, 1], jnp.int32)

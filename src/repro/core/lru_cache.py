@@ -33,7 +33,7 @@ The slot index into ``cache_ids`` IS the device-pool slot index.
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -146,6 +146,71 @@ def access(state: LayerCacheState, needed: jnp.ndarray
     """Serve ``needed`` (K,) int32 expert ids for one layer, one token."""
     new, stats, _ = access_plan(state, needed)
     return new, stats
+
+
+class BatchAccessPlan(NamedTuple):
+    """Whole-batch slot decisions of one :func:`access_plan_batch` call
+    (DESIGN.md §7) — everything a buffer pool needs to perform ALL of a
+    batch's swaps as one gather/scatter instead of T*K sequential updates.
+
+    ``slots[t, j]`` is the pool slot serving access (t, j) *at access
+    time*; ``survives[t, j]`` says whether that expert still owns a pool
+    slot after the whole batch (False when a later access within the same
+    batch evicted it — those reads must fall back to the source store);
+    ``written[s]`` marks pool slots whose contents changed (some active
+    access inserted into them), i.e. the scatter targets.
+    """
+
+    slots: jnp.ndarray     # (T, K) int32
+    survives: jnp.ndarray  # (T, K) bool
+    written: jnp.ndarray   # (k,) bool
+
+
+def access_plan_batch(state: LayerCacheState, needed: jnp.ndarray,
+                      active: Optional[jnp.ndarray] = None
+                      ) -> Tuple[LayerCacheState, jnp.ndarray,
+                                 BatchAccessPlan]:
+    """Serve a whole batch ``needed`` (T, K) of routed experts through the
+    LRU state machine in one call, folding the per-token ``active`` mask
+    (continuous batching: inactive rows must not mutate state or counts)
+    into the plan itself.
+
+    Returns ``(new_state, delta, plan)`` where ``delta`` is a (4,) i32
+    [hits, spec_hits, demand_loads, 0] counter delta over the *active*
+    tokens and ``plan`` is the :class:`BatchAccessPlan`.  The state
+    transitions are exactly T sequential :func:`access_plan` calls — the
+    int state machine stays a (cheap) host-unrolled loop; what this
+    batched form buys is that the *data plane* consumes one plan instead
+    of T*K full-tensor updates (``core/expert_pool.acquire``).
+    """
+    T, K = needed.shape
+    k = state.cache_ids.shape[0]
+    lru = state
+    delta = jnp.zeros((4,), jnp.int32)
+    written = jnp.zeros((k,), bool)
+    slots_all = []
+    for t in range(T):  # T is static (batch slots)
+        act = None if active is None else active[t]
+        new_lru, stats, plan = access_plan(lru, needed[t])
+        d = jnp.stack([stats.hits, stats.spec_hits, stats.demand_loads,
+                       jnp.zeros((), jnp.int32)])
+        inserts = ~plan.in_cache  # spec hit or demand miss -> slot write
+        if act is not None:
+            new_lru = jax.tree.map(lambda n, o: jnp.where(act, n, o),
+                                   new_lru, lru)
+            d = jnp.where(act, d, 0)
+            inserts = inserts & act
+        written = written | jnp.any(
+            (plan.slots[:, None] == jnp.arange(k)) & inserts[:, None],
+            axis=0)
+        slots_all.append(plan.slots)
+        delta = delta + d
+        lru = new_lru
+    slots = jnp.stack(slots_all)  # (T, K)
+    # an access survives iff the expert it served still owns its slot
+    # after the whole batch (later evictions within the batch steal it)
+    survives = lru.cache_ids[slots] == needed
+    return lru, delta, BatchAccessPlan(slots, survives, written)
 
 
 class StagePlan(NamedTuple):

@@ -146,12 +146,16 @@ class ExpertUsageTracker:
 
     def overlap(self, pred_ids_per_layer) -> float:
         """Score a candidate's predicted expert set against the in-flight
-        histogram: expected fraction of its expert hits already hot."""
+        histogram: expected fraction of its expert hits already hot.
+        Normalized by the layers actually scored — a candidate supplying
+        more prediction lists than the tracker holds layers must not have
+        its score deflated by the unscored surplus."""
         hist = self.normalized()
         score = 0.0
-        for l, ids in enumerate(pred_ids_per_layer[: self.n_layers]):
+        scored = pred_ids_per_layer[: self.n_layers]
+        for l, ids in enumerate(scored):
             score += float(hist[l, np.asarray(ids, np.int64).ravel()].sum())
-        return score / max(1, len(pred_ids_per_layer))
+        return score / max(1, len(scored))
 
 
 # ----------------------------------------------------------------------
@@ -235,7 +239,7 @@ def quantize_for_offload(params, cfg: ModelConfig, spec: OffloadSpec, *,
 class PackedDecoder:
     """Layer-wise executor for a model whose MoE experts live HQQ-packed
     in a host store and stream through per-layer device buffer pools
-    (DESIGN.md §6).
+    (DESIGN.md §6/§7).
 
     Decode (and prefill) run one block at a time through per-kind jitted
     functions instead of the scanned ``T.decode_step``: the pool state
@@ -246,15 +250,31 @@ class PackedDecoder:
     ``tests/test_offload.py``).  Both decode state and prefill output use
     the standard stacked layouts, so serving engines can swap this in for
     their jitted step (``ContinuousEngine(offload=...)``).
+
+    ``pipelined=True`` (default) runs the overlap-pipelined stream
+    (DESIGN.md §7): each MoE block is split into a mixer dispatch (no
+    pool state), a MoE dispatch (route + ``acquire`` + packed compute —
+    the fence), and an asynchronously dispatched *staging* step for the
+    lookahead layer, so the speculative host->device copies execute
+    while the next block's mixer computes.  ``pipelined=False`` is the
+    PR-2 synchronous shape — one jitted program per block with staging
+    serialized inside it — kept as the baseline
+    ``benchmarks/offload_bench.py`` measures against.  Both modes are
+    bitwise-identical (staging commutes with the next layers' compute:
+    it touches only the lookahead layer's staging tier, and counter
+    updates are commutative adds).
     """
 
     def __init__(self, params, cfg: ModelConfig, spec: OffloadSpec,
-                 store: EP.PackedExperts, *, fused: bool = True):
+                 store: EP.PackedExperts, *, fused: bool = True,
+                 pipelined: bool = True, vectorized: bool = True):
         self.cfg = cfg
         self.spec = spec
         self.store = store
         self.params = params
         self.fused = fused
+        self.pipelined = pipelined
+        self.vectorized = vectorized
         self.routers = jnp.asarray(stacked_routers(params, cfg))
         self.n_moe_layers = int(self.routers.shape[0])
         self.kinds = cfg.layer_kinds()
@@ -266,8 +286,15 @@ class PackedDecoder:
                 self.moe_ordinal[l] = len(self.moe_ordinal)
         self._layer_p = [T.layer_params(params, cfg, l)
                          for l in range(cfg.n_layers)]
-        self._jit_embed = jax.jit(lambda p, t: T.embed_tokens(p, cfg, t))
-        self._jit_head = jax.jit(lambda p, x: T.apply_head(p, cfg, x))
+        self._jit_embed = T.cached_jit(
+            ("embed", cfg), lambda: jax.jit(
+                lambda p, t: T.embed_tokens(p, cfg, t)))
+        self._jit_head = T.cached_jit(
+            ("head", cfg), lambda: jax.jit(
+                lambda p, x: T.apply_head(p, cfg, x)))
+        # mode key: packed-block executables are shared across decoder
+        # instances with identical config+flags (tier-1 runtime guard)
+        self._mode = (cfg, spec, fused, pipelined, vectorized)
         self._blk: Dict[str, object] = {}
         self._pre: Dict[tuple, object] = {}
 
@@ -277,36 +304,117 @@ class PackedDecoder:
     # ------------------------------------------------------------------
     def _decode_blk(self, kind: str):
         if kind not in self._blk:
+            # locals only in the closures: a `self` capture would pin the
+            # whole engine (params + store) in the process-wide jit cache
             cfg, spec = self.cfg, self.spec
+            fused, vectorized = self.fused, self.vectorized
             if parse_block(kind)[1] == "moe":
-                fn = lambda p, x, st, pos, store, ps, lm, routers, act: \
-                    T.decode_block_packed(
-                        p, cfg, kind, x, st, pos, store, ps, lm, routers,
-                        lookahead=spec.lookahead,
-                        n_spec=spec.num_speculative, fused=self.fused,
-                        active=act)
-                self._blk[kind] = jax.jit(fn, donate_argnums=(5,))
+                def make():
+                    fn = lambda p, x, st, pos, store, ps, lm, routers, \
+                        act: T.decode_block_packed(
+                            p, cfg, kind, x, st, pos, store, ps, lm,
+                            routers, lookahead=spec.lookahead,
+                            n_spec=spec.num_speculative, fused=fused,
+                            active=act, vectorized=vectorized)
+                    return jax.jit(fn, donate_argnums=(5,))
+                key = ("packed_blk", self._mode, kind)
             else:
-                fn = lambda p, x, st, pos: T._block_decode(
-                    p, cfg, kind, x, st, pos, moe_mode="gather")
-                self._blk[kind] = jax.jit(fn)
+                def make():
+                    fn = lambda p, x, st, pos: T._block_decode(
+                        p, cfg, kind, x, st, pos, moe_mode="gather")
+                    return jax.jit(fn)
+                # a non-MoE block's program depends only on (cfg, kind) —
+                # identical across offload modes
+                key = ("packed_blk_plain", cfg, kind)
+            self._blk[kind] = T.cached_jit(key, make)
         return self._blk[kind]
+
+    # --- pipelined dispatches (DESIGN.md §7) --------------------------
+    # resolved once into instance attrs: the global cached_jit lookup
+    # hashes cfg/spec tuples, too costly per layer per decoded token
+    def _mixer_blk(self, kind: str):
+        key = ("mixer", kind)
+        if key not in self._blk:
+            cfg = self.cfg
+            self._blk[key] = T.cached_jit(
+                ("packed_mixer", cfg, kind),
+                lambda: jax.jit(
+                    lambda p, x, st, pos: T.decode_block_packed_mixer(
+                        p, cfg, kind, x, st, pos)))
+        return self._blk[key]
+
+    def _moe_blk(self):
+        if "moe_ffn" not in self._blk:
+            cfg = self.cfg
+            fused, vectorized = self.fused, self.vectorized
+
+            def make():
+                fn = lambda p, x, h2, store, ps, lm, act: \
+                    T.decode_block_packed_moe(
+                        p, cfg, x, h2, store, ps, lm, fused=fused,
+                        vectorized=vectorized, active=act)
+                return jax.jit(fn, donate_argnums=(4,))
+            self._blk["moe_ffn"] = T.cached_jit(("packed_moe", self._mode),
+                                                make)
+        return self._blk["moe_ffn"]
+
+    def _stage_blk(self):
+        if "stage" not in self._blk:
+            n_spec = self.spec.num_speculative
+            vectorized = self.vectorized
+
+            def make():
+                def fn(store, ps, tgt, hidden, routers):
+                    pred = speculative.predict_experts(
+                        routers[tgt], hidden, n_spec)[0]
+                    return EP.stage(store, ps, tgt, pred, True,
+                                    vectorized=vectorized)
+                return jax.jit(fn, donate_argnums=(1,))
+            self._blk["stage"] = T.cached_jit(("packed_stage", self._mode),
+                                              make)
+        return self._blk["stage"]
 
     def decode(self, state, tokens, pstate: EP.PoolState, active=None):
         """One token for every row: layerwise ``decode_step`` with MoE
         served from the buffer pool.  Returns
-        (logits, state', pstate', route_ids per MoE layer)."""
+        (logits, state', pstate', route_ids per MoE layer).
+
+        Pipelined mode dispatch stream per MoE block (DESIGN.md §7):
+        ``mixer(l)`` -> ``moe(l)`` (fences on the pool state, consuming
+        any staging still in flight) -> ``stage(l+lookahead)`` — the
+        staging call is dispatched asynchronously (JAX async dispatch)
+        and only the *state machine* chains it, so the next block's
+        mixer/attention overlaps the speculative transfer."""
         cfg = self.cfg
         x = self._jit_embed(self.params, tokens)
         pos = state["pos"]
+        B = int(tokens.shape[0])
+        # speculation is the paper's batch-1 interactive feature (batched
+        # continuous decode disables it) — same gate the synchronous
+        # block applies inside jit via moe_apply_packed's T == 1 check
+        speculate = (self.pipelined and self.spec.num_speculative > 0
+                     and B * int(tokens.shape[1]) == 1)
         route_ids = []
         for l, kind in enumerate(self.kinds):
             st_l = T.decode_state_layer(state, cfg, l)
             if l in self.moe_ordinal:
-                x, st_l, pstate, info = self._decode_blk(kind)(
-                    self._layer_p[l], x, st_l, pos, self.store, pstate,
-                    jnp.asarray(self.moe_ordinal[l], jnp.int32),
-                    self.routers, active)
+                lm = jnp.asarray(self.moe_ordinal[l], jnp.int32)
+                if self.pipelined:
+                    x, st_l, h2 = self._mixer_blk(kind)(
+                        self._layer_p[l], x, st_l, pos)
+                    x, pstate, info = self._moe_blk()(
+                        self._layer_p[l], x, h2, self.store, pstate, lm,
+                        active)
+                    tgt = self.moe_ordinal[l] + self.spec.lookahead
+                    if speculate and tgt < self.n_moe_layers:
+                        pstate = self._stage_blk()(
+                            self.store, pstate,
+                            jnp.asarray(tgt, jnp.int32),
+                            info["hidden_pre_moe"], self.routers)
+                else:
+                    x, st_l, pstate, info = self._decode_blk(kind)(
+                        self._layer_p[l], x, st_l, pos, self.store, pstate,
+                        lm, self.routers, active)
                 route_ids.append(info["route"]["ids"])
             else:
                 x, st_l, _ = self._decode_blk(kind)(
@@ -321,18 +429,22 @@ class PackedDecoder:
         key = (kind, S, max_len, has_mask)
         if key not in self._pre:
             cfg = self.cfg
-            if parse_block(kind)[1] == "moe":
-                def fn(p, x, positions, store, lm, pad_mask):
-                    return T._block_train(
-                        p, cfg, kind, x, positions, want_state=True,
-                        max_len=max_len, pad_mask=pad_mask,
-                        moe_ffn_fn=M.packed_expert_ffn(store, lm, cfg))
-            else:
-                def fn(p, x, positions, store, lm, pad_mask):
-                    return T._block_train(
-                        p, cfg, kind, x, positions, want_state=True,
-                        max_len=max_len, pad_mask=pad_mask)
-            self._pre[key] = jax.jit(fn)
+
+            def make():
+                if parse_block(kind)[1] == "moe":
+                    def fn(p, x, positions, store, lm, pad_mask):
+                        return T._block_train(
+                            p, cfg, kind, x, positions, want_state=True,
+                            max_len=max_len, pad_mask=pad_mask,
+                            moe_ffn_fn=M.packed_expert_ffn(store, lm, cfg))
+                else:
+                    def fn(p, x, positions, store, lm, pad_mask):
+                        return T._block_train(
+                            p, cfg, kind, x, positions, want_state=True,
+                            max_len=max_len, pad_mask=pad_mask)
+                return jax.jit(fn)
+            self._pre[key] = T.cached_jit(("packed_prefill", cfg) + key,
+                                          make)
         return self._pre[key]
 
     def prefill(self, batch, max_len: int):
@@ -383,7 +495,8 @@ class OffloadEngine:
 
     def __init__(self, params, cfg: ModelConfig,
                  spec: Optional[OffloadSpec] = None, quantized: bool = False,
-                 *, packed: Optional[bool] = None, fused: bool = True):
+                 *, packed: Optional[bool] = None, fused: bool = True,
+                 pipelined: bool = True, vectorized: bool = True):
         assert cfg.moe is not None, "offloading targets MoE architectures"
         self.cfg = cfg
         self.spec = spec or cfg.offload or OffloadSpec()
@@ -407,7 +520,8 @@ class OffloadEngine:
         self.n_moe_layers = self.routers.shape[0]
         if self.packed:
             self._decoder = PackedDecoder(params, cfg, self.spec, self.store,
-                                          fused=fused)
+                                          fused=fused, pipelined=pipelined,
+                                          vectorized=vectorized)
             # measured: what one demand load / prefetch actually copies
             self.expert_bytes = EP.per_expert_nbytes(self.store)
         else:
@@ -415,8 +529,10 @@ class OffloadEngine:
                 self.spec.expert_bits if quantized else 16]
             self.expert_bytes = (cost_model.expert_param_count(cfg)
                                  * eff_bits / 8.0)
-            self._step = jax.jit(lambda p, st, tk: T.decode_step(
-                p, cfg, st, tk, moe_mode="gather", collect_info=True))
+            self._step = T.cached_jit(
+                ("decode_gather_info", cfg),
+                lambda: jax.jit(lambda p, st, tk: T.decode_step(
+                    p, cfg, st, tk, moe_mode="gather", collect_info=True)))
             self._prefill = T.make_prefill(cfg)
         # live routing histogram, readable by serving-admission policies
         self.usage = ExpertUsageTracker(self.n_moe_layers,
@@ -429,7 +545,11 @@ class OffloadEngine:
         """prompt: (1, S) int32.  Returns (generated (1, n), stats).
 
         Packed engines really perform the slot swaps (stats are measured
-        copies); accounting engines replay routing through PyLRU."""
+        copies); accounting engines replay routing through PyLRU.
+        ``greedy=False`` samples from the logits; ``rng`` may be omitted,
+        in which case a fixed seeded key is used (reproducible runs)."""
+        if not greedy and rng is None:
+            rng = jax.random.key(0)  # seeded default, not a crash in split
         if self._decoder is not None:
             return self._generate_packed(prompt, max_new_tokens,
                                          greedy=greedy, rng=rng)
@@ -531,11 +651,13 @@ class OffloadEngine:
 def generate_plain(params, cfg: ModelConfig, prompt: np.ndarray,
                    max_new_tokens: int) -> np.ndarray:
     """Greedy decode without any offload bookkeeping (parity oracle)."""
-    step = jax.jit(lambda p, st, tk: T.decode_step(p, cfg, st, tk,
-                                                   moe_mode="gather"))
+    step = T.cached_jit(
+        ("decode_gather", cfg),
+        lambda: jax.jit(lambda p, st, tk: T.decode_step(
+            p, cfg, st, tk, moe_mode="gather")))
     max_len = prompt.shape[1] + max_new_tokens
-    pre_logits, state = jax.jit(lambda p, b: T.prefill(p, cfg, b, max_len))(
-        params, {"tokens": jnp.asarray(prompt)})
+    pre_logits, state = T.make_prefill(cfg)(
+        params, {"tokens": jnp.asarray(prompt)}, max_len)
     first = jnp.argmax(pre_logits[:, -1], axis=-1)
     out = [int(first[0])]
     tok = first[:, None].astype(jnp.int32)

@@ -29,6 +29,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.quant.hqq import unpack_codes
 
@@ -80,3 +81,103 @@ def dequant_matmul_pallas(x, packed, scale, zero, *, bits, group_size,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         interpret=interpret,
     )(x, packed, scale, zero)
+
+
+# ----------------------------------------------------------------------
+# Batched / slot-gather variants (DESIGN.md §7): the compute side of the
+# vectorized packed-expert data plane.  One kernel launch covers every
+# (token, k) pair of an MoE layer's batch instead of T*K separate calls.
+def _batched_kernel(x_ref, p_ref, s_ref, z_ref, o_ref, *, bits, group_size):
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0]  # (bm, bk)
+    packed = p_ref[0]  # (gb, g*bits//8, bn)
+    scale = s_ref[0].astype(jnp.float32)
+    zero = z_ref[0].astype(jnp.float32)
+    q = unpack_codes(packed, bits, group_size).astype(jnp.float32)
+    w = ((q - zero) * scale).reshape(x.shape[1], -1)  # (bk, bn)
+    o_ref[0] += jnp.dot(x.astype(jnp.float32), w,
+                        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "bm",
+                                             "bn", "bk", "interpret"))
+def dequant_matmul_batched_pallas(x, packed, scale, zero, *, bits,
+                                  group_size, bm=128, bn=128, bk=128,
+                                  interpret=True):
+    """x (B, M, K) @ per-row packed W (B, G, g*bits//8, N) -> (B, M, N)."""
+    B, M, K = x.shape
+    _, G, pg, N = packed.shape
+    assert G * group_size == K
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert bk % group_size == 0 and K % bk == 0 and M % bm == 0 \
+        and N % bn == 0
+    gb = bk // group_size
+    grid = (B, M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_batched_kernel, bits=bits, group_size=group_size),
+        out_shape=jax.ShapeDtypeStruct((B, M, N), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda b, i, j, k: (b, i, k)),
+            pl.BlockSpec((1, gb, pg, bn), lambda b, i, j, k: (b, k, 0, j)),
+            pl.BlockSpec((1, gb, 1, bn), lambda b, i, j, k: (b, k, 0, j)),
+            pl.BlockSpec((1, gb, 1, bn), lambda b, i, j, k: (b, k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j)),
+        interpret=interpret,
+    )(x, packed, scale, zero)
+
+
+def _slots_kernel(slots_ref, x_ref, p_ref, s_ref, z_ref, o_ref, *, bits,
+                  group_size):
+    del slots_ref  # consumed by the index maps (scalar prefetch)
+    _batched_kernel(x_ref, p_ref, s_ref, z_ref, o_ref, bits=bits,
+                    group_size=group_size)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "bm",
+                                             "bn", "bk", "interpret"))
+def dequant_matmul_slots_pallas(x, packed, scale, zero, slots, *, bits,
+                                group_size, bm=128, bn=128, bk=128,
+                                interpret=True):
+    """x (B, M, K) @ dequant(W[slots[b]]) -> (B, M, N) where the packed
+    weight tier W (S, G, g*bits//8, N) stays whole: ``slots`` (B,) int32
+    rides in as a scalar-prefetch argument and the *index maps* pick each
+    program's source block, so the gather happens inside the kernel's DMA
+    schedule — no gathered copy of the packed tier is ever materialized
+    (the slot-serving read of the vectorized expert pool, DESIGN.md §7).
+    """
+    B, M, K = x.shape
+    S, G, pg, N = packed.shape
+    assert G * group_size == K
+    assert slots.shape == (B,)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert bk % group_size == 0 and K % bk == 0 and M % bm == 0 \
+        and N % bn == 0
+    gb = bk // group_size
+    grid = (B, M // bm, N // bn, K // bk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda b, i, j, k, sl: (b, i, k)),
+            pl.BlockSpec((1, gb, pg, bn),
+                         lambda b, i, j, k, sl: (sl[b], k, 0, j)),
+            pl.BlockSpec((1, gb, 1, bn),
+                         lambda b, i, j, k, sl: (sl[b], k, 0, j)),
+            pl.BlockSpec((1, gb, 1, bn),
+                         lambda b, i, j, k, sl: (sl[b], k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, k, sl: (b, i, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_slots_kernel, bits=bits, group_size=group_size),
+        out_shape=jax.ShapeDtypeStruct((B, M, N), jnp.float32),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(slots.astype(jnp.int32), x, packed, scale, zero)

@@ -35,7 +35,24 @@ from repro.serving.engine import Request, ServeEngine
 from repro.serving.sampler import SamplerConfig
 
 
-def main():
+def resolve_offload_spec(spec, cache_size=None, num_speculative=None):
+    """Overlay CLI offload overrides on an arch's :class:`OffloadSpec`.
+
+    ``None`` means "flag not given"; 0 is a real value — the paper's k=0
+    (no cache) and no-speculation ablations must not silently fall back
+    to the arch defaults (``args.cache_size or spec.cache_size`` did
+    exactly that — regression-tested in ``tests/test_serve_cli.py``).
+    """
+    if cache_size is None and num_speculative is None:
+        return spec
+    return dataclasses.replace(
+        spec,
+        cache_size=spec.cache_size if cache_size is None else cache_size,
+        num_speculative=(spec.num_speculative if num_speculative is None
+                         else num_speculative))
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny-moe", choices=list_archs())
     ap.add_argument("--checkpoint", default=None)
@@ -57,7 +74,11 @@ def main():
     ap.add_argument("--sampler", default="greedy",
                     choices=["greedy", "categorical", "topk"])
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     cfg = get_config(args.arch)
     if cfg.vocab_size > 100_000 or cfg.d_model > 1024:
@@ -80,12 +101,8 @@ def main():
                              "technique needs routed experts); dense archs "
                              "use naive streaming — see DESIGN.md §5")
         from repro.configs.base import OffloadSpec
-        spec = cfg.offload or OffloadSpec()
-        if args.cache_size or args.num_speculative:
-            spec = dataclasses.replace(
-                spec,
-                cache_size=args.cache_size or spec.cache_size,
-                num_speculative=args.num_speculative or spec.num_speculative)
+        spec = resolve_offload_spec(cfg.offload or OffloadSpec(),
+                                    args.cache_size, args.num_speculative)
         eng = OffloadEngine(params, cfg, spec, quantized=args.quantize)
         if args.continuous:
             # continuous + offloaded decode compose (DESIGN.md §6); the

@@ -237,24 +237,32 @@ def moe_apply_gather(p, cfg, x2d, experts_override=None):
 # ----------------------------------------------------------------------
 def moe_apply_packed(p, cfg, x2d, store, pstate, l, routers=None, *,
                      lookahead: int = 1, n_spec: int = 0, fused: bool = True,
-                     active=None):
-    """Offloaded-decode MoE over HQQ-packed weights (DESIGN.md §6).
+                     active=None, vectorized: bool = True):
+    """Offloaded-decode MoE over HQQ-packed weights (DESIGN.md §6/§7).
 
     The routed experts of layer ``l`` are served from the per-layer device
     buffer pool (``core/expert_pool.acquire`` performs the LRU slot swaps
     and host-store gathers the state machine decides), then computed
     straight from the packed slot contents:
 
-    * ``fused=True`` — each (token, k) pair runs the fused
-      dequant-matmul (``kernels/ops.dequant_matmul``: Pallas kernel when
-      shapes/bits tile, pure-jnp reference otherwise).
-    * ``fused=False`` — per-slot dequantization assembled into exactly
+    * ``fused=True`` — the whole batch of (token, k) expert matmuls runs
+      as ONE fused dequant-matmul dispatch
+      (``kernels/ops.dequant_matmul_batched``: Pallas kernel when
+      shapes/bits tile, batched jnp reference otherwise).
+    * ``fused=False`` — batched dequantization assembled into exactly
       :func:`moe_apply_gather`'s einsums (bitwise-equal by construction).
+
+    ``vectorized=False`` replays the PR-2 data plane — per-(token, k)
+    sequential slot swaps and T*K separate matmul calls — kept only as
+    the measured baseline of ``benchmarks/offload_bench.py``.
 
     After serving layer ``l``, the lookahead layer's likely experts are
     predicted from the *current* hidden state (paper §3.2) and staged into
     its staging buffers — batch-1 interactive decode only, matching the
     paper's setting (batched continuous decode disables speculation).
+    The pipelined decoder (``core/offload_engine.PackedDecoder``) passes
+    ``n_spec=0`` and instead dispatches staging asynchronously *outside*
+    this jitted block (DESIGN.md §7).
 
     ``p`` only needs the router (packed mode strips dense expert stacks
     from the executable params).  Returns ``(y2d, route_info, pstate')``.
@@ -263,12 +271,31 @@ def moe_apply_packed(p, cfg, x2d, store, pstate, l, routers=None, *,
 
     spec_moe = cfg.moe
     w, ids, probs = route_topk(p, spec_moe, x2d)
-    pstate, served = EP.acquire(store, pstate, l, ids, active)
+    pstate, served = EP.acquire(store, pstate, l, ids, active,
+                                vectorized=vectorized)
     T, K = ids.shape
     dt = x2d.dtype
     ddt = jnp.dtype(cfg.dtype)
     act = jax.nn.silu if cfg.mlp_act == "swiglu" else jax.nn.gelu
-    if fused:
+    if vectorized and fused:
+        xk = jnp.repeat(x2d, K, axis=0)[:, None, :]      # (T*K, 1, D)
+        g = ops.dequant_matmul_batched(xk, served.w_gate).astype(dt)
+        u = ops.dequant_matmul_batched(xk, served.w_up).astype(dt)
+        h = act(g.astype(jnp.float32)).astype(dt) * u
+        yk = ops.dequant_matmul_batched(h, served.w_down)  # (T*K, 1, D)
+        y = jnp.einsum("tkd,tk->td", yk.reshape(T, K, -1), w)
+    elif vectorized:
+        dq = lambda qt: hqq.dequantize(qt, ddt).reshape(
+            (T, K) + tuple(qt.shape[1:]))
+        wg = dq(served.w_gate)   # (T, K, D, F)
+        wu = dq(served.w_up)
+        wd = dq(served.w_down)   # (T, K, F, D)
+        g = jnp.einsum("td,tkdf->tkf", x2d, wg)
+        u = jnp.einsum("td,tkdf->tkf", x2d, wu)
+        h = act(g.astype(jnp.float32)).astype(dt) * u
+        yk = jnp.einsum("tkf,tkfd->tkd", h, wd)
+        y = jnp.einsum("tkd,tk->td", yk.astype(jnp.float32), w)
+    elif fused:
         yk_rows = []
         for t in range(T):
             xt = x2d[t:t + 1]
@@ -297,7 +324,8 @@ def moe_apply_packed(p, cfg, x2d, store, pstate, l, routers=None, *,
         L = store.n_layers
         pred = speculative.predict_experts(
             routers[jnp.clip(tgt, 0, L - 1)], x2d, n_spec)[0]
-        pstate = EP.stage(store, pstate, tgt, pred, tgt < L)
+        pstate = EP.stage(store, pstate, tgt, pred, tgt < L,
+                          vectorized=vectorized)
     return (y.astype(dt), {"ids": ids, "weights": w, "probs": probs},
             pstate)
 

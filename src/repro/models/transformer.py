@@ -279,12 +279,19 @@ def _block_decode(p, cfg: ModelConfig, kind: str, x_t, state, pos, *,
 
 def decode_block_packed(p, cfg: ModelConfig, kind: str, x_t, state, pos,
                         store, pstate, l_moe, routers, *, lookahead: int = 1,
-                        n_spec: int = 0, fused: bool = True, active=None):
+                        n_spec: int = 0, fused: bool = True, active=None,
+                        vectorized: bool = True):
     """One block's decode step with MoE served from the packed expert
     buffer pool — ``moe_mode="packed"`` (DESIGN.md §6).  Identical mixer
     computation to :func:`_block_decode`; the MoE FFN reads HQQ-packed
     slots through :func:`repro.models.moe.moe_apply_packed` and threads
-    the pool state through.  Returns (x_t, state, pstate, info)."""
+    the pool state through.  Returns (x_t, state, pstate, info).
+
+    This is the *synchronous* one-dispatch-per-block form (staging, when
+    ``n_spec > 0``, runs inside the same jitted program as the compute) —
+    the pipelined driver instead splits mixer / MoE / staging into
+    separate dispatches (:func:`decode_block_packed_mixer` /
+    :func:`decode_block_packed_moe`, DESIGN.md §7)."""
     mixer, ffn = parse_block(kind)
     info = {}
     x_t, state = _mixer_decode(p, cfg, kind, x_t, state, pos)
@@ -296,13 +303,42 @@ def decode_block_packed(p, cfg: ModelConfig, kind: str, x_t, state, pos,
             y2d, route, pstate = M.moe_apply_packed(
                 p["moe"], cfg, h2d, store, pstate, l_moe, routers,
                 lookahead=lookahead, n_spec=n_spec, fused=fused,
-                active=active)
+                active=active, vectorized=vectorized)
             info["route"] = route
             info["hidden_pre_moe"] = h2d
         else:
             y2d = L.apply_mlp(p["mlp"], cfg, h2).reshape(B * S, D)
         x_t = x_t + y2d.reshape(B, S, D)
     return x_t, state, pstate, info
+
+
+def decode_block_packed_mixer(p, cfg: ModelConfig, kind: str, x_t, state,
+                              pos):
+    """Mixer half of a packed MoE block's decode step (pipelined driver,
+    DESIGN.md §7): norm1 + mixer + residual plus the pre-MoE norm —
+    everything that does NOT read the expert pool state, so this dispatch
+    can execute while the previous layer's speculative staging transfer
+    is still in flight.  Returns (x_t, state, h2 (B, S, D))."""
+    x_t, state = _mixer_decode(p, cfg, kind, x_t, state, pos)
+    return x_t, state, L.apply_norm(p["norm2"], cfg, x_t)
+
+
+def decode_block_packed_moe(p, cfg: ModelConfig, x_t, h2, store, pstate,
+                            l_moe, *, fused: bool = True,
+                            vectorized: bool = True, active=None):
+    """MoE half of a packed block's decode step (pipelined driver): route
+    + ``acquire`` + packed compute + residual.  The FIRST op that reads
+    the pool state — the fence where the previous layer's asynchronously
+    dispatched staging is consumed (DESIGN.md §7).  Staging itself is NOT
+    performed here (``n_spec=0``); the driver dispatches it separately.
+    Returns (x_t, pstate, info)."""
+    B, S, D = h2.shape
+    h2d = h2.reshape(B * S, D)
+    y2d, route, pstate = M.moe_apply_packed(
+        p["moe"], cfg, h2d, store, pstate, l_moe, None, n_spec=0,
+        fused=fused, active=active, vectorized=vectorized)
+    x_t = x_t + y2d.reshape(B, S, D)
+    return x_t, pstate, {"route": route, "hidden_pre_moe": h2d}
 
 
 # ======================================================================
@@ -481,10 +517,33 @@ def prefill(params, cfg: ModelConfig, batch, max_len: int):
     return logits, state
 
 
+_ENGINE_JIT_CACHE: Dict[Any, Any] = {}
+
+
+def cached_jit(key, make):
+    """Process-wide cache of engine-level jitted callables.
+
+    Engines (serving, offload, oracle decoders) are constructed per
+    test / benchmark pass; per-instance ``jax.jit`` closures would
+    recompile byte-identical programs every time (jax caches by function
+    *object*).  Keying on the (hashable, frozen) config plus mode flags
+    lets every instance share one executable — a large share of the
+    tier-1 suite's runtime was exactly this recompilation (DESIGN.md §7).
+    ``params``/state always ride as call arguments, so nothing model-
+    specific is baked into the cache entry.
+    """
+    if key not in _ENGINE_JIT_CACHE:
+        _ENGINE_JIT_CACHE[key] = make()
+    return _ENGINE_JIT_CACHE[key]
+
+
 def make_prefill(cfg: ModelConfig):
     """Jitted prefill with static ``max_len`` — the one wrapper every
     engine shares: ``fn(params, batch, max_len)``."""
-    return jax.jit(lambda p, b, ml: prefill(p, cfg, b, ml), static_argnums=2)
+    return cached_jit(
+        ("prefill", cfg),
+        lambda: jax.jit(lambda p, b, ml: prefill(p, cfg, b, ml),
+                        static_argnums=2))
 
 
 # ======================================================================

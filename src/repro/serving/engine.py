@@ -55,8 +55,10 @@ class ServeEngine:
         self.params = params
         self.cfg = cfg
         self.sampler = sampler or SamplerConfig(kind="greedy")
-        self._decode = jax.jit(
-            lambda p, st, tk: T.decode_step(p, cfg, st, tk, moe_mode="gather"))
+        self._decode = T.cached_jit(
+            ("decode_gather", cfg),
+            lambda: jax.jit(lambda p, st, tk: T.decode_step(
+                p, cfg, st, tk, moe_mode="gather")))
         # one persistent jit so repeated serve_batch calls with the same
         # shapes reuse the compiled prefill instead of retracing
         self._prefill = T.make_prefill(cfg)
@@ -170,21 +172,29 @@ class ContinuousEngine:
             self._decode = None  # layerwise packed path in step()
             self._prefill = lambda p, b, ml: self._dec.prefill(b, ml)
         else:
-            if self._collect:
-                def _step_fn(p, st, tk):
-                    logits, st, infos = T.decode_step(
-                        p, cfg, st, tk, moe_mode="gather", collect_info=True)
-                    nxt = (jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-                           if self._greedy else logits[:, -1])
-                    return nxt, st, infos
-            else:
-                def _step_fn(p, st, tk):
-                    logits, st = T.decode_step(p, cfg, st, tk,
-                                               moe_mode="gather")
-                    nxt = (jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-                           if self._greedy else logits[:, -1])
-                    return nxt, st
-            self._decode = jax.jit(_step_fn, donate_argnums=1)
+            collect, greedy = self._collect, self._greedy
+
+            def make():
+                if collect:
+                    def _step_fn(p, st, tk):
+                        logits, st, infos = T.decode_step(
+                            p, cfg, st, tk, moe_mode="gather",
+                            collect_info=True)
+                        nxt = (jnp.argmax(logits[:, -1], -1)
+                               .astype(jnp.int32) if greedy
+                               else logits[:, -1])
+                        return nxt, st, infos
+                else:
+                    def _step_fn(p, st, tk):
+                        logits, st = T.decode_step(p, cfg, st, tk,
+                                                   moe_mode="gather")
+                        nxt = (jnp.argmax(logits[:, -1], -1)
+                               .astype(jnp.int32) if greedy
+                               else logits[:, -1])
+                        return nxt, st
+                return jax.jit(_step_fn, donate_argnums=1)
+            self._decode = T.cached_jit(
+                ("cont_step", cfg, collect, greedy), make)
             self._prefill = T.make_prefill(cfg)
         # all-SWA stacks roll their window inside the slot, so a request
         # may decode past slot_len; anything else must fit the slot ring
@@ -324,9 +334,14 @@ class ContinuousEngine:
         if self.offload is not None:
             hits, spec_hits, demand, spec = (
                 int(c) for c in np.asarray(self._pstate.counts))
+            bytes_h2d = (demand + spec) * self.offload.expert_bytes
+            # traffic counters cover every decode step, so normalize by
+            # ALL emitted tokens — still-running requests included
+            emitted = toks + sum(len(r.generated)
+                                 for r in self.sched.running)
             out.update(offload_hits=hits, offload_spec_hits=spec_hits,
                        offload_demand_loads=demand,
                        offload_spec_loads=spec,
-                       offload_bytes_h2d=(demand + spec)
-                       * self.offload.expert_bytes)
+                       offload_bytes_h2d=bytes_h2d,
+                       offload_bytes_per_token=bytes_h2d / max(1, emitted))
         return out

@@ -1,6 +1,8 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the single
 real CPU device; only launch/dryrun.py forces 512 placeholder devices
 (tests that need a mesh spawn dryrun in a subprocess)."""
+import os
+
 import jax
 import numpy as np
 import pytest
@@ -9,6 +11,37 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import transformer as T
+
+# modules whose property tests guard load-bearing invariants (the
+# PyLRU<->state-machine eviction oracle, dispatch==dense, pack/unpack
+# roundtrips); with REPRO_FAIL_ON_SKIP=1 (CI) any skip in them fails
+# the session — an optional-dependency skip must never silently retire
+# those invariants
+PROPERTY_MODULES = ("test_lru.py", "test_moe.py", "test_quant.py",
+                    "test_recurrent.py")
+_skipped_property_tests = []
+
+
+def pytest_runtest_logreport(report):
+    mod = report.nodeid.split("::")[0].rsplit("/", 1)[-1]
+    if report.skipped and mod in PROPERTY_MODULES:
+        _skipped_property_tests.append(report.nodeid)
+
+
+def pytest_collectreport(report):
+    # a module-level importorskip surfaces as a *collection* skip
+    mod = str(report.nodeid).split("::")[0].rsplit("/", 1)[-1]
+    if report.skipped and mod in PROPERTY_MODULES:
+        _skipped_property_tests.append(report.nodeid)
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if os.environ.get("REPRO_FAIL_ON_SKIP") and _skipped_property_tests:
+        print("\n[conftest] REPRO_FAIL_ON_SKIP=1: property-test modules "
+              "reported skips (invariants not verified):")
+        for nid in _skipped_property_tests:
+            print(f"  SKIPPED {nid}")
+        session.exitstatus = 1
 
 
 @pytest.fixture(autouse=True)

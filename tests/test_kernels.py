@@ -53,6 +53,50 @@ def test_dequant_matmul_3bit_fallback():
                                rtol=1e-5, atol=1e-5)
 
 
+# ----------------------------------------------------------------------
+# batched / slot-gather variants (DESIGN.md §7)
+def _stacked_qt(S, K, N, bits, seed=0):
+    w = jax.random.normal(jax.random.key(seed), (S, K, N)) * 0.05
+    return w, hqq.quantize(w, bits, group_size=64, scale_group=None)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("B,M,K,N", [(4, 8, 128, 128), (6, 1, 128, 256)])
+def test_dequant_matmul_batched_matches_per_slice(bits, B, M, K, N):
+    """One batched dispatch == B per-slice dequant_matmul calls, bitwise
+    (the packed MoE path's compile-time/dispatch win must be free)."""
+    w, qt = _stacked_qt(B, K, N, bits)
+    x = jax.random.normal(jax.random.key(1), (B, M, K))
+    y = ops.dequant_matmul_batched(x, qt)
+    y_ref = jnp.stack([ops.dequant_matmul(x[b], hqq.slice_leading(qt, b))
+                       for b in range(B)])
+    assert (np.asarray(y) == np.asarray(y_ref)).all()
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_dequant_matmul_slots_gathers_in_kernel(bits):
+    """The scalar-prefetch slot kernel serves by index into the whole
+    packed tier — equal to gathering first, duplicate slots included."""
+    S, B, M, K, N = 5, 6, 8, 128, 128
+    w, qt = _stacked_qt(S, K, N, bits, seed=2)
+    slots_py = [4, 0, 2, 0, 1, 4]
+    slots = jnp.asarray(slots_py, jnp.int32)
+    x = jax.random.normal(jax.random.key(3), (B, M, K))
+    y = ops.dequant_matmul_slots(x, qt, slots)
+    y_ref = jnp.stack([ops.dequant_matmul(x[b],
+                                          hqq.slice_leading(qt, s))
+                       for b, s in enumerate(slots_py)])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    # kernel path really was eligible (alignment) for this shape
+    from repro.kernels.dequant_matmul import dequant_matmul_slots_pallas
+    scale, zero = _meta_dequantize(qt)
+    y_k = dequant_matmul_slots_pallas(x, qt.packed, scale, zero, slots,
+                                      bits=bits, group_size=64, bm=8)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("BH,BKV,Sq,Skv,d", [
     (4, 2, 128, 128, 64),     # GQA G=2
     (8, 8, 256, 256, 32),     # MHA

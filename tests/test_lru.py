@@ -1,13 +1,19 @@
 """LRU cache + speculative staging: jittable state machine vs python
-oracle (property-based), plus paper-semantics unit checks."""
+oracle (property-based when ``hypothesis`` is installed, with a seeded
+stdlib-random fallback that ALWAYS runs — the eviction-sequence oracle
+equivalence is the invariant the packed buffer pool rests on, so it must
+not silently vanish with an optional dependency), plus paper-semantics
+unit checks and the whole-batch plan (DESIGN.md §7)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property tests need the optional 'test' extra")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on hosts w/o the extra
+    HAVE_HYPOTHESIS = False
 
 from repro.core import lru_cache as L
 
@@ -44,18 +50,12 @@ def test_stage_skips_resident():
     assert int(n) == 1  # 0 already cached -> only 3 transferred
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    k=st.integers(1, 6),
-    n_spec=st.integers(1, 3),
-    n_experts=st.integers(2, 12),
-    seed=st.integers(0, 2**31),
-    n_steps=st.integers(1, 40),
-)
-def test_jnp_matches_python_oracle(k, n_spec, n_experts, seed, n_steps):
+# ----------------------------------------------------------------------
+def _check_matches_python_oracle(k, n_spec, n_experts, seed, n_steps):
     """PyLRU and the jit state machine produce identical hit/evict
-    sequences on random traces (the claim ``core/offload_engine``'s
-    docstring points here for)."""
+    sequences on one random trace (the claim ``core/offload_engine``'s
+    docstring points here for).  Shared body of the hypothesis property
+    test and the always-on seeded fallback."""
     rng = np.random.default_rng(seed)
     top_k = min(2, n_experts)
     n_spec = min(n_spec, n_experts)
@@ -90,6 +90,77 @@ def test_jnp_matches_python_oracle(k, n_spec, n_experts, seed, n_steps):
     # identical EVICT sequence, not just counts: the buffer pool replaces
     # exactly the experts the python oracle would
     assert evictions == py.evictions
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_jnp_matches_python_oracle_seeded(seed):
+    """Always-on fallback of the property test: the (k, n_spec, E, trace)
+    space is drawn from a seeded generator, so the oracle equivalence is
+    verified even without the optional ``hypothesis`` dependency."""
+    rng = np.random.default_rng(1000 + seed)
+    _check_matches_python_oracle(
+        k=int(rng.integers(1, 7)), n_spec=int(rng.integers(1, 4)),
+        n_experts=int(rng.integers(2, 13)), seed=int(rng.integers(2**31)),
+        n_steps=int(rng.integers(8, 41)))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        k=st.integers(1, 6),
+        n_spec=st.integers(1, 3),
+        n_experts=st.integers(2, 12),
+        seed=st.integers(0, 2**31),
+        n_steps=st.integers(1, 40),
+    )
+    def test_jnp_matches_python_oracle(k, n_spec, n_experts, seed, n_steps):
+        _check_matches_python_oracle(k, n_spec, n_experts, seed, n_steps)
+
+
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("T,active", [(1, None), (3, None),
+                                      (3, (True, False, True))])
+def test_access_plan_batch_matches_sequential(T, active):
+    """The whole-batch plan (DESIGN.md §7) must leave exactly the state
+    and counters of T sequential ``access_plan`` calls, and its
+    slot/survivor/written tables must describe the sequential swap
+    sequence's final pool contents."""
+    rng = np.random.default_rng(7)
+    k, K, E = 2, 2, 8
+    sj = L.init_layer_state(k, 2)
+    sb = L.init_layer_state(k, 2)
+    for step in range(8):
+        ids = rng.integers(0, E, (T, K)).astype(np.int32)
+        act = None if active is None else jnp.asarray(active)
+        # sequential reference (with the active-row masking acquire does)
+        tot = np.zeros(4, np.int64)
+        written_ref = np.zeros(k, bool)
+        owners = {}  # slot -> expert of the last insert
+        for t in range(T):
+            new, stats, plan = L.access_plan(sj, jnp.asarray(ids[t]))
+            if active is None or active[t]:
+                for j in range(K):
+                    if not bool(plan.in_cache[j]):
+                        s = int(plan.slots[j])
+                        written_ref[s] = True
+                        owners[s] = int(ids[t, j])
+                tot += np.array([int(stats.hits), int(stats.spec_hits),
+                                 int(stats.demand_loads), 0])
+                sj = new
+        sb, delta, bplan = L.access_plan_batch(sb, jnp.asarray(ids), act)
+        for a, b in zip(jax.tree.leaves(sj), jax.tree.leaves(sb)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+        assert (np.asarray(delta) == tot).all()
+        assert (np.asarray(bplan.written) == written_ref).all()
+        for s, e in owners.items():
+            assert int(np.asarray(sb.cache_ids)[s]) == e
+        # survivors: the expert still owns its serving slot afterwards
+        ids_final = np.asarray(sb.cache_ids)
+        surv = np.asarray(bplan.survives)
+        slots = np.asarray(bplan.slots)
+        for t in range(T):
+            for j in range(K):
+                assert surv[t, j] == (ids_final[slots[t, j]] == ids[t, j])
 
 
 def test_access_is_jittable():

@@ -25,6 +25,21 @@ def setup():
     return cfg, params, prompt
 
 
+# session-scoped shared engines/stores (tier-1 runtime guard): HQQ
+# quantization + engine construction cost seconds each; every test that
+# only *reads* generation behaviour shares one instance
+@pytest.fixture(scope="module")
+def qdeq(setup):
+    cfg, params, _ = setup
+    return quantize_for_offload(params, cfg, SPEC)[0]
+
+
+@pytest.fixture(scope="module")
+def packed_eng(setup):
+    cfg, params, _ = setup
+    return OffloadEngine(params, cfg, SPEC, quantized=True)
+
+
 def test_offloading_is_pure_scheduling(setup):
     """Offloaded generation must be bit-identical to plain decode."""
     cfg, params, prompt = setup
@@ -59,20 +74,17 @@ def test_speculation_reduces_blocking_loads(setup):
     assert s1.spec_hits > 0
 
 
-def test_quantized_sizes_and_quality(setup):
+def test_quantized_sizes_and_quality(setup, packed_eng):
     cfg, params, prompt = setup
-    spec = OffloadSpec(expert_bits=3, attn_bits=4)
-    qparams, sizes = quantize_for_offload(params, cfg, spec)
+    sizes = packed_eng.size_report
     assert sizes["experts"] > 0 and sizes["attn"] > 0
     # experts dominate and compress well below fp16
-    from repro.quant.hqq import dense_nbytes
     fp16_experts = sum(
         l.size * 2 for l in jax.tree.leaves(
             [params["stack"][0]["moe"]["experts"]]))
     assert sizes["experts"] < 0.30 * fp16_experts  # ~3.5/16 bits
     # quantized model still generates (finite logits, valid tokens)
-    eng = OffloadEngine(params, cfg, spec, quantized=True)
-    out, stats = eng.generate(prompt, 8)
+    out, stats = packed_eng.generate(prompt, 8)
     assert out.shape == (1, 8)
     assert (out >= 0).all() and (out < cfg.vocab_size).all()
 
@@ -83,34 +95,75 @@ SPEC = OffloadSpec(cache_size=2, num_speculative=2, lookahead=1,
                    expert_bits=3, attn_bits=4)
 
 
-def test_packed_generate_bit_identical_to_dequantized(setup):
+def test_packed_generate_bit_identical_to_dequantized(setup, qdeq,
+                                                      packed_eng):
     """Acceptance: quantized (packed) generation is bit-identical to
     decoding the dequantized model, while experts stay HQQ-packed —
     the only dense expert weights ever built are per-slot dequants."""
     cfg, params, prompt = setup
-    qdeq, _ = quantize_for_offload(params, cfg, SPEC)
     oracle = generate_plain(qdeq, cfg, prompt, 12)
-    eng = OffloadEngine(params, cfg, SPEC, quantized=True)
-    out, stats = eng.generate(prompt, 12)
+    out, stats = packed_eng.generate(prompt, 12)
     assert (out == oracle).all()
     # real traffic happened and the LRU worked
     assert stats.demand_loads > 0 and stats.hits > 0
     assert stats.n_tokens == 11
     # no dense expert stack exists in the executable params
     for i in range(cfg.pattern_period):
-        ex = eng.params["stack"][i]["moe"]["experts"]
+        ex = packed_eng.params["stack"][i]["moe"]["experts"]
         assert all(leaf.size == 0 for leaf in jax.tree.leaves(ex))
 
 
-def test_packed_einsum_mode_matches_fused(setup):
+def test_packed_einsum_mode_matches_fused(setup, packed_eng):
     """fused=False (per-slot dequant into the gather einsums) and
-    fused=True (kernels/ops.dequant_matmul) agree bitwise on f32."""
+    fused=True (kernels/ops.dequant_matmul_batched) agree bitwise."""
     cfg, params, prompt = setup
-    a = OffloadEngine(params, cfg, SPEC, quantized=True, fused=True)
     b = OffloadEngine(params, cfg, SPEC, quantized=True, fused=False)
-    out_a, _ = a.generate(prompt, 10)
+    out_a, _ = packed_eng.generate(prompt, 10)
     out_b, _ = b.generate(prompt, 10)
     assert (out_a == out_b).all()
+
+
+def test_packed_pipelined_matches_synchronous_unrolled(setup, packed_eng):
+    """Tentpole invariant (DESIGN.md §7): the vectorized overlap-pipelined
+    stream produces bitwise the tokens AND the transfer counters of the
+    PR-2 synchronous per-(token, k) data plane."""
+    cfg, params, prompt = setup
+    base = OffloadEngine(params, cfg, SPEC, quantized=True,
+                         pipelined=False, vectorized=False)
+    out_b, sb = base.generate(prompt, 8)
+    out_p, sp = packed_eng.generate(prompt, 8)
+    assert (out_p == out_b).all()
+    assert (sp.hits, sp.spec_hits, sp.demand_loads, sp.spec_loads) == \
+        (sb.hits, sb.spec_hits, sb.demand_loads, sb.spec_loads)
+
+
+def test_generate_rng_none_samples(setup, qdeq, packed_eng):
+    """Regression: ``generate(greedy=False)`` without an rng used to
+    crash inside ``jax.random.split``; both engine modes must fall back
+    to a seeded default key."""
+    cfg, params, prompt = setup
+    out_p, _ = packed_eng.generate(prompt, 4, greedy=False)
+    acct = OffloadEngine(qdeq, cfg, SPEC, quantized=False)
+    out_a, _ = acct.generate(prompt, 4, greedy=False)
+    for out in (out_p, out_a):
+        assert out.shape == (1, 4)
+        assert (out >= 0).all() and (out < cfg.vocab_size).all()
+
+
+def test_usage_tracker_overlap_normalizes_by_scored_layers():
+    """Regression: ``ExpertUsageTracker.overlap`` summed only the first
+    ``n_layers`` prediction lists but divided by the TOTAL supplied,
+    deflating scores for candidates with surplus layers."""
+    from repro.core.offload_engine import ExpertUsageTracker
+
+    tr = ExpertUsageTracker(n_layers=2, n_experts=4)
+    tr.update([np.array([[0, 1]]), np.array([[2, 3]])])
+    pred = [np.array([[0, 1]]), np.array([[2, 3]])]
+    base = tr.overlap(pred)
+    assert base > 0
+    # extra prediction layers beyond the tracker are not scored — they
+    # must not dilute the score either
+    assert tr.overlap(pred + pred) == pytest.approx(base)
 
 
 def test_device_buffer_pool_holds_cache_size_slots(setup):
@@ -121,7 +174,7 @@ def test_device_buffer_pool_holds_cache_size_slots(setup):
     spec = OffloadSpec(cache_size=3, num_speculative=2, expert_bits=3,
                        attn_bits=4)
     eng = OffloadEngine(params, cfg, spec, quantized=True)
-    _, _ = eng.generate(prompt, 6)
+    _, _ = eng.generate(prompt, 4)
     ps = eng._last_pool_state
     L = eng.n_moe_layers
     for qt in ps.pool:
@@ -133,38 +186,34 @@ def test_device_buffer_pool_holds_cache_size_slots(setup):
     assert ps.lru.cache_ids.shape == (L, spec.cache_size)
 
 
-def test_packed_stats_are_measured_copies(setup):
+def test_packed_stats_are_measured_copies(setup, packed_eng):
     """expert_bytes equals the real packed size of one expert's slot
     (packed codes + scale/zero + meta), not a cost-model estimate."""
-    cfg, params, prompt = setup
-    eng = OffloadEngine(params, cfg, SPEC, quantized=True)
-    one = eng.store.slice(0, 0)
-    assert eng.expert_bytes == one.nbytes()
-    assert eng.size_report["experts"] == eng.store.nbytes()
+    one = packed_eng.store.slice(0, 0)
+    assert packed_eng.expert_bytes == one.nbytes()
+    assert packed_eng.size_report["experts"] == packed_eng.store.nbytes()
 
 
-def test_packed_counters_match_accounting_replay(setup):
+def test_packed_counters_match_accounting_replay(setup, qdeq, packed_eng):
     """The packed engine's measured hit/load counters equal the
     accounting engine's PyLRU replay over the (bitwise-identical)
     dequantized model — same routing, same cache policy, two
     implementations."""
     cfg, params, prompt = setup
-    qdeq, _ = quantize_for_offload(params, cfg, SPEC)
-    packed = OffloadEngine(params, cfg, SPEC, quantized=True)
     acct = OffloadEngine(qdeq, cfg, SPEC, quantized=False)
-    out_p, sp = packed.generate(prompt, 12)
+    out_p, sp = packed_eng.generate(prompt, 12)
     out_a, sa = acct.generate(prompt, 12)
     assert (out_p == out_a).all()
     assert (sp.hits, sp.spec_hits, sp.demand_loads, sp.spec_loads) == \
         (sa.hits, sa.spec_hits, sa.demand_loads, sa.spec_loads)
 
 
-def test_pool_slots_agree_with_lru_state(setup):
+def test_pool_slots_agree_with_lru_state(setup, packed_eng):
     """Data-plane/state-machine coherence: after generation, each LRU
     slot's packed bytes are exactly the host store's bytes for the
     expert the state machine says lives there."""
     cfg, params, prompt = setup
-    eng = OffloadEngine(params, cfg, SPEC, quantized=True)
+    eng = packed_eng
     eng.generate(prompt, 10)
     ps = eng._last_pool_state
     ids = np.asarray(ps.lru.cache_ids)  # (L, k)
@@ -247,10 +296,10 @@ def test_moe_packed_prefill_ffn_matches_dense_dispatch():
     assert (np.asarray(y) == np.asarray(y_ref)).all()
 
 
-def test_throughput_estimates_ordering(setup):
+def test_throughput_estimates_ordering(setup, packed_eng):
     """Cost model must reproduce Table 2's hardware ordering."""
     cfg, params, prompt = setup
-    eng = OffloadEngine(params, cfg, quantized=True)
+    eng = packed_eng  # default spec == SPEC; shared engine (runtime guard)
     _, stats = eng.generate(prompt, 16)
     mixtral = get_config("mixtral-8x7b")  # project to paper scale
     from repro.core import cost_model as C

@@ -1,0 +1,48 @@
+"""Serving CLI regression tests (no engine construction — the arg
+handling itself is under test).
+
+The load-bearing one: ``--cache-size 0`` / ``--num-speculative 0`` are
+the paper's no-cache / no-speculation ablations; the launcher used to
+treat them as "flag not given" via ``or``-truthiness and silently ran
+the arch defaults instead."""
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import OffloadSpec
+from repro.launch.serve import build_parser, resolve_offload_spec
+
+
+def _spec_for(argv):
+    """Exactly what ``main`` computes for ``--offload`` runs."""
+    args = build_parser().parse_args(argv)
+    cfg = get_config(args.arch)
+    return resolve_offload_spec(cfg.offload or OffloadSpec(),
+                                args.cache_size, args.num_speculative)
+
+
+def test_zero_ablation_flags_respected():
+    spec = _spec_for(["--offload", "--cache-size", "0",
+                      "--num-speculative", "0"])
+    assert spec.cache_size == 0
+    assert spec.num_speculative == 0
+
+
+def test_unset_flags_keep_arch_defaults():
+    base = get_config("tiny-moe").offload
+    spec = _spec_for(["--offload"])
+    assert spec == base
+
+
+def test_partial_override_keeps_other_default():
+    base = get_config("tiny-moe").offload
+    spec = _spec_for(["--offload", "--cache-size", "5"])
+    assert spec.cache_size == 5
+    assert spec.num_speculative == base.num_speculative
+    spec = _spec_for(["--offload", "--num-speculative", "0"])
+    assert spec.cache_size == base.cache_size
+    assert spec.num_speculative == 0
+
+
+def test_resolve_is_identity_without_overrides():
+    base = OffloadSpec(cache_size=4, num_speculative=1)
+    assert resolve_offload_spec(base) is base
