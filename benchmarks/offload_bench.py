@@ -15,16 +15,21 @@ store, all bitwise-identical to the dequantized-model oracle (asserted):
   only at the lookahead layer's ``acquire``.
 
 Reported per variant: compile (first-generate) seconds, steady-state
-decode tokens/s, and measured h2d bytes/token.  The traffic counters must
-agree across variants — the data-plane refactor changes *how* bytes move,
-never how many.
+decode tokens/s with p50/p95 per-token latency, and measured h2d
+bytes/token + hit ratio.  The traffic counters must agree across
+variants — the data-plane refactor changes *how* bytes move, never how
+many.  Results persist to ``experiments/bench/offload_bench.json`` AND
+the repo-root ``BENCH_offload.json`` so the perf trajectory is trackable
+across PRs.
 
     PYTHONPATH=src python -m benchmarks.offload_bench [--smoke] [--trained]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -35,6 +40,8 @@ from repro.configs import get_config
 from repro.core.offload_engine import (OffloadEngine, generate_plain,
                                        quantize_for_offload)
 from repro.models import transformer as T
+
+ROOT = Path(__file__).resolve().parents[1]
 
 VARIANTS = {
     "pr2_sync": dict(pipelined=False, vectorized=False),
@@ -82,30 +89,37 @@ def run(smoke=False, trained=False, max_new=None, seed=0):
         bpt = stats.bytes_h2d / max(1, stats.n_tokens)
         # steady-state decode: time the jitted token loop alone (prefill
         # and pool-state init are identical across variants)
-        dec = eng._decoder
+        dec = eng._decoder  # the packed-plane runtime Executor
         ps = dec.init_pool_state()
-        logits, state = dec.prefill({"tokens": jnp.asarray(prompt)},
-                                    prompt.shape[1] + max_new + 4)
+        logits, state, _ = dec.prefill(jnp.asarray(prompt),
+                                       prompt.shape[1] + max_new + 4)
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
         for _ in range(2):  # warm donation buffers
             logits, state, ps, _ = dec.decode(state, tok, ps)
         jax.block_until_ready(logits)
+        lat_ms = []
         t0 = time.perf_counter()
         for _ in range(max_new):
+            t1 = time.perf_counter()
             logits, state, ps, _ = dec.decode(state, tok, ps)
             jax.block_until_ready(logits)
+            lat_ms.append((time.perf_counter() - t1) * 1e3)
         t_gen = time.perf_counter() - t0
         results.append({
             "name": "offload_bench", "variant": name,
             "max_new": max_new,
             "first_gen_s": round(t_compile, 3),  # variant's jit + 1 gen
             "decode_ms_per_token": round(t_gen / max_new * 1e3, 2),
+            "p50_ms": round(float(np.percentile(lat_ms, 50)), 2),
+            "p95_ms": round(float(np.percentile(lat_ms, 95)), 2),
             "tok_s": round(max_new / t_gen, 2),
             "bytes_per_token": round(bpt, 1),
             "hit_ratio": round(stats.hit_ratio, 4),
         })
         print(f"[offload_bench] {name:10s}: {max_new / t_gen:8.2f} tok/s "
-              f"decode ({t_gen / max_new * 1e3:6.1f} ms/token, first gen "
+              f"decode ({t_gen / max_new * 1e3:6.1f} ms/token, "
+              f"p50/p95 {np.percentile(lat_ms, 50):.1f}/"
+              f"{np.percentile(lat_ms, 95):.1f}ms, first gen "
               f"{t_compile:6.1f}s, {bpt / 1e3:.1f}KB/token h2d, "
               f"hit_ratio={stats.hit_ratio:.3f})")
     assert len(set(traffic.values())) == 1, \
@@ -121,6 +135,8 @@ def run(smoke=False, trained=False, max_new=None, seed=0):
                     "speedup": round(speedup, 3),
                     "compile_speedup": round(compile_speedup, 3)})
     emit(results, "offload_bench")
+    (ROOT / "BENCH_offload.json").write_text(json.dumps(results, indent=1))
+    print("[offload_bench] wrote BENCH_offload.json")
     if smoke:
         # smoke asserts structure, not margins (CI machines are noisy) —
         # but the vectorized plane must at least not be slower than the

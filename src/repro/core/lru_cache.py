@@ -131,7 +131,10 @@ def access_plan(state: LayerCacheState, needed: jnp.ndarray
         slots.append(slot.astype(jnp.int32))
         in_cache_a.append(in_cache)
         in_spec_a.append(in_spec)
-        spec_slot_a.append(jnp.argmax(spec == e).astype(jnp.int32))
+        # n_spec = 0 (no-speculation ablation): argmax over an empty
+        # staging tier is invalid — and in_spec is statically False
+        spec_slot_a.append(jnp.argmax(spec == e).astype(jnp.int32)
+                           if spec.shape[0] else jnp.zeros((), jnp.int32))
         evicted_a.append(evicted)
     new = LayerCacheState(ids, clock_arr, spec, clk)
     stats = AccessStats(hits, spec_hits, demand, jnp.zeros((), jnp.int32))

@@ -36,20 +36,21 @@ the eviction sequence — in
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, OffloadSpec, parse_block
+from repro.configs.base import ModelConfig, OffloadSpec
 from repro.core import cost_model, expert_pool as EP, speculative
 from repro.core.lru_cache import PyLRU
 from repro.core.trace import moe_positions, stacked_routers
-from repro.models import moe as M
 from repro.models import transformer as T
 from repro.quant import hqq
+from repro.runtime import Executor
+from repro.serving.sampler import SamplerConfig, sample
 
 
 @dataclass
@@ -236,250 +237,17 @@ def quantize_for_offload(params, cfg: ModelConfig, spec: OffloadSpec, *,
 
 
 # ----------------------------------------------------------------------
-class PackedDecoder:
-    """Layer-wise executor for a model whose MoE experts live HQQ-packed
-    in a host store and stream through per-layer device buffer pools
-    (DESIGN.md §6/§7).
-
-    Decode (and prefill) run one block at a time through per-kind jitted
-    functions instead of the scanned ``T.decode_step``: the pool state
-    threads *across* layers (speculative staging writes to layer ``l+j``
-    while layer ``l`` computes — the paper's overlap structure), which a
-    host-driven layer loop expresses naturally.  On this backend the
-    layerwise loop is bitwise-identical to the scanned step (verified in
-    ``tests/test_offload.py``).  Both decode state and prefill output use
-    the standard stacked layouts, so serving engines can swap this in for
-    their jitted step (``ContinuousEngine(offload=...)``).
-
-    ``pipelined=True`` (default) runs the overlap-pipelined stream
-    (DESIGN.md §7): each MoE block is split into a mixer dispatch (no
-    pool state), a MoE dispatch (route + ``acquire`` + packed compute —
-    the fence), and an asynchronously dispatched *staging* step for the
-    lookahead layer, so the speculative host->device copies execute
-    while the next block's mixer computes.  ``pipelined=False`` is the
-    PR-2 synchronous shape — one jitted program per block with staging
-    serialized inside it — kept as the baseline
-    ``benchmarks/offload_bench.py`` measures against.  Both modes are
-    bitwise-identical (staging commutes with the next layers' compute:
-    it touches only the lookahead layer's staging tier, and counter
-    updates are commutative adds).
-    """
-
-    def __init__(self, params, cfg: ModelConfig, spec: OffloadSpec,
-                 store: EP.PackedExperts, *, fused: bool = True,
-                 pipelined: bool = True, vectorized: bool = True):
-        self.cfg = cfg
-        self.spec = spec
-        self.store = store
-        self.params = params
-        self.fused = fused
-        self.pipelined = pipelined
-        self.vectorized = vectorized
-        self.routers = jnp.asarray(stacked_routers(params, cfg))
-        self.n_moe_layers = int(self.routers.shape[0])
-        self.kinds = cfg.layer_kinds()
-        # MoE ordinal of each absolute layer (period-major — the order
-        # stacked_routers / the store use)
-        self.moe_ordinal: Dict[int, int] = {}
-        for l, k in enumerate(self.kinds):
-            if parse_block(k)[1] == "moe":
-                self.moe_ordinal[l] = len(self.moe_ordinal)
-        self._layer_p = [T.layer_params(params, cfg, l)
-                         for l in range(cfg.n_layers)]
-        self._jit_embed = T.cached_jit(
-            ("embed", cfg), lambda: jax.jit(
-                lambda p, t: T.embed_tokens(p, cfg, t)))
-        self._jit_head = T.cached_jit(
-            ("head", cfg), lambda: jax.jit(
-                lambda p, x: T.apply_head(p, cfg, x)))
-        # mode key: packed-block executables are shared across decoder
-        # instances with identical config+flags (tier-1 runtime guard)
-        self._mode = (cfg, spec, fused, pipelined, vectorized)
-        self._blk: Dict[str, object] = {}
-        self._pre: Dict[tuple, object] = {}
-
-    def init_pool_state(self) -> EP.PoolState:
-        return EP.init_pool_state(self.store, self.spec)
-
-    # ------------------------------------------------------------------
-    def _decode_blk(self, kind: str):
-        if kind not in self._blk:
-            # locals only in the closures: a `self` capture would pin the
-            # whole engine (params + store) in the process-wide jit cache
-            cfg, spec = self.cfg, self.spec
-            fused, vectorized = self.fused, self.vectorized
-            if parse_block(kind)[1] == "moe":
-                def make():
-                    fn = lambda p, x, st, pos, store, ps, lm, routers, \
-                        act: T.decode_block_packed(
-                            p, cfg, kind, x, st, pos, store, ps, lm,
-                            routers, lookahead=spec.lookahead,
-                            n_spec=spec.num_speculative, fused=fused,
-                            active=act, vectorized=vectorized)
-                    return jax.jit(fn, donate_argnums=(5,))
-                key = ("packed_blk", self._mode, kind)
-            else:
-                def make():
-                    fn = lambda p, x, st, pos: T._block_decode(
-                        p, cfg, kind, x, st, pos, moe_mode="gather")
-                    return jax.jit(fn)
-                # a non-MoE block's program depends only on (cfg, kind) —
-                # identical across offload modes
-                key = ("packed_blk_plain", cfg, kind)
-            self._blk[kind] = T.cached_jit(key, make)
-        return self._blk[kind]
-
-    # --- pipelined dispatches (DESIGN.md §7) --------------------------
-    # resolved once into instance attrs: the global cached_jit lookup
-    # hashes cfg/spec tuples, too costly per layer per decoded token
-    def _mixer_blk(self, kind: str):
-        key = ("mixer", kind)
-        if key not in self._blk:
-            cfg = self.cfg
-            self._blk[key] = T.cached_jit(
-                ("packed_mixer", cfg, kind),
-                lambda: jax.jit(
-                    lambda p, x, st, pos: T.decode_block_packed_mixer(
-                        p, cfg, kind, x, st, pos)))
-        return self._blk[key]
-
-    def _moe_blk(self):
-        if "moe_ffn" not in self._blk:
-            cfg = self.cfg
-            fused, vectorized = self.fused, self.vectorized
-
-            def make():
-                fn = lambda p, x, h2, store, ps, lm, act: \
-                    T.decode_block_packed_moe(
-                        p, cfg, x, h2, store, ps, lm, fused=fused,
-                        vectorized=vectorized, active=act)
-                return jax.jit(fn, donate_argnums=(4,))
-            self._blk["moe_ffn"] = T.cached_jit(("packed_moe", self._mode),
-                                                make)
-        return self._blk["moe_ffn"]
-
-    def _stage_blk(self):
-        if "stage" not in self._blk:
-            n_spec = self.spec.num_speculative
-            vectorized = self.vectorized
-
-            def make():
-                def fn(store, ps, tgt, hidden, routers):
-                    pred = speculative.predict_experts(
-                        routers[tgt], hidden, n_spec)[0]
-                    return EP.stage(store, ps, tgt, pred, True,
-                                    vectorized=vectorized)
-                return jax.jit(fn, donate_argnums=(1,))
-            self._blk["stage"] = T.cached_jit(("packed_stage", self._mode),
-                                              make)
-        return self._blk["stage"]
-
-    def decode(self, state, tokens, pstate: EP.PoolState, active=None):
-        """One token for every row: layerwise ``decode_step`` with MoE
-        served from the buffer pool.  Returns
-        (logits, state', pstate', route_ids per MoE layer).
-
-        Pipelined mode dispatch stream per MoE block (DESIGN.md §7):
-        ``mixer(l)`` -> ``moe(l)`` (fences on the pool state, consuming
-        any staging still in flight) -> ``stage(l+lookahead)`` — the
-        staging call is dispatched asynchronously (JAX async dispatch)
-        and only the *state machine* chains it, so the next block's
-        mixer/attention overlaps the speculative transfer."""
-        cfg = self.cfg
-        x = self._jit_embed(self.params, tokens)
-        pos = state["pos"]
-        B = int(tokens.shape[0])
-        # speculation is the paper's batch-1 interactive feature (batched
-        # continuous decode disables it) — same gate the synchronous
-        # block applies inside jit via moe_apply_packed's T == 1 check
-        speculate = (self.pipelined and self.spec.num_speculative > 0
-                     and B * int(tokens.shape[1]) == 1)
-        route_ids = []
-        for l, kind in enumerate(self.kinds):
-            st_l = T.decode_state_layer(state, cfg, l)
-            if l in self.moe_ordinal:
-                lm = jnp.asarray(self.moe_ordinal[l], jnp.int32)
-                if self.pipelined:
-                    x, st_l, h2 = self._mixer_blk(kind)(
-                        self._layer_p[l], x, st_l, pos)
-                    x, pstate, info = self._moe_blk()(
-                        self._layer_p[l], x, h2, self.store, pstate, lm,
-                        active)
-                    tgt = self.moe_ordinal[l] + self.spec.lookahead
-                    if speculate and tgt < self.n_moe_layers:
-                        pstate = self._stage_blk()(
-                            self.store, pstate,
-                            jnp.asarray(tgt, jnp.int32),
-                            info["hidden_pre_moe"], self.routers)
-                else:
-                    x, st_l, pstate, info = self._decode_blk(kind)(
-                        self._layer_p[l], x, st_l, pos, self.store, pstate,
-                        lm, self.routers, active)
-                route_ids.append(info["route"]["ids"])
-            else:
-                x, st_l, _ = self._decode_blk(kind)(
-                    self._layer_p[l], x, st_l, pos)
-            state = T.set_decode_state_layer(state, cfg, l, st_l)
-        logits = self._jit_head(self.params, x)
-        state = dict(state, pos=pos + 1)
-        return logits, state, pstate, route_ids
-
-    # ------------------------------------------------------------------
-    def _prefill_blk(self, kind: str, S: int, max_len: int, has_mask: bool):
-        key = (kind, S, max_len, has_mask)
-        if key not in self._pre:
-            cfg = self.cfg
-
-            def make():
-                if parse_block(kind)[1] == "moe":
-                    def fn(p, x, positions, store, lm, pad_mask):
-                        return T._block_train(
-                            p, cfg, kind, x, positions, want_state=True,
-                            max_len=max_len, pad_mask=pad_mask,
-                            moe_ffn_fn=M.packed_expert_ffn(store, lm, cfg))
-                else:
-                    def fn(p, x, positions, store, lm, pad_mask):
-                        return T._block_train(
-                            p, cfg, kind, x, positions, want_state=True,
-                            max_len=max_len, pad_mask=pad_mask)
-                return jax.jit(fn)
-            self._pre[key] = T.cached_jit(("packed_prefill", cfg) + key,
-                                          make)
-        return self._pre[key]
-
-    def prefill(self, batch, max_len: int):
-        """Layerwise prefill: experts stream through per-slot dequant one
-        at a time (``moe.packed_expert_ffn``) — the encode phase loads
-        each expert of each layer exactly once, as the paper notes
-        existing algorithms already handle; no cache accounting.
-        Returns (logits, stacked decode state), bitwise-identical to
-        ``T.prefill`` of the dequantized model on this backend."""
-        cfg = self.cfg
-        tokens = jnp.asarray(batch["tokens"])
-        B, S = tokens.shape
-        pad_mask = batch.get("pad_mask")
-        pad_mask, positions = T.pad_positions(
-            None if pad_mask is None else jnp.asarray(pad_mask), S)
-        x = self._jit_embed(self.params, tokens)
-        states = []
-        for l, kind in enumerate(self.kinds):
-            fn = self._prefill_blk(kind, S, max_len, pad_mask is not None)
-            lm = jnp.asarray(self.moe_ordinal.get(l, 0), jnp.int32)
-            x, st, _ = fn(self._layer_p[l], x, positions, self.store, lm,
-                          pad_mask)
-            states.append(st)
-        logits = self._jit_head(self.params, x)
-        period = cfg.pattern_period
-        n_scanned = cfg.n_periods * period
-        stack = [jax.tree.map(lambda *xs: jnp.stack(xs),
-                              *[states[per * period + i]
-                                for per in range(cfg.n_periods)])
-                 for i in range(period)]
-        pos = (pad_mask.sum(1).astype(jnp.int32) if pad_mask is not None
-               else jnp.asarray(S, jnp.int32))
-        state = {"stack": stack, "tail": list(states[n_scanned:]),
-                 "pos": pos}
-        return logits, state
+def PackedDecoder(params, cfg: ModelConfig, spec: OffloadSpec, store,
+                  *, fused: bool = True, pipelined: bool = True,
+                  vectorized: bool = True) -> Executor:
+    """Compat constructor for the pre-runtime layerwise packed decoder:
+    the block programs now live in :class:`repro.runtime.Executor`
+    (DESIGN.md §8) — this returns a packed-plane executor with the same
+    ``decode`` / ``prefill`` / ``init_pool_state`` surface and the same
+    cached program keys."""
+    plane = "packed_pipelined" if pipelined else "packed_vectorized"
+    return Executor(params, cfg, plane=plane, spec=spec, store=store,
+                    fused=fused, vectorized=vectorized)
 
 
 # ----------------------------------------------------------------------
@@ -519,66 +287,68 @@ class OffloadEngine:
         self.routers = stacked_routers(params, cfg)  # (L_moe, D, E)
         self.n_moe_layers = self.routers.shape[0]
         if self.packed:
+            # packed planes of the unified runtime (DESIGN.md §8)
             self._decoder = PackedDecoder(params, cfg, self.spec, self.store,
                                           fused=fused, pipelined=pipelined,
                                           vectorized=vectorized)
+            self._exec = self._decoder
             # measured: what one demand load / prefetch actually copies
             self.expert_bytes = EP.per_expert_nbytes(self.store)
         else:
+            self._exec = Executor(params, cfg)
             eff_bits = cost_model.EFFECTIVE_BITS[
                 self.spec.expert_bits if quantized else 16]
             self.expert_bytes = (cost_model.expert_param_count(cfg)
                                  * eff_bits / 8.0)
-            self._step = T.cached_jit(
-                ("decode_gather_info", cfg),
-                lambda: jax.jit(lambda p, st, tk: T.decode_step(
-                    p, cfg, st, tk, moe_mode="gather", collect_info=True)))
-            self._prefill = T.make_prefill(cfg)
         # live routing histogram, readable by serving-admission policies
         self.usage = ExpertUsageTracker(self.n_moe_layers,
                                         cfg.moe.num_experts)
 
     # ------------------------------------------------------------------
     def generate(self, prompt: np.ndarray, max_new_tokens: int,
-                 greedy: bool = True, rng=None
+                 greedy: bool = True, rng=None,
+                 sampler: Optional[SamplerConfig] = None, *,
+                 prefill_chunk: Optional[int] = None
                  ) -> Tuple[np.ndarray, OffloadStats]:
         """prompt: (1, S) int32.  Returns (generated (1, n), stats).
 
         Packed engines really perform the slot swaps (stats are measured
-        copies); accounting engines replay routing through PyLRU.
-        ``greedy=False`` samples from the logits; ``rng`` may be omitted,
-        in which case a fixed seeded key is used (reproducible runs)."""
-        if not greedy and rng is None:
+        copies); accounting engines replay routing through PyLRU.  All
+        sampling routes through ``serving/sampler.py``: ``greedy=False``
+        is shorthand for a plain categorical :class:`SamplerConfig`, and
+        ``sampler=`` overrides (top-k / top-p / temperature).  ``rng``
+        may be omitted, in which case a fixed seeded key makes sampled
+        runs reproducible.  ``prefill_chunk`` chunks the prompt's prefill
+        (bitwise-identical to whole-prompt prefill on every plane —
+        DESIGN.md §8)."""
+        sampler = sampler or SamplerConfig(
+            kind="greedy" if greedy else "categorical")
+        if sampler.kind != "greedy" and rng is None:
             rng = jax.random.key(0)  # seeded default, not a crash in split
         if self._decoder is not None:
             return self._generate_packed(prompt, max_new_tokens,
-                                         greedy=greedy, rng=rng)
+                                         sampler=sampler, rng=rng,
+                                         prefill_chunk=prefill_chunk)
         cfg, spec = self.cfg, self.spec
         caches = [PyLRU(spec.cache_size, spec.num_speculative)
                   for _ in range(self.n_moe_layers)]
         stats = OffloadStats(expert_bytes=self.expert_bytes)
 
         max_len = prompt.shape[1] + max_new_tokens
-        pre_logits, state = self._prefill(
-            self.params, {"tokens": jnp.asarray(prompt)}, max_len)
+        pre_logits, state, _ = self._exec.prefill(
+            jnp.asarray(prompt), max_len, chunk=prefill_chunk)
         # prefill loads each layer once (paper: the encode phase "works
         # relatively well with existing algorithms"); generation-phase
         # accounting starts below.  First token comes from prefill logits.
-        first = jnp.argmax(pre_logits[:, -1], axis=-1)
-        out = [int(first[0])]
-        tok = first[:, None].astype(jnp.int32)
-        logits = None
+        rng, tok = self._next_token(rng, pre_logits, sampler)
+        out = [int(tok[0, 0])]
         for step_i in range(max_new_tokens - 1):
-            logits, state, (info_stack, _) = self._step(self.params, state, tok)
+            logits, state, _, (info_stack, _) = self._exec.decode(
+                state, tok, collect_info=True)
             self._account(info_stack, caches, stats)
             stats.n_tokens += 1
-            if greedy:
-                nxt = jnp.argmax(logits[:, -1], axis=-1)
-            else:
-                rng, sub = jax.random.split(rng)
-                nxt = jax.random.categorical(sub, logits[:, -1])
-            tok = nxt[:, None].astype(jnp.int32)
-            out.append(int(nxt[0]))
+            rng, tok = self._next_token(rng, logits, sampler)
+            out.append(int(tok[0, 0]))
         for c in caches:
             stats.hits += c.hits
             stats.spec_hits += c.spec_hits
@@ -587,31 +357,38 @@ class OffloadEngine:
         return np.asarray(out)[None], stats
 
     # ------------------------------------------------------------------
+    def _next_token(self, rng, logits, sampler: SamplerConfig):
+        """One sampler step over the last-position logits -> (rng', tok
+        (B, 1) int32).  Greedy keeps the on-device argmax (no rng)."""
+        if sampler.kind == "greedy":
+            nxt = jnp.argmax(logits[:, -1], axis=-1)
+        else:
+            rng, sub = jax.random.split(rng)
+            nxt = sample(sub, logits[:, -1], sampler)
+        return rng, nxt[:, None].astype(jnp.int32)
+
+    # ------------------------------------------------------------------
     def _generate_packed(self, prompt: np.ndarray, max_new_tokens: int,
-                         greedy: bool = True, rng=None
+                         sampler: SamplerConfig, rng=None,
+                         prefill_chunk: Optional[int] = None
                          ) -> Tuple[np.ndarray, OffloadStats]:
-        """Packed-execution generate: prefill streams experts through
-        per-slot dequant; every decode token is served from the device
+        """Packed-execution generate: prefill streams the routed experts
+        from the host store chunk by chunk (``moe_apply_packed_stream``,
+        no pool traffic); every decode token is served from the device
         buffer pool with the LRU/speculative machinery performing real
-        slot swaps (DESIGN.md §6)."""
+        slot swaps (DESIGN.md §6/§8)."""
         dec = self._decoder
         pstate = dec.init_pool_state()
         max_len = prompt.shape[1] + max_new_tokens
-        pre_logits, state = dec.prefill({"tokens": jnp.asarray(prompt)},
-                                        max_len)
-        first = jnp.argmax(pre_logits[:, -1], axis=-1)
-        out = [int(first[0])]
-        tok = first[:, None].astype(jnp.int32)
+        pre_logits, state, _ = dec.prefill(jnp.asarray(prompt), max_len,
+                                           chunk=prefill_chunk)
+        rng, tok = self._next_token(rng, pre_logits, sampler)
+        out = [int(tok[0, 0])]
         for _ in range(max_new_tokens - 1):
             logits, state, pstate, route_ids = dec.decode(state, tok, pstate)
             self.usage.update([np.asarray(i) for i in route_ids])
-            if greedy:
-                nxt = jnp.argmax(logits[:, -1], axis=-1)
-            else:
-                rng, sub = jax.random.split(rng)
-                nxt = jax.random.categorical(sub, logits[:, -1])
-            tok = nxt[:, None].astype(jnp.int32)
-            out.append(int(nxt[0]))
+            rng, tok = self._next_token(rng, logits, sampler)
+            out.append(int(tok[0, 0]))
         counts = np.asarray(pstate.counts)
         stats = OffloadStats(
             n_tokens=max_new_tokens - 1,
@@ -649,21 +426,16 @@ class OffloadEngine:
 
 # ----------------------------------------------------------------------
 def generate_plain(params, cfg: ModelConfig, prompt: np.ndarray,
-                   max_new_tokens: int) -> np.ndarray:
-    """Greedy decode without any offload bookkeeping (parity oracle)."""
-    step = T.cached_jit(
-        ("decode_gather", cfg),
-        lambda: jax.jit(lambda p, st, tk: T.decode_step(
-            p, cfg, st, tk, moe_mode="gather")))
-    max_len = prompt.shape[1] + max_new_tokens
-    pre_logits, state = T.make_prefill(cfg)(
-        params, {"tokens": jnp.asarray(prompt)}, max_len)
-    first = jnp.argmax(pre_logits[:, -1], axis=-1)
-    out = [int(first[0])]
-    tok = first[:, None].astype(jnp.int32)
-    for _ in range(max_new_tokens - 1):
-        logits, state = step(params, state, tok)
-        nxt = jnp.argmax(logits[:, -1], axis=-1)
-        tok = nxt[:, None].astype(jnp.int32)
-        out.append(int(nxt[0]))
-    return np.asarray(out)[None]
+                   max_new_tokens: int, *,
+                   prefill_chunk: Optional[int] = None) -> np.ndarray:
+    """Greedy decode without any offload bookkeeping (parity oracle).
+
+    Dispatches through the plain plane of the unified runtime
+    (DESIGN.md §8): prompt prefill is the C = S case of the chunked
+    block program — every engine that must match this oracle bitwise
+    (continuous batching, packed offloading) runs the very same
+    programs, and ``prefill_chunk`` splits the prompt without changing
+    a single output bit."""
+    ex = Executor(params, cfg)
+    return ex.generate_greedy(prompt, max_new_tokens,
+                              prefill_chunk=prefill_chunk)

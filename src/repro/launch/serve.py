@@ -69,6 +69,14 @@ def build_parser() -> argparse.ArgumentParser:
                     help="P(new request arrives) per decode step")
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--slot-len", type=int, default=256)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: admit prompts C tokens per "
+                         "step so long prompts never stall in-flight "
+                         "decodes (bitwise-identical outputs; "
+                         "DESIGN.md §8)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="per-step token cap (decode rows + prefill "
+                         "chunks); default max_slots + prefill_chunk")
     ap.add_argument("--policy", default="overlap",
                     choices=["fcfs", "overlap"])
     ap.add_argument("--sampler", default="greedy",
@@ -140,6 +148,8 @@ def main():
                 params, cfg, max_slots=args.max_slots,
                 slot_len=args.slot_len,
                 sampler=SamplerConfig(kind=args.sampler), policy=policy,
+                prefill_chunk=args.prefill_chunk,
+                token_budget=args.token_budget,
                 seed=args.seed, offload=offload_eng)
         except ValueError as e:
             raise SystemExit(f"--continuous: {e}")

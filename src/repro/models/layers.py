@@ -240,41 +240,73 @@ def init_attn_cache(cfg, batch, max_len, window=None):
 
 
 def attention_decode(p, cfg, x_t, cache, cur_pos, *, window=None):
-    """One-token decode step with a (possibly rolling) KV cache.
+    """Decode / chunked-prefill step with a (possibly rolling) KV cache.
 
-    x_t: (B, 1, D); cur_pos: scalar int32 absolute position (whole batch
-    in lock-step) or (B,) int32 per-row positions (continuous batching).
+    x_t: (B, C, D) — C = 1 is the classic one-token decode step; C > 1
+    is a *prefill chunk*: the C tokens sit at consecutive positions
+    ``cur_pos .. cur_pos+C-1``, their K/V are written into the ring at
+    those slots (arbitrary offsets — the chunked-prefill KV protocol,
+    DESIGN.md §8), and causal masking inside :func:`attention_core`
+    keeps intra-chunk attention exact.  Requires C <= cache width.
+
+    cur_pos: scalar int32 absolute start position (whole batch in
+    lock-step) or (B,) int32 per-row positions (continuous batching).
     """
-    B = x_t.shape[0]
+    B, C = x_t.shape[0], x_t.shape[1]
     W = cache["k"].shape[1]
+    assert C <= W, f"chunk of {C} tokens exceeds KV width {W}"
     per_row = getattr(cur_pos, "ndim", 0) == 1
     q = _project_q(p, cfg, x_t)
     k_new, v_new = _project_kv(p, cfg, x_t)
     if per_row:
-        posq = cur_pos[:, None]  # (B, 1)
+        posq = cur_pos[:, None] + jnp.arange(C, dtype=jnp.int32)  # (B, C)
         q = apply_rope(q, posq, cfg)
         k_new = apply_rope(k_new, posq, cfg)
-        slot = jnp.mod(cur_pos, W)
-        bidx = jnp.arange(B)
-        cache = {
-            "k": cache["k"].at[bidx, slot].set(k_new[:, 0]),
-            "v": cache["v"].at[bidx, slot].set(v_new[:, 0]),
-            "pos": cache["pos"].at[bidx, slot].set(cur_pos.astype(jnp.int32)),
-        }
+        if C == 1:
+            slot = jnp.mod(cur_pos, W)
+            bidx = jnp.arange(B)
+            cache = {
+                "k": cache["k"].at[bidx, slot].set(k_new[:, 0]),
+                "v": cache["v"].at[bidx, slot].set(v_new[:, 0]),
+                "pos": cache["pos"].at[bidx, slot].set(
+                    cur_pos.astype(jnp.int32)),
+            }
+        else:
+            slots = jnp.mod(posq, W)  # (B, C)
+            bidx = jnp.arange(B)[:, None]
+            cache = {
+                "k": cache["k"].at[bidx, slots].set(k_new),
+                "v": cache["v"].at[bidx, slots].set(v_new),
+                "pos": cache["pos"].at[bidx, slots].set(
+                    posq.astype(jnp.int32)),
+            }
     else:
-        posq = jnp.reshape(cur_pos, (1,))
+        posq = cur_pos + jnp.arange(C, dtype=jnp.int32)  # (C,)
         q = apply_rope(q, posq, cfg)
         k_new = apply_rope(k_new, posq, cfg)
-        slot = jnp.mod(cur_pos, W)
-        pos_col = jnp.broadcast_to(posq.astype(jnp.int32), (B, 1))
-        cache = {
-            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1),
-            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1),
-            "pos": jax.lax.dynamic_update_slice_in_dim(
-                cache["pos"], pos_col, slot, axis=1),
-        }
+        if C == 1:
+            slot = jnp.mod(cur_pos, W)
+            pos_col = jnp.broadcast_to(posq.astype(jnp.int32), (B, 1))
+            cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k_new, slot, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v_new, slot, axis=1),
+                "pos": jax.lax.dynamic_update_slice_in_dim(
+                    cache["pos"], pos_col, slot, axis=1),
+            }
+        else:
+            # per-slot scatter (mod W) instead of a contiguous dynamic
+            # slice: chunk writes must wrap the ring like decode writes do
+            slots = jnp.mod(posq, W)  # (C,)
+            pos_row = jnp.broadcast_to(posq.astype(jnp.int32), (B, C))
+            cache = {
+                "k": cache["k"].at[:, slots].set(k_new),
+                "v": cache["v"].at[:, slots].set(v_new),
+                "pos": cache["pos"].at[:, slots].set(pos_row),
+            }
     o = attention_core(q, cache["k"], cache["v"], posq, cache["pos"],
-                       causal=True, window=window, q_chunk=1)
+                       causal=True, window=window, q_chunk=C)
     return _out_proj(p, cfg, o), cache
 
 

@@ -235,6 +235,69 @@ def moe_apply_gather(p, cfg, x2d, experts_override=None):
 
 
 # ----------------------------------------------------------------------
+def _packed_compute(cfg, x2d, served, w, *, fused: bool = True):
+    """The vectorized packed-MoE data plane shared by decode
+    (:func:`moe_apply_packed`) and chunked prefill
+    (:func:`moe_apply_packed_stream`): compute every (token, k) expert
+    matmul straight from the served packed slots ``(T*K, ...)`` leading.
+
+    ``fused=True`` runs the whole batch as one fused dequant-matmul
+    dispatch per matrix (``kernels/ops.dequant_matmul_batched``);
+    ``fused=False`` dequantizes per slot into exactly
+    :func:`moe_apply_gather`'s einsums.  Both bitwise-equal on this
+    backend (tested) — which is what makes decode and chunked prefill
+    interchangeable bitwise (DESIGN.md §8).
+    """
+    from repro.kernels import ops  # local import: keep kernels optional
+
+    T, K = w.shape
+    dt = x2d.dtype
+    ddt = jnp.dtype(cfg.dtype)
+    act = jax.nn.silu if cfg.mlp_act == "swiglu" else jax.nn.gelu
+    if fused:
+        xk = jnp.repeat(x2d, K, axis=0)[:, None, :]      # (T*K, 1, D)
+        g = ops.dequant_matmul_batched(xk, served.w_gate).astype(dt)
+        u = ops.dequant_matmul_batched(xk, served.w_up).astype(dt)
+        h = act(g.astype(jnp.float32)).astype(dt) * u
+        yk = ops.dequant_matmul_batched(h, served.w_down)  # (T*K, 1, D)
+        y = jnp.einsum("tkd,tk->td", yk.reshape(T, K, -1), w)
+    else:
+        dq = lambda qt: hqq.dequantize(qt, ddt).reshape(
+            (T, K) + tuple(qt.shape[1:]))
+        wg = dq(served.w_gate)   # (T, K, D, F)
+        wu = dq(served.w_up)
+        wd = dq(served.w_down)   # (T, K, F, D)
+        g = jnp.einsum("td,tkdf->tkf", x2d, wg)
+        u = jnp.einsum("td,tkdf->tkf", x2d, wu)
+        h = act(g.astype(jnp.float32)).astype(dt) * u
+        yk = jnp.einsum("tkf,tkfd->tkd", h, wd)
+        y = jnp.einsum("tkd,tk->td", yk.astype(jnp.float32), w)
+    return y.astype(dt)
+
+
+def moe_apply_packed_stream(p, cfg, x2d, store, l, *, fused: bool = True):
+    """Chunked-prefill MoE over the packed host store (DESIGN.md §8).
+
+    Routes the chunk's tokens, gathers the routed experts' packed bytes
+    straight from the host store in ONE batched ``pe_gather`` (the same
+    batch-plan gather :func:`~repro.core.expert_pool.acquire` uses for
+    pool misses), and computes with the shared :func:`_packed_compute`
+    plane.  No pool state is read or written and no transfer is counted:
+    prefill is the encode phase the paper's cache does not manage, so
+    chunked prefill leaves the LRU/staging tiers and the h2d counters
+    exactly as whole-prompt prefill does — untouched.
+
+    Bitwise-identical to :func:`moe_apply_gather` over the dequantized
+    expert stack (per-slot dequant commutes with stacking; same einsums).
+    Returns ``(y2d, route_info)``.
+    """
+    w, ids, probs = route_topk(p, cfg.moe, x2d)
+    T, K = ids.shape
+    served = EP.pe_gather(store, l, ids.reshape(T * K))
+    y = _packed_compute(cfg, x2d, served, w, fused=fused)
+    return y, {"ids": ids, "weights": w, "probs": probs}
+
+
 def moe_apply_packed(p, cfg, x2d, store, pstate, l, routers=None, *,
                      lookahead: int = 1, n_spec: int = 0, fused: bool = True,
                      active=None, vectorized: bool = True):
@@ -260,7 +323,7 @@ def moe_apply_packed(p, cfg, x2d, store, pstate, l, routers=None, *,
     predicted from the *current* hidden state (paper §3.2) and staged into
     its staging buffers — batch-1 interactive decode only, matching the
     paper's setting (batched continuous decode disables speculation).
-    The pipelined decoder (``core/offload_engine.PackedDecoder``) passes
+    The pipelined executor (``repro.runtime.Executor``) passes
     ``n_spec=0`` and instead dispatches staging asynchronously *outside*
     this jitted block (DESIGN.md §7).
 
@@ -277,24 +340,8 @@ def moe_apply_packed(p, cfg, x2d, store, pstate, l, routers=None, *,
     dt = x2d.dtype
     ddt = jnp.dtype(cfg.dtype)
     act = jax.nn.silu if cfg.mlp_act == "swiglu" else jax.nn.gelu
-    if vectorized and fused:
-        xk = jnp.repeat(x2d, K, axis=0)[:, None, :]      # (T*K, 1, D)
-        g = ops.dequant_matmul_batched(xk, served.w_gate).astype(dt)
-        u = ops.dequant_matmul_batched(xk, served.w_up).astype(dt)
-        h = act(g.astype(jnp.float32)).astype(dt) * u
-        yk = ops.dequant_matmul_batched(h, served.w_down)  # (T*K, 1, D)
-        y = jnp.einsum("tkd,tk->td", yk.reshape(T, K, -1), w)
-    elif vectorized:
-        dq = lambda qt: hqq.dequantize(qt, ddt).reshape(
-            (T, K) + tuple(qt.shape[1:]))
-        wg = dq(served.w_gate)   # (T, K, D, F)
-        wu = dq(served.w_up)
-        wd = dq(served.w_down)   # (T, K, F, D)
-        g = jnp.einsum("td,tkdf->tkf", x2d, wg)
-        u = jnp.einsum("td,tkdf->tkf", x2d, wu)
-        h = act(g.astype(jnp.float32)).astype(dt) * u
-        yk = jnp.einsum("tkf,tkfd->tkd", h, wd)
-        y = jnp.einsum("tkd,tk->td", yk.astype(jnp.float32), w)
+    if vectorized:
+        y = _packed_compute(cfg, x2d, served, w, fused=fused)
     elif fused:
         yk_rows = []
         for t in range(T):

@@ -518,6 +518,7 @@ def prefill(params, cfg: ModelConfig, batch, max_len: int):
 
 
 _ENGINE_JIT_CACHE: Dict[Any, Any] = {}
+_ENGINE_JIT_STATS: Dict[str, int] = {"builds": 0, "hits": 0}
 
 
 def cached_jit(key, make):
@@ -533,8 +534,35 @@ def cached_jit(key, make):
     specific is baked into the cache entry.
     """
     if key not in _ENGINE_JIT_CACHE:
+        _ENGINE_JIT_STATS["builds"] += 1
         _ENGINE_JIT_CACHE[key] = make()
+    else:
+        _ENGINE_JIT_STATS["hits"] += 1
     return _ENGINE_JIT_CACHE[key]
+
+
+def cached_jit_stats() -> Dict[str, Any]:
+    """Introspection for the engine-executable cache (DESIGN.md §8):
+    ``builds`` counts ``make()`` invocations (one per distinct program
+    key per process — the compile-once invariant the runtime executor's
+    tests assert), ``hits`` the cache reuses, ``entries``/``keys`` the
+    live cache contents."""
+    return {**_ENGINE_JIT_STATS,
+            "entries": len(_ENGINE_JIT_CACHE),
+            "keys": list(_ENGINE_JIT_CACHE.keys())}
+
+
+def cached_jit_clear() -> None:
+    """Drop every cached engine executable (and its stats).
+
+    The explicit hook conftest uses after memory-heavy test modules:
+    ``jax.clear_caches()`` invalidates the underlying XLA executables,
+    but the jitted *wrappers* held here would pin their constants/params
+    closures alive — clearing both releases the memory and resets the
+    compile-once accounting for the next measurement."""
+    _ENGINE_JIT_CACHE.clear()
+    _ENGINE_JIT_STATS["builds"] = 0
+    _ENGINE_JIT_STATS["hits"] = 0
 
 
 def make_prefill(cfg: ModelConfig):
@@ -550,7 +578,14 @@ def make_prefill(cfg: ModelConfig):
 # Decode
 def decode_step(params, cfg: ModelConfig, state, tokens, *,
                 moe_mode: str = "dispatch", collect_info: bool = False):
-    """tokens: (B, 1) int32. Returns (logits (B,1,V), new_state[, infos]).
+    """tokens: (B, C) int32. Returns (logits (B,C,V), new_state[, infos]).
+
+    C = 1 is the classic one-token decode step.  C > 1 is a *prefill
+    chunk* (attention-mixer stacks only): the chunk's K/V are written
+    into the caches at positions ``pos .. pos+C-1`` and ``pos`` advances
+    by C — the runtime executor drives chunked prefill through exactly
+    this step (DESIGN.md §8), so decode and chunked prefill share one
+    block program.
 
     ``state["pos"]`` may be a scalar (whole batch in lock-step) or (B,)
     per-row positions (continuous batching / padded prefill).
@@ -559,15 +594,24 @@ def decode_step(params, cfg: ModelConfig, state, tokens, *,
     (per-token expert-weight gather — interactive decode / routing
     collection).  The third mode, "packed" (HQQ-packed experts served
     from the device buffer pool), runs through the layerwise driver
-    (``core/offload_engine.PackedDecoder`` -> :func:`decode_block_packed`)
-    rather than this scanned step, because its slot state threads across
-    layers; on this backend the layerwise loop is bitwise-identical to
-    the scan (tests/test_offload.py)."""
+    (``repro.runtime.Executor`` packed planes ->
+    :func:`decode_block_packed`) rather than this scanned step, because
+    its slot state threads across layers; on this backend the layerwise
+    loop is bitwise-identical to the scan (tests/test_offload.py)."""
     if moe_mode == "packed":
         raise ValueError(
             "moe_mode='packed' threads buffer-pool state across layers; "
-            "drive it with core/offload_engine.PackedDecoder.decode "
+            "drive it with a packed-plane repro.runtime.Executor "
             "(layerwise decode_block_packed), not the scanned decode_step")
+    if tokens.shape[1] > 1 and not cfg.attention_only_stack:
+        # recurrent mixers (rglru/mlstm/slstm) fold exactly ONE token
+        # into their state per decode call — a C > 1 chunk would silently
+        # drop every token after the first (trace-time check, free)
+        raise ValueError(
+            f"prefill chunks (C={tokens.shape[1]} > 1) need a causal-"
+            f"attention stack; {cfg.name}'s recurrent/enc-dec mixers "
+            f"advance one token per step — use forward_train-based "
+            f"prefill (transformer.make_prefill) for this arch")
     x = L.embed(params["embed"], cfg, tokens)
     pos = state["pos"]
     period = cfg.pattern_period
@@ -622,7 +666,7 @@ def decode_step(params, cfg: ModelConfig, state, tokens, *,
     x = L.apply_norm(params["final_norm"], cfg, x)
     logits = L.unembed(params, cfg, x)
     new_state = dict(state, stack=list(new_stack), tail=new_tail,
-                     pos=pos + 1)
+                     pos=pos + tokens.shape[1])
     if collect_info:
         return logits, new_state, (info_stack, infos)
     return logits, new_state

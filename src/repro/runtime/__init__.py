@@ -1,0 +1,12 @@
+"""Unified step-plan runtime (DESIGN.md §8): one block-execution core
+(:class:`~repro.runtime.executor.Executor`) with interchangeable planes
+(plain / packed_vectorized / packed_pipelined), plus the step-plan data
+model (:class:`~repro.runtime.plan.StepPlan`) and the chunked-prefill
+token-budget policy (:class:`~repro.runtime.plan.TokenBudgetPolicy`)
+every serving engine schedules with."""
+from repro.runtime.executor import PLANES, Executor
+from repro.runtime.plan import (Admission, ChunkTask, StepPlan,
+                                TokenBudgetPolicy)
+
+__all__ = ["Executor", "PLANES", "Admission", "ChunkTask", "StepPlan",
+           "TokenBudgetPolicy"]

@@ -1,0 +1,407 @@
+"""The unified block-execution core every engine dispatches through
+(DESIGN.md §8).
+
+One :class:`Executor` owns the per-layer-kind jitted block programs for a
+model and runs them in three interchangeable **planes**:
+
+* ``plain``             — dense resident weights, per-token expert gather
+  (``moe_apply_gather``) through the scanned ``transformer.decode_step``;
+* ``packed_vectorized`` — HQQ-packed experts served from the device
+  buffer pool with the vectorized slot plans, staging synchronous inside
+  the block program (DESIGN.md §6/§7);
+* ``packed_pipelined``  — same data plane, but each MoE block splits into
+  mixer / MoE / staging dispatches so speculative host→device copies
+  overlap the next block's compute (DESIGN.md §7).
+
+Every step is a **chunk**: decode is the C = 1 case and a prefill chunk
+is the C > 1 case of the same block program (``decode_step`` /
+``decode_block_packed*`` — the KV caches are written at positions
+``pos .. pos+C−1``).  Whole-prompt prefill is therefore *chunked prefill
+with one chunk*, which is what makes chunked ≡ whole bitwise: chunk size
+only changes the number of query rows per dispatch, and every reduction
+(softmax over the KV width, per-row matmuls) keeps its shape
+(tests/test_runtime.py asserts bitwise equality on all planes).
+
+Packed-plane prefill chunks stream their routed experts straight from
+the host store (one ``pe_gather`` batch plan per layer per chunk,
+``moe_apply_packed_stream``) and leave the LRU pool, staging tiers and
+transfer counters untouched — prefill is the encode phase the paper's
+cache does not manage, so chunking adds zero pool traffic.
+
+All programs go through ``transformer.cached_jit`` under config-keyed
+names, so every engine and every Executor instance of the same
+(cfg, plane, mode) shares one compiled program per process
+(``cached_jit_stats`` asserts this in the tests).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, OffloadSpec, parse_block
+from repro.core import expert_pool as EP
+from repro.core import speculative
+from repro.core.trace import stacked_routers
+from repro.models import moe as M
+from repro.models import transformer as T
+
+PLANES = ("plain", "packed_vectorized", "packed_pipelined")
+
+
+class Executor:
+    """Unified step-plan executor (module docstring; DESIGN.md §8).
+
+    ``spec``/``store`` are required for the packed planes (the offload
+    configuration and the packed host store from
+    ``quantize_for_offload(..., pack_experts=True)``).  ``fused`` /
+    ``vectorized`` select the packed data plane (fused dequant-matmul
+    kernels; batched vs PR-2 sequential slot swaps) — kept for the
+    offload benchmark's measured baselines.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, plane: str = "plain",
+                 spec: Optional[OffloadSpec] = None, store=None,
+                 fused: bool = True, vectorized: bool = True):
+        if plane not in PLANES:
+            raise ValueError(f"unknown plane {plane!r}; one of {PLANES}")
+        self.plane = plane
+        self.packed = plane != "plain"
+        self.pipelined = plane == "packed_pipelined"
+        self.params = params
+        self.cfg = cfg
+        self.spec = spec
+        self.store = store
+        self.fused = fused
+        self.vectorized = vectorized
+        if self.packed:
+            if spec is None or store is None:
+                raise ValueError("packed planes need spec= and store= "
+                                 "(see quantize_for_offload)")
+            self.routers = jnp.asarray(stacked_routers(params, cfg))
+            self.n_moe_layers = int(self.routers.shape[0])
+            self.kinds = cfg.layer_kinds()
+            # MoE ordinal of each absolute layer (period-major — the
+            # order stacked_routers / the store use)
+            self.moe_ordinal: Dict[int, int] = {}
+            for l, k in enumerate(self.kinds):
+                if parse_block(k)[1] == "moe":
+                    self.moe_ordinal[l] = len(self.moe_ordinal)
+            self._layer_p = [T.layer_params(params, cfg, l)
+                             for l in range(cfg.n_layers)]
+            self._jit_embed = T.cached_jit(
+                ("embed", cfg), lambda: jax.jit(
+                    lambda p, t: T.embed_tokens(p, cfg, t)))
+            self._jit_head = T.cached_jit(
+                ("head", cfg), lambda: jax.jit(
+                    lambda p, x: T.apply_head(p, cfg, x)))
+            # mode key: packed-block executables are shared across
+            # executor instances with identical config+flags
+            self._mode = (cfg, spec, fused, self.pipelined, vectorized)
+            self._blk: Dict[Any, Any] = {}
+
+    # ------------------------------------------------------------------
+    # state / pool construction
+    def init_state(self, batch: int, max_len: int):
+        """Fresh decode state (stacked layout, scalar pos 0)."""
+        return T.init_decode_state(self.cfg, batch, max_len)
+
+    def init_pool_state(self) -> "EP.PoolState":
+        assert self.packed, "buffer pools exist on packed planes only"
+        return EP.init_pool_state(self.store, self.spec)
+
+    # ------------------------------------------------------------------
+    # plain-plane programs (shared cache keys predate the runtime
+    # refactor — every engine keeps reusing the same executables)
+    def _plain_step(self, collect_info: bool):
+        key = ("decode_gather_info" if collect_info else "decode_gather",
+               self.cfg)
+        cfg = self.cfg
+        if collect_info:
+            make = lambda: jax.jit(lambda p, st, tk: T.decode_step(
+                p, cfg, st, tk, moe_mode="gather", collect_info=True))
+        else:
+            make = lambda: jax.jit(lambda p, st, tk: T.decode_step(
+                p, cfg, st, tk, moe_mode="gather"))
+        return T.cached_jit(key, make)
+
+    def _plain_step_sampled(self, collect_info: bool, greedy: bool):
+        cfg, collect = self.cfg, collect_info
+
+        def make():
+            if collect:
+                def _step_fn(p, st, tk):
+                    logits, st, infos = T.decode_step(
+                        p, cfg, st, tk, moe_mode="gather",
+                        collect_info=True)
+                    nxt = (jnp.argmax(logits[:, -1], -1)
+                           .astype(jnp.int32) if greedy
+                           else logits[:, -1])
+                    return nxt, st, infos
+            else:
+                def _step_fn(p, st, tk):
+                    logits, st = T.decode_step(p, cfg, st, tk,
+                                               moe_mode="gather")
+                    nxt = (jnp.argmax(logits[:, -1], -1)
+                           .astype(jnp.int32) if greedy
+                           else logits[:, -1])
+                    return nxt, st
+            return jax.jit(_step_fn, donate_argnums=1)
+        return T.cached_jit(("cont_step", cfg, collect, greedy), make)
+
+    # ------------------------------------------------------------------
+    # packed-plane per-kind block programs (moved from the PR-2/PR-3
+    # PackedDecoder — identical cache keys, identical programs)
+    def _decode_blk(self, kind: str):
+        if kind not in self._blk:
+            # locals only in the closures: a `self` capture would pin the
+            # whole executor (params + store) in the process-wide cache
+            cfg, spec = self.cfg, self.spec
+            fused, vectorized = self.fused, self.vectorized
+            if parse_block(kind)[1] == "moe":
+                def make():
+                    fn = lambda p, x, st, pos, store, ps, lm, routers, \
+                        act: T.decode_block_packed(
+                            p, cfg, kind, x, st, pos, store, ps, lm,
+                            routers, lookahead=spec.lookahead,
+                            n_spec=spec.num_speculative, fused=fused,
+                            active=act, vectorized=vectorized)
+                    return jax.jit(fn, donate_argnums=(5,))
+                key = ("packed_blk", self._mode, kind)
+            else:
+                def make():
+                    fn = lambda p, x, st, pos: T._block_decode(
+                        p, cfg, kind, x, st, pos, moe_mode="gather")
+                    return jax.jit(fn)
+                # a non-MoE block's program depends only on (cfg, kind) —
+                # identical across offload modes
+                key = ("packed_blk_plain", cfg, kind)
+            self._blk[kind] = T.cached_jit(key, make)
+        return self._blk[kind]
+
+    def _mixer_blk(self, kind: str):
+        key = ("mixer", kind)
+        if key not in self._blk:
+            cfg = self.cfg
+            self._blk[key] = T.cached_jit(
+                ("packed_mixer", cfg, kind),
+                lambda: jax.jit(
+                    lambda p, x, st, pos: T.decode_block_packed_mixer(
+                        p, cfg, kind, x, st, pos)))
+        return self._blk[key]
+
+    def _moe_blk(self):
+        if "moe_ffn" not in self._blk:
+            cfg = self.cfg
+            fused, vectorized = self.fused, self.vectorized
+
+            def make():
+                fn = lambda p, x, h2, store, ps, lm, act: \
+                    T.decode_block_packed_moe(
+                        p, cfg, x, h2, store, ps, lm, fused=fused,
+                        vectorized=vectorized, active=act)
+                return jax.jit(fn, donate_argnums=(4,))
+            self._blk["moe_ffn"] = T.cached_jit(("packed_moe", self._mode),
+                                                make)
+        return self._blk["moe_ffn"]
+
+    def _stage_blk(self):
+        if "stage" not in self._blk:
+            n_spec = self.spec.num_speculative
+            vectorized = self.vectorized
+
+            def make():
+                def fn(store, ps, tgt, hidden, routers):
+                    pred = speculative.predict_experts(
+                        routers[tgt], hidden, n_spec)[0]
+                    return EP.stage(store, ps, tgt, pred, True,
+                                    vectorized=vectorized)
+                return jax.jit(fn, donate_argnums=(1,))
+            self._blk["stage"] = T.cached_jit(("packed_stage", self._mode),
+                                              make)
+        return self._blk["stage"]
+
+    def _chunk_moe_blk(self):
+        """Prefill-chunk MoE: route + store-gather + packed compute — no
+        pool state in the program at all (DESIGN.md §8)."""
+        if "chunk_moe" not in self._blk:
+            cfg, fused = self.cfg, self.fused
+
+            def make():
+                def fn(p, x, h2, store, lm):
+                    B, C, D = h2.shape
+                    y2d, _ = M.moe_apply_packed_stream(
+                        p["moe"], cfg, h2.reshape(B * C, D), store, lm,
+                        fused=fused)
+                    return x + y2d.reshape(B, C, D)
+                return jax.jit(fn)
+            self._blk["chunk_moe"] = T.cached_jit(
+                ("packed_chunk_moe", cfg, fused), make)
+        return self._blk["chunk_moe"]
+
+    # ------------------------------------------------------------------
+    def decode(self, state, tokens, pstate=None, active=None, *,
+               collect_info: bool = False):
+        """One decode step for every row — the unified engine entry.
+
+        tokens: (B, 1) int32.  Returns ``(logits, state', pstate',
+        info)`` on every plane; ``pstate`` threads the expert buffer pool
+        (packed planes; ``None`` on plain), ``active`` (B,) bool masks
+        rows whose output is discarded (continuous batching free slots).
+        ``info`` is the per-MoE-layer route-id list on packed planes, the
+        raw ``decode_step`` info stack when ``collect_info`` on plain,
+        else ``None``.
+        """
+        if not self.packed:
+            if collect_info:
+                logits, state, infos = self._plain_step(True)(
+                    self.params, state, tokens)
+                return logits, state, None, infos
+            logits, state = self._plain_step(False)(
+                self.params, state, tokens)
+            return logits, state, None, None
+        cfg = self.cfg
+        x = self._jit_embed(self.params, tokens)
+        pos = state["pos"]
+        B = int(tokens.shape[0])
+        # speculation is the paper's batch-1 interactive feature (batched
+        # continuous decode disables it) — same gate the synchronous
+        # block applies inside jit via moe_apply_packed's T == 1 check
+        speculate = (self.pipelined and self.spec.num_speculative > 0
+                     and B * int(tokens.shape[1]) == 1)
+        route_ids = []
+        for l, kind in enumerate(self.kinds):
+            st_l = T.decode_state_layer(state, cfg, l)
+            if l in self.moe_ordinal:
+                lm = jnp.asarray(self.moe_ordinal[l], jnp.int32)
+                if self.pipelined:
+                    x, st_l, h2 = self._mixer_blk(kind)(
+                        self._layer_p[l], x, st_l, pos)
+                    x, pstate, info = self._moe_blk()(
+                        self._layer_p[l], x, h2, self.store, pstate, lm,
+                        active)
+                    tgt = self.moe_ordinal[l] + self.spec.lookahead
+                    if speculate and tgt < self.n_moe_layers:
+                        pstate = self._stage_blk()(
+                            self.store, pstate,
+                            jnp.asarray(tgt, jnp.int32),
+                            info["hidden_pre_moe"], self.routers)
+                else:
+                    x, st_l, pstate, info = self._decode_blk(kind)(
+                        self._layer_p[l], x, st_l, pos, self.store, pstate,
+                        lm, self.routers, active)
+                route_ids.append(info["route"]["ids"])
+            else:
+                x, st_l, _ = self._decode_blk(kind)(
+                    self._layer_p[l], x, st_l, pos)
+            state = T.set_decode_state_layer(state, cfg, l, st_l)
+        logits = self._jit_head(self.params, x)
+        state = dict(state, pos=pos + 1)
+        return logits, state, pstate, route_ids
+
+    def decode_sampled(self, state, tokens, *, collect_info: bool,
+                       greedy: bool):
+        """Plain-plane decode with sampling prep fused into the jitted
+        step (greedy argmax on-device / last-position logits) and the
+        state donated — the continuous engine's hot loop."""
+        assert not self.packed, "packed decode returns logits; sample host-side"
+        return self._plain_step_sampled(collect_info, greedy)(
+            self.params, state, tokens)
+
+    # ------------------------------------------------------------------
+    def prefill_chunk(self, state, tokens, pstate=None):
+        """Process prompt chunk ``tokens`` (B, C) at the rows' current
+        positions: KV written at ``pos .. pos+C−1``, ``pos`` advances by
+        C.  Returns ``(logits (B, C, V), state', pstate')`` — chunk MoE
+        never touches the pool state (module docstring)."""
+        if not self.packed:
+            logits, state = self._plain_step(False)(
+                self.params, state, tokens)
+            return logits, state, pstate
+        cfg = self.cfg
+        x = self._jit_embed(self.params, tokens)
+        pos = state["pos"]
+        for l, kind in enumerate(self.kinds):
+            st_l = T.decode_state_layer(state, cfg, l)
+            if l in self.moe_ordinal:
+                lm = jnp.asarray(self.moe_ordinal[l], jnp.int32)
+                x, st_l, h2 = self._mixer_blk(kind)(
+                    self._layer_p[l], x, st_l, pos)
+                x = self._chunk_moe_blk()(
+                    self._layer_p[l], x, h2, self.store, lm)
+            else:
+                x, st_l, _ = self._decode_blk(kind)(
+                    self._layer_p[l], x, st_l, pos)
+            state = T.set_decode_state_layer(state, cfg, l, st_l)
+        logits = self._jit_head(self.params, x)
+        state = dict(state, pos=pos + tokens.shape[1])
+        return logits, state, pstate
+
+    def prefill(self, tokens, max_len: int, *, chunk: Optional[int] = None,
+                pstate=None):
+        """Whole-prompt prefill = chunked prefill over a fresh state.
+
+        tokens: (B, S) int32, no padding (rows prefill alone or in
+        equal-length lock-step; the static engine's left-padded batches
+        go through :meth:`prefill_padded`).  ``chunk=None`` processes the
+        prompt as ONE chunk; any chunking is bitwise-identical
+        (tests/test_runtime.py).  Returns (logits of the last chunk,
+        state, pstate).
+
+        Recurrent / enc-dec stacks cannot chunk (their mixers fold one
+        token per decode call — ``decode_step`` rejects C > 1): the
+        plain plane falls back to the full-sequence ``forward_train``
+        prefill for them, and an explicit ``chunk`` raises.
+        """
+        tokens = jnp.asarray(tokens)
+        B, S = tokens.shape
+        if not self.cfg.attention_only_stack:
+            if chunk is not None and chunk < S:
+                raise ValueError(
+                    f"chunked prefill needs a causal-attention stack; "
+                    f"{self.cfg.name} has recurrent/enc-dec mixers")
+            assert not self.packed, \
+                "packed planes need fully-scanned attention+MoE stacks"
+            logits, state = T.make_prefill(self.cfg)(
+                self.params, {"tokens": tokens}, max_len)
+            return logits, state, pstate
+        C = S if chunk is None else max(1, min(int(chunk), S))
+        state = self.init_state(B, max_len)
+        logits = None
+        for lo in range(0, S, C):
+            logits, state, pstate = self.prefill_chunk(
+                state, tokens[:, lo: lo + C], pstate)
+        return logits, state, pstate
+
+    def prefill_padded(self, batch, max_len: int):
+        """Left-padded batched prefill (static ``ServeEngine`` shape):
+        the full-sequence ``forward_train`` pass with pad-mask isolation
+        — a *different* program from the chunk path (dispatch MoE, S×S
+        attention), kept for throughput-oriented static batches where
+        all rows prefill together."""
+        assert not self.packed, "packed engines prefill through chunks"
+        return T.make_prefill(self.cfg)(self.params, batch, max_len)
+
+    # ------------------------------------------------------------------
+    def generate_greedy(self, prompt, max_new_tokens: int, *,
+                        prefill_chunk: Optional[int] = None) -> np.ndarray:
+        """Greedy decode of one prompt (1, S) — the parity oracle loop
+        shared by ``generate_plain`` and the tests.  Plain plane only
+        (the offload engine drives the packed planes with stats/usage
+        accounting around the same Executor calls)."""
+        assert not self.packed
+        prompt = jnp.asarray(prompt)
+        max_len = int(prompt.shape[1]) + max_new_tokens
+        pre_logits, state, _ = self.prefill(prompt, max_len,
+                                            chunk=prefill_chunk)
+        first = jnp.argmax(pre_logits[:, -1], axis=-1)
+        out = [int(first[0])]
+        tok = first[:, None].astype(jnp.int32)
+        for _ in range(max_new_tokens - 1):
+            logits, state, _, _ = self.decode(state, tok)
+            nxt = jnp.argmax(logits[:, -1], axis=-1)
+            tok = nxt[:, None].astype(jnp.int32)
+            out.append(int(nxt[0]))
+        return np.asarray(out)[None]

@@ -1,0 +1,118 @@
+"""Step plans: what each sequence does in one engine step (DESIGN.md §8).
+
+A serving step is no longer "decode every running row": with chunked
+prefill, one step mixes *decode items* (one token for a running row) and
+*prefill chunks* (``[lo, hi)`` of an admitting request's prompt, written
+into its KV slot at that offset).  :class:`StepPlan` is the pure
+description of such a mixed batch; :class:`TokenBudgetPolicy` builds one
+per step under a hard token budget, so a long prompt can never
+head-of-line-block the in-flight decodes — the scheduling lever the MoE
+serving literature (Liu et al. 2024 survey; MoBiLE) identifies for
+keeping the expert stream busy through prompt processing.
+
+Invariants (property-tested in ``tests/test_runtime.py``):
+
+* a plan never exceeds ``token_budget`` total tokens;
+* a request's chunks are emitted in order and partition its prompt;
+* decode rows are never starved — every running row decodes every step
+  (prefill only spends the *surplus* budget), so the starvation bound
+  is zero steps;
+* the first admission always makes progress (liveness): the constructor
+  rejects budgets below ``chunk_size + max_rows``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Sequence
+
+
+@dataclass
+class ChunkTask:
+    """One prefill chunk ``[lo, hi)`` of one request's prompt."""
+
+    rid: int
+    slot: int
+    lo: int
+    hi: int
+    last: bool  # final chunk: sample the first token, row joins decode
+
+
+@dataclass
+class Admission:
+    """Engine-side record of a request being chunk-prefilled into its
+    slot: the B=1 decode state accumulates chunk KV between steps and is
+    scattered into the slotted state after the last chunk."""
+
+    rid: int
+    slot: int
+    total: int              # prompt length
+    next_lo: int = 0
+    state: Any = None       # B=1 decode state under construction
+    pstate: Any = None      # unused by packed chunks (store-streamed)
+    req: Any = None         # engine-side request handle
+
+    @property
+    def done(self) -> bool:
+        return self.next_lo >= self.total
+
+
+@dataclass
+class StepPlan:
+    """The mixed batch one engine step executes."""
+
+    decode_rows: List[int] = field(default_factory=list)
+    chunks: List[ChunkTask] = field(default_factory=list)
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(c.hi - c.lo for c in self.chunks)
+
+    @property
+    def total_tokens(self) -> int:
+        return len(self.decode_rows) + self.prefill_tokens
+
+
+@dataclass(frozen=True)
+class TokenBudgetPolicy:
+    """Per-step token budget packing decode rows + prefill chunks.
+
+    Decode rows are always scheduled (they are the latency-critical
+    tokens and each costs 1); the remaining budget is filled with prefill
+    chunks in admission order.  Chunks are ``chunk_size`` tokens except a
+    request's final remainder, so the set of compiled chunk shapes stays
+    bounded by the distinct remainders (jit retraces per shape).
+    """
+
+    chunk_size: int
+    token_budget: int
+    max_rows: int  # engine slot count — bounds the decode-row reserve
+
+    def __post_init__(self):
+        if self.chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got "
+                             f"{self.chunk_size}")
+        floor = self.chunk_size + self.max_rows
+        if self.token_budget < floor:
+            raise ValueError(
+                f"token_budget={self.token_budget} cannot make progress: "
+                f"needs >= chunk_size + max_rows = {floor} so one chunk "
+                f"always fits beside a full decode batch")
+
+    def plan(self, decode_rows: Sequence[int],
+             admissions: Sequence[Admission]) -> StepPlan:
+        plan = StepPlan(decode_rows=list(decode_rows))
+        budget = self.token_budget - len(plan.decode_rows)
+        for adm in admissions:
+            lo = adm.next_lo
+            while lo < adm.total:
+                take = min(self.chunk_size, adm.total - lo)
+                if take > budget:
+                    break
+                plan.chunks.append(ChunkTask(
+                    rid=adm.rid, slot=adm.slot, lo=lo, hi=lo + take,
+                    last=(lo + take) >= adm.total))
+                budget -= take
+                lo += take
+            if lo < adm.total:
+                break  # keep admission order: don't leapfrog a stalled one
+        return plan

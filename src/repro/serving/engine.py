@@ -1,28 +1,42 @@
 """Serving engines (non-offloaded accelerator path).
 
-Two modes:
+Two modes, both dispatching through the unified runtime
+(:class:`repro.runtime.Executor` — DESIGN.md §8; no engine owns a
+private copy of the block-step bodies):
 
 * :class:`ServeEngine` — static batch: left-pads a fixed request set to a
   common length and decodes until every request finishes.  Pad positions
   are excluded from attention and from MoE dispatch capacity via the
-  ``pad_mask`` threaded through ``T.prefill`` (DESIGN.md §2).
+  ``pad_mask`` threaded through the padded prefill (DESIGN.md §2).
 * :class:`ContinuousEngine` — continuous batching: requests join and
   leave a *running* batch (DESIGN.md §4).  A slotted KV state
   (``serving/kv_manager``) holds ``max_slots`` sequences at independent
-  positions; each admitted request is prefilled alone (B=1, exact
-  length — bitwise identical to the ``generate_plain`` oracle, since MoE
-  dispatch capacity depends on batch composition) and scattered into a
-  free slot; finished requests release their slot the same step.  Which
-  waiting request joins next is the scheduler policy's call — the
-  expert-overlap policy groups requests that reuse the experts the
-  in-flight batch keeps hot (``serving/scheduler``).
+  positions; admission prefill runs through the executor's chunk program
+  (B=1, the whole prompt as one chunk by default — bitwise identical to
+  the ``generate_plain`` oracle, which runs the same program), and
+  finished requests release their slot the same step.  Which waiting
+  request joins next is the scheduler policy's call (expert-overlap
+  grouping, ``serving/scheduler``).
+
+  With ``prefill_chunk=C`` admission becomes **chunked prefill**
+  (DESIGN.md §8): each step executes a :class:`~repro.runtime.StepPlan`
+  mixing one decode token per running row with prompt chunks packed
+  under a :class:`~repro.runtime.TokenBudgetPolicy` — a long prompt no
+  longer head-of-line-blocks the in-flight decodes.  Chunking never
+  changes a *logit* bit, so under greedy decoding the generated tokens
+  are bitwise those of unchunked admission (tests/test_runtime.py);
+  stochastic samplers stay distribution-identical but consume the
+  engine rng stream in a different step order, so sampled streams are
+  reproducible per seed, not across chunk settings.
 
 The memory-constrained interactive mode is
 ``core/offload_engine.OffloadEngine`` (the paper's contribution).
 :class:`ContinuousEngine` composes with it: passing a packed offload
 engine (``offload=...``) switches decode to the HQQ-packed expert
 buffer pool — continuous batching over offloaded experts, with the pool
-shared across the running batch (DESIGN.md §6).
+shared across the running batch (DESIGN.md §6) and prefill chunks
+streaming their experts straight from the host store (zero pool
+traffic, DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -36,7 +50,8 @@ import numpy as np
 from repro.configs.base import ModelConfig, parse_block
 from repro.core.offload_engine import (ExpertUsageTracker, routing_from_info)
 from repro.data.pipeline import EOS
-from repro.models import transformer as T
+from repro.runtime import (Admission, ChunkTask, Executor, StepPlan,
+                           TokenBudgetPolicy)
 from repro.serving.kv_manager import KVSlotManager
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.scheduler import GenRequest, Scheduler
@@ -55,13 +70,7 @@ class ServeEngine:
         self.params = params
         self.cfg = cfg
         self.sampler = sampler or SamplerConfig(kind="greedy")
-        self._decode = T.cached_jit(
-            ("decode_gather", cfg),
-            lambda: jax.jit(lambda p, st, tk: T.decode_step(
-                p, cfg, st, tk, moe_mode="gather")))
-        # one persistent jit so repeated serve_batch calls with the same
-        # shapes reuse the compiled prefill instead of retracing
-        self._prefill = T.make_prefill(cfg)
+        self._exec = Executor(params, cfg)
 
     def serve_batch(self, requests: List[Request], seed: int = 0
                     ) -> List[Request]:
@@ -89,7 +98,7 @@ class ServeEngine:
         batch = {"tokens": jnp.asarray(toks)}
         if needs_pad:
             batch["pad_mask"] = jnp.asarray(mask)
-        pre_logits, state = self._prefill(self.params, batch, S + max_new)
+        pre_logits, state = self._exec.prefill_padded(batch, S + max_new)
         rng = jax.random.key(seed)
         rng, sub = jax.random.split(rng)
         tok = sample(sub, pre_logits[:, -1], self.sampler)
@@ -97,7 +106,7 @@ class ServeEngine:
         for i in range(B):
             requests[i].completed.append(int(tok[i]))
         for step in range(max_new - 1):
-            logits, state = self._decode(self.params, state, tok[:, None])
+            logits, state, _, _ = self._exec.decode(state, tok[:, None])
             rng, sub = jax.random.split(rng)
             tok = sample(sub, logits[:, -1], self.sampler)
             for i, r in enumerate(requests):
@@ -118,26 +127,35 @@ class ContinuousEngine:
     """Continuous-batching decode loop over a slotted KV state.
 
     Per step: (1) admit policy-selected waiting requests into free slots
-    (B=1 prefill, scattered into the slot), (2) one batched
-    ``decode_step`` over all slots with per-row positions, (3) sample,
-    stream tokens to request callbacks, evict finished requests.  Free
-    slots decode a dummy token whose output is ignored and whose state is
+    — whole-prompt prefill (one chunk) by default, budgeted prompt
+    chunks with ``prefill_chunk=C`` — (2) one batched executor decode
+    step over the running slots with per-row positions, (3) sample
+    (through ``serving/sampler`` with per-request temperatures), stream
+    tokens to request callbacks, evict finished requests.  Free slots
+    decode a dummy token whose output is ignored and whose state is
     fully overwritten at the next admission.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, max_slots: int = 4,
                  slot_len: int = 256, sampler: Optional[SamplerConfig] = None,
                  policy=None, eos_id: Optional[int] = EOS,
-                 prefill_bucket: int = 1, seed: int = 0, offload=None):
+                 prefill_chunk: Optional[int] = None,
+                 token_budget: Optional[int] = None,
+                 seed: int = 0, offload=None):
         """``offload``: a packed :class:`~repro.core.offload_engine.
         OffloadEngine` (``quantized=True``) switches this engine into
         **offloaded decode mode** (DESIGN.md §6): experts stay HQQ-packed
         in the offload engine's host store, every decode step serves the
         batch's routed experts from the per-layer device buffer pool
         (shared across requests — the expert-overlap admission policy is
-        what makes that sharing pay), and admissions prefill through
-        per-slot-dequant expert streaming.  ``params`` is ignored in that
-        mode (the offload engine's executable params are used)."""
+        what makes that sharing pay), and admission prefill streams
+        experts from the host store chunk-wise.  ``params`` is ignored in
+        that mode (the offload engine's executable params are used).
+
+        ``prefill_chunk``: admission prompt chunk size; ``None`` = whole
+        prompt per step (one chunk).  ``token_budget`` caps the tokens
+        one step computes (decode rows + prefill chunks); default
+        ``max_slots + prefill_chunk``."""
         self.offload = offload
         if offload is not None:
             if offload._decoder is None:
@@ -146,17 +164,34 @@ class ContinuousEngine:
             if offload.cfg is not cfg and offload.cfg != cfg:
                 raise ValueError("offload engine config mismatch")
             params = offload.params
-            self._dec = offload._decoder
-            self._pstate = self._dec.init_pool_state()
+            self._exec: Executor = offload._decoder
+            self._pstate = self._exec.init_pool_state()
+        else:
+            self._exec = Executor(params, cfg)
         self.params = params
         self.cfg = cfg
         self.sampler = sampler or SamplerConfig(kind="greedy")
         self.max_slots = max_slots
         self.slot_len = slot_len
         self.eos_id = eos_id
-        self.prefill_bucket = max(1, prefill_bucket)
         self.kv = KVSlotManager(cfg, max_slots, slot_len)
         self.sched = Scheduler(max_slots, policy)
+        self.prefill_chunk = prefill_chunk
+        self.budget: Optional[TokenBudgetPolicy] = None
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+            if prefill_chunk > slot_len:
+                raise ValueError(f"prefill_chunk={prefill_chunk} exceeds "
+                                 f"slot_len={slot_len} (the KV ring width)")
+            self.budget = TokenBudgetPolicy(
+                chunk_size=prefill_chunk,
+                token_budget=token_budget or (max_slots + prefill_chunk),
+                max_rows=max_slots)
+        elif token_budget is not None:
+            raise ValueError("token_budget needs prefill_chunk (the budget "
+                             "schedules prompt chunks)")
+        self._admissions: List[Admission] = []
         # routing collection costs per-step host transfers; only pay for
         # it when the admission policy actually reads the usage histogram
         # (the packed path surfaces routing for free)
@@ -168,34 +203,6 @@ class ContinuousEngine:
         # greedy decode folds argmax into the jitted step and feeds the
         # token straight back on-device — the host only sees (B,) ints
         self._greedy = self.sampler.kind == "greedy"
-        if offload is not None:
-            self._decode = None  # layerwise packed path in step()
-            self._prefill = lambda p, b, ml: self._dec.prefill(b, ml)
-        else:
-            collect, greedy = self._collect, self._greedy
-
-            def make():
-                if collect:
-                    def _step_fn(p, st, tk):
-                        logits, st, infos = T.decode_step(
-                            p, cfg, st, tk, moe_mode="gather",
-                            collect_info=True)
-                        nxt = (jnp.argmax(logits[:, -1], -1)
-                               .astype(jnp.int32) if greedy
-                               else logits[:, -1])
-                        return nxt, st, infos
-                else:
-                    def _step_fn(p, st, tk):
-                        logits, st = T.decode_step(p, cfg, st, tk,
-                                                   moe_mode="gather")
-                        nxt = (jnp.argmax(logits[:, -1], -1)
-                               .astype(jnp.int32) if greedy
-                               else logits[:, -1])
-                        return nxt, st
-                return jax.jit(_step_fn, donate_argnums=1)
-            self._decode = T.cached_jit(
-                ("cont_step", cfg, collect, greedy), make)
-            self._prefill = T.make_prefill(cfg)
         # all-SWA stacks roll their window inside the slot, so a request
         # may decode past slot_len; anything else must fit the slot ring
         mixers = {parse_block(k)[0] for k in cfg.block_pattern}
@@ -207,52 +214,123 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 32, on_token=None,
-               on_finish=None) -> GenRequest:
+               on_finish=None, temperature: Optional[float] = None
+               ) -> GenRequest:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size > 0, "empty prompt"
+        if temperature is not None and self._greedy:
+            raise ValueError(
+                "per-request temperature needs a stochastic sampler; this "
+                "engine decodes greedily (argmax ignores temperature) — "
+                "construct it with sampler=SamplerConfig(kind='categorical'"
+                "/'topk'/'topp')")
         if not self._unbounded and prompt.size + max_new_tokens > self.slot_len:
             raise ValueError(
                 f"request needs {prompt.size + max_new_tokens} KV positions "
                 f"> slot_len={self.slot_len}")
         req = GenRequest(prompt=prompt, max_new_tokens=max_new_tokens,
                          arrival=self.step_count, on_token=on_token,
-                         on_finish=on_finish)
+                         on_finish=on_finish, temperature=temperature)
         return self.sched.submit(req)
 
     # ------------------------------------------------------------------
-    def _sample(self, logits) -> np.ndarray:
-        """logits (B, V) -> (B,) int32 next tokens."""
+    def _sample_rows(self, logits, reqs: List[GenRequest]) -> np.ndarray:
+        """logits (B, V) for exactly ``reqs`` rows -> (B,) int32."""
         if self.sampler.kind == "greedy":
             return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        temps = None
+        if any(r.temperature is not None for r in reqs):
+            temps = np.asarray(
+                [self.sampler.temperature if r.temperature is None
+                 else r.temperature for r in reqs], np.float32)
         self._rng, sub = jax.random.split(self._rng)
-        return np.asarray(sample(sub, logits, self.sampler))
+        return np.asarray(sample(sub, logits, self.sampler,
+                                 temperature=temps))
 
-    def _admit(self) -> List[GenRequest]:
-        finished = []
+    # ------------------------------------------------------------------
+    # admission
+    def _start_admissions(self) -> None:
+        """Move policy-selected waiting requests into slots; their
+        prompts prefill as chunks over the coming steps (or this step,
+        when unchunked)."""
         while self.kv.n_free and self.sched.has_waiting:
             req = self.sched.pop_next(self.usage)
             slot = self.kv.allocate(req.rid)
             req.slot = slot
-            S = len(req.prompt)
-            Sb = -(-S // self.prefill_bucket) * self.prefill_bucket
-            batch = {"tokens": np.zeros((1, Sb), np.int32)}
-            batch["tokens"][0, Sb - S:] = req.prompt
-            if Sb != S:
-                m = np.zeros((1, Sb), bool)
-                m[0, Sb - S:] = True
-                batch["pad_mask"] = m
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            logits, small = self._prefill(self.params, batch, self.slot_len)
-            self.kv.write_prefill(small, slot)
-            first = int(self._sample(logits[:, -1])[0])
-            req.emit(first)
-            if self._done(req, first):
-                self.kv.release(slot)
-                self.sched.evict(req, self._reason(req, first))
-                finished.append(req)
-            else:
-                self.tokens[slot, 0] = first
+            self._admissions.append(Admission(
+                rid=req.rid, slot=slot, total=len(req.prompt),
+                state=self.kv.new_row_state(), req=req))
+
+    def _run_chunks(self, chunks) -> List[GenRequest]:
+        """Execute this step's prefill chunks; complete admissions whose
+        final chunk ran (sample the first token, then install the row).
+
+        Budgeted mode defers the ``write_prefill`` install to the START
+        of the next step (``_install_ready``): this step's batched
+        decode runs over every slot, and a freshly-written row that is
+        not in the planned decode rows would otherwise be silently
+        advanced — KV written, pos bumped, token discarded — skipping
+        one output token.  Unchunked mode installs immediately because
+        the recomputed decode rows include the new row the same step
+        (legacy admission timing)."""
+        finished = []
+        by_rid = {a.rid: a for a in self._admissions}
+        for task in chunks:
+            adm = by_rid[task.rid]
+            req: GenRequest = adm.req
+            tokens = jnp.asarray(req.prompt[None, task.lo: task.hi])
+            logits, adm.state, _ = self._exec.prefill_chunk(
+                adm.state, tokens)
+            adm.next_lo = task.hi
+            if task.last:
+                first = int(self._sample_rows(logits[:, -1], [req])[0])
+                req.emit(first)
+                if self._done(req, first):
+                    self._admissions.remove(adm)
+                    self.kv.release(adm.slot)
+                    self.sched.evict(req, self._reason(req, first))
+                    finished.append(req)
+                    continue
+                self.tokens[adm.slot, 0] = first
+                if self.budget is None:
+                    self.kv.write_prefill(adm.state, adm.slot)
+                    self._admissions.remove(adm)
+                # else: adm.done marks it ready; installed next step
         return finished
+
+    def _install_ready(self) -> None:
+        """Install admissions whose final chunk ran last step (budgeted
+        mode): scatter the finished B=1 state into the slot; the row
+        enters this step's decode rows."""
+        for adm in [a for a in self._admissions if a.done]:
+            self.kv.write_prefill(adm.state, adm.slot)
+            self._admissions.remove(adm)
+
+    def _plan(self) -> StepPlan:
+        """This step's mixed batch: every decodable row + prompt chunks
+        under the token budget (unchunked mode: whole prompts this step,
+        split only at the KV ring width, no budget)."""
+        self._install_ready()
+        self._start_admissions()
+        decode_rows = self._decode_rows()
+        if self.budget is not None:
+            return self.budget.plan(decode_rows, self._admissions)
+        plan = StepPlan(decode_rows=decode_rows)
+        for adm in self._admissions:
+            # whole prompt as one chunk; prompts longer than the ring
+            # (unbounded SWA) split at slot_len so chunk writes never
+            # overlap themselves
+            for lo in range(adm.next_lo, adm.total, self.slot_len):
+                hi = min(lo + self.slot_len, adm.total)
+                plan.chunks.append(ChunkTask(rid=adm.rid, slot=adm.slot,
+                                             lo=lo, hi=hi,
+                                             last=hi >= adm.total))
+        return plan
+
+    def _decode_rows(self) -> List[int]:
+        admitting = {a.rid for a in self._admissions}
+        return sorted(r.slot for r in self.sched.running
+                      if r.rid not in admitting)
 
     def _done(self, req: GenRequest, tok: int) -> bool:
         return (len(req.generated) >= req.max_new_tokens
@@ -264,18 +342,30 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> List[GenRequest]:
-        """Admit + one decode step.  Returns requests finished this step."""
-        finished = self._admit()
-        if not self.sched.n_running:
+        """One engine step: run the step plan (prefill chunks + one
+        batched decode over the planned rows).  Returns requests
+        finished this step."""
+        plan = self._plan()
+        finished = self._run_chunks(plan.chunks)
+        # unchunked admission keeps the legacy timing: a request admitted
+        # this step decodes this step.  Budgeted (chunked) steps decode
+        # exactly the planned rows so the budget accounting stays exact.
+        rows = (self._decode_rows() if self.budget is None
+                else plan.decode_rows)
+        if not rows:
+            if plan.chunks:
+                self.step_count += 1
+                self.sched.check_invariants()
             return finished
-        rows = sorted(r.slot for r in self.sched.running)
+        reqs = sorted((r for r in self.sched.running
+                       if r.slot in set(rows)), key=lambda r: r.slot)
         if self.offload is not None:
             # offloaded decode: layerwise packed step over the slotted
             # state; free slots bypass the expert pool (active mask), so
             # their dummy tokens never pollute the cache or the stats
             active = np.zeros((self.max_slots,), bool)
             active[rows] = True
-            logits, state, self._pstate, route_ids = self._dec.decode(
+            logits, state, self._pstate, route_ids = self._exec.decode(
                 self.kv.state, jnp.asarray(self.tokens), self._pstate,
                 jnp.asarray(active))
             if self._collect:
@@ -284,8 +374,9 @@ class ContinuousEngine:
             nxt_dev = (jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
                        if self._greedy else logits[:, -1])
         else:
-            out = self._decode(self.params, self.kv.state,
-                               jnp.asarray(self.tokens))
+            out = self._exec.decode_sampled(
+                self.kv.state, jnp.asarray(self.tokens),
+                collect_info=self._collect, greedy=self._greedy)
             if self._collect:
                 nxt_dev, state, (info_stack, _) = out
                 ids, _ = routing_from_info(self.cfg, info_stack,
@@ -297,9 +388,12 @@ class ContinuousEngine:
         if self._greedy:
             nxt = np.asarray(nxt_dev)
         else:
-            self._rng, sub = jax.random.split(self._rng)
-            nxt = np.asarray(sample(sub, nxt_dev, self.sampler))
-        for req in list(self.sched.running):
+            nxt = self._sample_rows(
+                jnp.asarray(nxt_dev)[np.asarray(rows)], reqs)
+            full = np.zeros((self.max_slots,), np.int32)
+            full[np.asarray(rows)] = nxt
+            nxt = full
+        for req in reqs:
             t = int(nxt[req.slot])
             req.emit(t)
             if self._done(req, t):

@@ -82,6 +82,18 @@ class KVSlotManager:
         self._free.sort()
 
     # ------------------------------------------------------------------
+    def new_row_state(self):
+        """Fresh B=1 decode state of slot width — the accumulator for
+        chunked admission (DESIGN.md §8): the runtime executor's
+        ``prefill_chunk`` writes each chunk's KV into it at the chunk's
+        offset (``pos .. pos+C−1`` ring slots), decode steps of the
+        *other* rows proceed against the big slotted state in between,
+        and after the final chunk :meth:`write_prefill` scatters the
+        finished row in.  Because rows are disjoint, the deferred
+        scatter cannot race the in-flight batch."""
+        state = T.init_decode_state(self.cfg, 1, self.slot_len)
+        return state
+
     def write_prefill(self, small_state, slot: int) -> None:
         """Install a prefilled B=1 state (``max_len == slot_len``) into
         ``slot``; the request's remaining KV budget is slot_len − pos."""

@@ -1,27 +1,59 @@
 """Token samplers (the paper samples proportionally to the predicted
-probabilities — plain categorical; greedy and top-k provided too)."""
+probabilities — plain categorical; greedy, top-k and nucleus/top-p
+provided too).  This is the ONE sampling surface every engine routes
+through (``ServeEngine``, ``ContinuousEngine``, ``OffloadEngine`` — no
+engine keeps a private greedy/rng branch), with per-request temperature
+supported as a (B,) override for mixed continuous batches."""
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+NEG_INF = -1e30
+
 
 @dataclass(frozen=True)
 class SamplerConfig:
-    kind: str = "categorical"  # greedy | categorical | topk
+    kind: str = "categorical"  # greedy | categorical | topk | topp
     temperature: float = 1.0
     top_k: int = 40
+    top_p: float = 0.9  # nucleus mass (kind="topp")
 
 
-def sample(rng, logits, cfg: SamplerConfig):
-    """logits: (B, V) -> tokens (B,) int32."""
+def _top_p_filter(logits, top_p: float):
+    """Nucleus filtering: keep the smallest prefix of the
+    probability-sorted vocab whose cumulative mass reaches ``top_p``
+    (the most-likely token always survives)."""
+    order = jnp.argsort(-logits, axis=-1)
+    sorted_logits = jnp.take_along_axis(logits, order, axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep_sorted = (cum - probs) < top_p  # mass BEFORE this token < p
+    inv = jnp.argsort(order, axis=-1)
+    keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+    return jnp.where(keep, logits, NEG_INF)
+
+
+def sample(rng, logits, cfg: SamplerConfig, temperature=None):
+    """logits: (B, V) -> tokens (B,) int32.
+
+    ``temperature`` overrides ``cfg.temperature`` — a scalar, or a (B,)
+    array for per-request temperatures in a continuous batch (each row
+    divides by its own value before filtering)."""
     if cfg.kind == "greedy":
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits / jnp.maximum(cfg.temperature, 1e-6)
+    t = cfg.temperature if temperature is None else temperature
+    t = jnp.asarray(t, jnp.float32)
+    if t.ndim == 1:
+        t = t[:, None]
+    logits = logits / jnp.maximum(t, 1e-6)
     if cfg.kind == "topk":
         vals, _ = jax.lax.top_k(logits, cfg.top_k)
         thresh = vals[..., -1:]
-        logits = jnp.where(logits < thresh, -1e30, logits)
+        logits = jnp.where(logits < thresh, NEG_INF, logits)
+    elif cfg.kind == "topp":
+        logits = _top_p_filter(logits, cfg.top_p)
     return jax.random.categorical(rng, logits).astype(jnp.int32)

@@ -51,6 +51,9 @@ class GenRequest:
     slot: Optional[int] = None
     generated: List[int] = field(default_factory=list)
     finish_reason: Optional[str] = None  # "length" | "eos"
+    # per-request sampling temperature (None = the engine sampler's
+    # default); applied row-wise by serving/sampler.sample
+    temperature: Optional[float] = None
     # filled lazily by ExpertOverlapPolicy (per-layer predicted expert ids)
     _pred_experts: Optional[List[np.ndarray]] = None
 

@@ -18,7 +18,7 @@ from repro.models import transformer as T
 # the session — an optional-dependency skip must never silently retire
 # those invariants
 PROPERTY_MODULES = ("test_lru.py", "test_moe.py", "test_quant.py",
-                    "test_recurrent.py")
+                    "test_recurrent.py", "test_runtime.py")
 _skipped_property_tests = []
 
 
@@ -50,9 +50,13 @@ def _clear_jax_caches(request):
     compiles hundreds of XLA programs and the accumulated JIT mappings can
     exhaust process memory late in the run (LLVM 'Cannot allocate
     memory').  Function-scoped for the big-model smoke/parity modules,
-    which compile a full train step per architecture."""
+    which compile a full train step per architecture.  The engine-level
+    cache empties through its explicit hook (``cached_jit_clear``) so the
+    jitted wrappers stop pinning their closures too — jax.clear_caches()
+    alone cannot reach those references."""
     yield
     if request.module.__name__ in ("test_smoke_archs", "test_parity"):
+        T.cached_jit_clear()
         jax.clear_caches()
 
 

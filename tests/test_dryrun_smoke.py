@@ -3,8 +3,18 @@
 The full 40x2 matrix runs via ``python -m repro.launch.dryrun --all``
 (results under experiments/dryrun); here we spawn a few representative
 combos as subprocesses (XLA device-count must be set before jax init, so
-it cannot run in-process with the other tests)."""
+it cannot run in-process with the other tests).
+
+Subprocess hygiene: each dryrun runs in its OWN process group with
+``PR_SET_PDEATHSIG=SIGKILL`` (kernel kills it if pytest dies first) and
+every exit path — timeout, assertion, Ctrl-C — kills the whole group.
+Before the fix, a cancelled pytest left the 512-fake-device XLA traces
+running and silently pinning both cores of this box.
+"""
+import ctypes
 import json
+import os
+import signal
 import subprocess
 import sys
 from pathlib import Path
@@ -12,6 +22,28 @@ from pathlib import Path
 import pytest
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+HARD_TIMEOUT_S = 560
+PR_SET_PDEATHSIG = 1  # linux/prctl.h
+
+
+def _preexec():
+    """Child-side setup: new process group (so one killpg reaps the
+    dryrun AND anything XLA forks) + parent-death signal (so an
+    uncancellable pytest death still cannot orphan it)."""
+    os.setsid()
+    try:
+        libc = ctypes.CDLL("libc.so.6", use_errno=True)
+        libc.prctl(PR_SET_PDEATHSIG, signal.SIGKILL, 0, 0, 0)
+    except OSError:  # pragma: no cover - non-glibc hosts
+        pass
+
+
+def _kill_group(p: subprocess.Popen) -> None:
+    try:
+        os.killpg(os.getpgid(p.pid), signal.SIGKILL)
+    except (ProcessLookupError, PermissionError):
+        pass
 
 
 def _spawn(arch, shape, multi_pod=False, tmp=None):
@@ -21,12 +53,27 @@ def _spawn(arch, shape, multi_pod=False, tmp=None):
         cmd.append("--multi-pod")
     env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin"}
     return subprocess.Popen(cmd, stdout=subprocess.PIPE,
-                            stderr=subprocess.PIPE, text=True, env=env)
+                            stderr=subprocess.PIPE, text=True, env=env,
+                            preexec_fn=_preexec)
+
+
+def _communicate(p: subprocess.Popen, timeout=HARD_TIMEOUT_S):
+    """communicate() with a hard timeout that reaps the process group —
+    a hung XLA trace must die, not outlive the suite."""
+    try:
+        return p.communicate(timeout=timeout)
+    except (subprocess.TimeoutExpired, KeyboardInterrupt):
+        _kill_group(p)
+        raise
 
 
 def _run(arch, shape, multi_pod=False, tmp=None):
     p = _spawn(arch, shape, multi_pod, tmp)
-    out, err = p.communicate(timeout=560)
+    try:
+        out, err = _communicate(p)
+    except BaseException:
+        _kill_group(p)
+        raise
     return subprocess.CompletedProcess(p.args, p.returncode, out, err)
 
 
@@ -44,17 +91,23 @@ def test_dryrun_combos(tmp_path):
     (runtime guard, DESIGN.md §7)."""
     procs = [(arch, shape, mp, _spawn(arch, shape, mp, tmp_path))
              for arch, shape, mp in COMBOS]
-    for arch, shape, mp, p in procs:
-        out, err = p.communicate(timeout=560)
-        assert p.returncode == 0, (arch, shape, err[-2000:])
-        mesh = "pod2x16x16" if mp else "pod16x16"
-        data = json.loads(
-            (tmp_path / f"{arch}__{shape}__{mesh}.json").read_text())
-        assert data["status"] == "ok"
-        assert data["roofline"]["flops_per_chip"] > 0
-        assert data["roofline"]["bottleneck"] in ("compute", "memory",
-                                                  "collective")
-        assert data["memory_analysis"]["peak_estimate_bytes"] < 17.2e9
+    try:
+        for arch, shape, mp, p in procs:
+            out, err = _communicate(p)
+            assert p.returncode == 0, (arch, shape, err[-2000:])
+            mesh = "pod2x16x16" if mp else "pod16x16"
+            data = json.loads(
+                (tmp_path / f"{arch}__{shape}__{mesh}.json").read_text())
+            assert data["status"] == "ok"
+            assert data["roofline"]["flops_per_chip"] > 0
+            assert data["roofline"]["bottleneck"] in ("compute", "memory",
+                                                      "collective")
+            assert data["memory_analysis"]["peak_estimate_bytes"] < 17.2e9
+    finally:
+        # any failure above must not leave the OTHER combo running
+        for _, _, _, p in procs:
+            if p.poll() is None:
+                _kill_group(p)
 
 
 def test_skip_marker(tmp_path):
@@ -63,3 +116,17 @@ def test_skip_marker(tmp_path):
     data = json.loads(
         (tmp_path / "whisper-medium__long_500k__pod16x16.json").read_text())
     assert data["status"] == "skipped"
+
+
+def test_spawned_dryrun_dies_with_its_group():
+    """The hygiene itself: killing the process group reaps the dryrun
+    before it finishes (no orphan keeps burning CPU)."""
+    p = _spawn("smollm-360m", "decode_32k", False, "/tmp/_dryrun_kill_test")
+    assert p.poll() is None
+    _kill_group(p)
+    try:
+        p.wait(timeout=30)
+    except subprocess.TimeoutExpired:  # pragma: no cover
+        p.kill()
+        pytest.fail("process group kill did not reap the dryrun")
+    assert p.returncode != 0  # killed, not a clean exit

@@ -1,0 +1,325 @@
+"""Unified step-plan runtime (DESIGN.md §8): chunked prefill is
+bitwise-identical to whole-prompt prefill on every plane, the
+token-budget policy's scheduling invariants hold on random traces
+(property-based when ``hypothesis`` is installed, with a seeded stdlib
+fallback that ALWAYS runs), engines share one compiled block program per
+(cfg, plane, mode) per process, and chunked continuous serving matches
+unchunked serving token-for-token — including composed with packed
+offloading, where the h2d counters must agree exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on hosts w/o the extra
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import get_config
+from repro.configs.base import OffloadSpec
+from repro.core.offload_engine import (OffloadEngine, generate_plain,
+                                       quantize_for_offload)
+from repro.models import transformer as T
+from repro.runtime import Admission, Executor, TokenBudgetPolicy
+from repro.serving.engine import ContinuousEngine
+
+
+def _state_leaves(state):
+    return [np.asarray(l) for l in jax.tree.leaves(state)]
+
+
+def _assert_states_bitwise(a, b):
+    for la, lb in zip(_state_leaves(a), _state_leaves(b)):
+        np.testing.assert_array_equal(la, lb)
+
+
+def _prompt(cfg, S, seed=0, B=1):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, (B, S)).astype(np.int32)
+
+
+# ----------------------------------------------------------------------
+# chunked == whole, bitwise, per plane
+def test_chunked_prefill_bitwise_plain(tiny_moe_cfg, tiny_moe_params):
+    """Acceptance: chunk size never changes a bit of the prefill result
+    — logits, KV state and positions — because a chunk only changes the
+    number of query rows per dispatch, never a reduction shape."""
+    ex = Executor(tiny_moe_params, tiny_moe_cfg)
+    prompt = _prompt(tiny_moe_cfg, 13, seed=3, B=2)  # B=2 lock-step rows
+    whole_l, whole_s, _ = ex.prefill(prompt, 32)
+    for chunk in (1, 4, 5, 13, 64):
+        l, s, _ = ex.prefill(prompt, 32, chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(whole_l[:, -1]),
+                                      np.asarray(l[:, -1]))
+        _assert_states_bitwise(whole_s, s)
+
+
+@pytest.fixture(scope="module")
+def packed_setup(tiny_moe_cfg, tiny_moe_params):
+    spec = OffloadSpec(cache_size=2, num_speculative=2, expert_bits=3,
+                       attn_bits=4)
+    exec_params, _, store = quantize_for_offload(
+        tiny_moe_params, tiny_moe_cfg, spec, pack_experts=True)
+    qdeq, _ = quantize_for_offload(tiny_moe_params, tiny_moe_cfg, spec)
+    return spec, exec_params, store, qdeq
+
+
+@pytest.mark.parametrize("plane", ["packed_vectorized", "packed_pipelined"])
+def test_chunked_prefill_bitwise_packed(tiny_moe_cfg, packed_setup, plane):
+    """Same acceptance on the packed planes — chunks stream experts from
+    the host store, and the result equals BOTH any other chunking AND
+    the plain-plane prefill of the dequantized model, bitwise."""
+    spec, exec_params, store, qdeq = packed_setup
+    ex = Executor(exec_params, tiny_moe_cfg, plane=plane, spec=spec,
+                  store=store)
+    prompt = _prompt(tiny_moe_cfg, 11, seed=5)
+    whole_l, whole_s, _ = ex.prefill(prompt, 24)
+    for chunk in (3, 11):
+        l, s, _ = ex.prefill(prompt, 24, chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(whole_l[:, -1]),
+                                      np.asarray(l[:, -1]))
+        _assert_states_bitwise(whole_s, s)
+    # packed chunked prefill == dequantized-model prefill (plain plane)
+    oracle = Executor(qdeq, tiny_moe_cfg)
+    ol, os_, _ = oracle.prefill(prompt, 24, chunk=4)
+    np.testing.assert_array_equal(np.asarray(whole_l[:, -1]),
+                                  np.asarray(ol[:, -1]))
+    _assert_states_bitwise(whole_s, os_)
+
+
+def test_recurrent_stacks_reject_chunks_but_prefill_whole():
+    """Recurrent mixers fold ONE token per decode call: a C > 1 chunk
+    must raise (it would silently drop tokens), while whole-prompt
+    prefill falls back to the forward_train path and generate_plain
+    stays correct for these archs."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    params = T.init_model(jax.random.key(2), cfg)
+    prompt = _prompt(cfg, 7, seed=2)
+    ex = Executor(params, cfg)
+    with pytest.raises(ValueError, match="attention"):
+        ex.prefill(prompt, 16, chunk=3)
+    # whole-prompt prefill (fallback) + decode == the pre-runtime oracle
+    logits, state, _ = ex.prefill(prompt, 16)
+    ref_logits, ref_state = T.make_prefill(cfg)(
+        params, {"tokens": jnp.asarray(prompt)}, 16)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref_logits))
+    out = generate_plain(params, cfg, prompt, 5)
+    assert out.shape == (1, 5)
+    # the scanned step itself also rejects C > 1 for these stacks
+    with pytest.raises(ValueError, match="attention"):
+        T.decode_step(params, cfg, state, jnp.asarray(prompt[:, :3]),
+                      moe_mode="gather")
+
+
+def test_generate_plain_prefill_chunk_invariant(tiny_moe_cfg,
+                                                tiny_moe_params):
+    prompt = _prompt(tiny_moe_cfg, 9, seed=7)
+    a = generate_plain(tiny_moe_params, tiny_moe_cfg, prompt, 10)
+    b = generate_plain(tiny_moe_params, tiny_moe_cfg, prompt, 10,
+                       prefill_chunk=2)
+    assert (a == b).all()
+
+
+# ----------------------------------------------------------------------
+# continuous serving: chunked admission == unchunked, token for token
+def test_continuous_chunked_matches_unchunked(tiny_moe_cfg,
+                                              tiny_moe_params):
+    """Acceptance: with --prefill-chunk the engine emits, per request,
+    bitwise the tokens of unchunked admission under greedy decoding —
+    while long prompts no longer monopolise whole steps."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+               for n in (21, 5, 17, 4, 12)]
+    max_news = [6, 9, 4, 8, 5]
+
+    def run(prefill_chunk):
+        eng = ContinuousEngine(params, cfg, max_slots=2, slot_len=64,
+                               eos_id=None, prefill_chunk=prefill_chunk)
+        reqs = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+        eng.run(max_steps=800)
+        assert all(r.state == "finished" for r in reqs)
+        return [r.generated for r in reqs], eng
+
+    base, _ = run(None)
+    for chunk in (4, 7):
+        toks, eng = run(chunk)
+        assert toks == base, f"chunked({chunk}) diverged from unchunked"
+        # the budget really bounded every step
+        assert eng.budget.token_budget == 2 + chunk
+    # and both match the B=1 oracle
+    for p, m, got in zip(prompts, max_news, base):
+        oracle = generate_plain(params, cfg, p[None], m)[0].tolist()
+        assert got == oracle
+
+
+def test_continuous_offloaded_chunked_matches_and_counters_agree(
+        tiny_moe_cfg, tiny_moe_params):
+    """Acceptance (packed plane): chunked prefill composed with packed
+    offloading matches unchunked token-for-token, and the h2d transfer
+    counters are IDENTICAL — prefill chunks stream from the host store
+    (zero pool traffic) and, with the pool sized to the expert count,
+    decode misses are exactly the cold set either way."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    spec = OffloadSpec(cache_size=cfg.moe.num_experts, num_speculative=0,
+                       expert_bits=3, attn_bits=4)
+    off = OffloadEngine(params, cfg, spec, quantized=True)
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+               for n in (19, 5, 14)]
+    max_news = [5, 7, 4]
+
+    def run(prefill_chunk):
+        eng = ContinuousEngine(None, cfg, max_slots=2, slot_len=48,
+                               eos_id=None, offload=off,
+                               prefill_chunk=prefill_chunk)
+        reqs = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+        eng.run(max_steps=800)
+        assert all(r.state == "finished" for r in reqs)
+        s = eng.stats()
+        return [r.generated for r in reqs], s
+
+    base_toks, base_stats = run(None)
+    toks, stats = run(5)
+    assert toks == base_toks
+    for k in ("offload_demand_loads", "offload_spec_loads",
+              "offload_bytes_h2d"):
+        assert stats[k] == base_stats[k], f"{k} changed under chunking"
+    assert stats["offload_demand_loads"] > 0
+
+
+# ----------------------------------------------------------------------
+# token-budget policy invariants (property + seeded fallback)
+def _check_budget_policy(chunk_size, token_budget, max_rows, prompt_lens,
+                         decode_pattern_seed):
+    """Drive the policy over a synthetic admission trace; assert every
+    plan respects the budget, chunks are emitted in order and partition
+    each prompt, and decode rows are never dropped from a plan."""
+    policy = TokenBudgetPolicy(chunk_size=chunk_size,
+                               token_budget=token_budget,
+                               max_rows=max_rows)
+    admissions = [Admission(rid=i, slot=i % max_rows, total=n)
+                  for i, n in enumerate(prompt_lens)]
+    seen = {a.rid: [] for a in admissions}
+    rng = np.random.default_rng(decode_pattern_seed)
+    steps = 0
+    while admissions:
+        n_rows = int(rng.integers(0, max_rows + 1))
+        decode_rows = list(range(n_rows))
+        plan = policy.plan(decode_rows, admissions)
+        # 1. hard budget cap
+        assert plan.total_tokens <= token_budget
+        # 2. decode rows never starved: every planned step decodes them all
+        assert plan.decode_rows == decode_rows
+        # 3. progress: the first admission always advances
+        assert not admissions or any(c.rid == admissions[0].rid
+                                     for c in plan.chunks)
+        for c in plan.chunks:
+            adm = next(a for a in admissions if a.rid == c.rid)
+            # 4. in order, gapless
+            assert c.lo == adm.next_lo
+            assert c.hi <= adm.total
+            assert c.last == (c.hi == adm.total)
+            seen[c.rid].append((c.lo, c.hi))
+            adm.next_lo = c.hi
+        admissions = [a for a in admissions if not a.done]
+        steps += 1
+        assert steps < 10_000, "policy livelocked"
+    # 5. chunks partition each prompt exactly
+    for adm_id, chunks in seen.items():
+        total = prompt_lens[adm_id]
+        assert chunks[0][0] == 0 and chunks[-1][1] == total
+        for (a0, a1), (b0, b1) in zip(chunks, chunks[1:]):
+            assert a1 == b0
+
+
+FALLBACK_CASES = [
+    (1, 5, 4, (1, 1, 9), 0),
+    (4, 8, 4, (13, 2, 7, 31), 1),
+    (8, 16, 8, (64, 1, 8, 9, 17), 2),
+    (3, 20, 2, (5, 5, 5, 4), 3),
+    (16, 18, 2, (100,), 4),
+]
+
+
+def test_budget_policy_invariants_fallback():
+    """Seeded stdlib fallback that always runs (property-module guard:
+    the scheduling invariants must not vanish with optional deps)."""
+    for case in FALLBACK_CASES:
+        _check_budget_policy(*case)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(chunk_size=st.integers(1, 16),
+           extra_budget=st.integers(0, 32),
+           max_rows=st.integers(1, 8),
+           prompt_lens=st.lists(st.integers(1, 80), min_size=1,
+                                max_size=6),
+           seed=st.integers(0, 2**16))
+    def test_budget_policy_invariants_property(chunk_size, extra_budget,
+                                               max_rows, prompt_lens,
+                                               seed):
+        token_budget = chunk_size + max_rows + extra_budget
+        _check_budget_policy(chunk_size, token_budget, max_rows,
+                             tuple(prompt_lens), seed)
+
+
+def test_budget_policy_rejects_livelock_budget():
+    with pytest.raises(ValueError):
+        TokenBudgetPolicy(chunk_size=8, token_budget=8, max_rows=4)
+    with pytest.raises(ValueError):
+        ContinuousEngine(None, get_config("tiny-moe"), max_slots=2,
+                         slot_len=32, token_budget=16)  # no prefill_chunk
+
+
+# ----------------------------------------------------------------------
+# compile-once: shared block programs per (cfg, plane, mode)
+def test_executor_block_programs_compile_once(tiny_moe_cfg,
+                                              tiny_moe_params,
+                                              packed_setup):
+    """The runtime refactor's shared block programs build once per
+    (cfg, plane, mode) per process: constructing and running a SECOND
+    executor/engine of an identical mode adds zero cache builds."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    spec, exec_params, store, _ = packed_setup
+    prompt = _prompt(cfg, 6, seed=9)
+
+    def exercise(make):
+        ex = make()
+        if ex.packed:
+            ps = ex.init_pool_state()
+            logits, state, ps = ex.prefill(prompt, 12, pstate=ps)
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            ex.decode(state, tok, ps)
+        else:
+            logits, state, _ = ex.prefill(prompt, 12)
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            ex.decode(state, tok)
+
+    for make in (
+            lambda: Executor(params, cfg),
+            lambda: Executor(exec_params, cfg, plane="packed_pipelined",
+                             spec=spec, store=store),
+            lambda: Executor(exec_params, cfg, plane="packed_vectorized",
+                             spec=spec, store=store)):
+        exercise(make)  # first pass may build missing programs
+        before = T.cached_jit_stats()["builds"]
+        exercise(make)  # identical mode: every program must be a hit
+        after = T.cached_jit_stats()["builds"]
+        assert after == before, \
+            f"identical executor mode rebuilt {after - before} programs"
+
+
+def test_cached_jit_stats_and_clear():
+    key = ("__test_runtime_probe__",)
+    T.cached_jit(key, lambda: object())
+    s = T.cached_jit_stats()
+    assert key in s["keys"] and s["entries"] >= 1 and s["builds"] >= 1
+    T.cached_jit(key, lambda: object())
+    assert T.cached_jit_stats()["hits"] >= 1
+    T.cached_jit_clear()
+    s = T.cached_jit_stats()
+    assert s["entries"] == 0 and s["builds"] == 0 and s["hits"] == 0

@@ -1,0 +1,143 @@
+"""The single sampling surface (serving/sampler.py): filter semantics
+(top-k / top-p), per-request temperature, and the seeded regression
+guarantees for the engines that route through it — ContinuousEngine and
+OffloadEngine must produce reproducible sampled streams from a seed and
+must have NO private greedy/rng branches left."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OffloadSpec
+from repro.core.offload_engine import OffloadEngine
+from repro.serving.engine import ContinuousEngine
+from repro.serving.sampler import SamplerConfig, sample
+
+
+def _logits(seed=0, B=2, V=32):
+    return jax.random.normal(jax.random.key(seed), (B, V)) * 3.0
+
+
+# ----------------------------------------------------------------------
+def test_greedy_is_argmax():
+    logits = _logits()
+    out = sample(jax.random.key(1), logits, SamplerConfig(kind="greedy"))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_topk_never_leaves_top_k():
+    logits = _logits(seed=2, B=4, V=64)
+    cfg = SamplerConfig(kind="topk", top_k=5)
+    top5 = np.asarray(jax.lax.top_k(logits, 5)[1])
+    for s in range(20):
+        out = np.asarray(sample(jax.random.key(s), logits, cfg))
+        for b in range(4):
+            assert out[b] in top5[b]
+
+
+def test_topp_keeps_nucleus_only():
+    # one dominant token (p ~ 0.97) -> tiny nucleus; top_p=0.5 must
+    # always return it
+    logits = jnp.full((1, 16), -2.0).at[0, 3].set(4.0)
+    cfg = SamplerConfig(kind="topp", top_p=0.5)
+    for s in range(20):
+        assert int(sample(jax.random.key(s), logits, cfg)[0]) == 3
+    # top_p=1.0 keeps everything -> other tokens appear
+    cfg_all = SamplerConfig(kind="topp", top_p=1.0)
+    seen = {int(sample(jax.random.key(s), logits, cfg_all)[0])
+            for s in range(50)}
+    assert len(seen) > 1
+
+
+def test_topp_most_likely_token_always_survives():
+    # near-uniform logits with top_p smaller than any single prob: the
+    # argmax must still be sampleable (the nucleus is never empty)
+    logits = _logits(seed=5, B=3, V=8) * 0.01
+    cfg = SamplerConfig(kind="topp", top_p=1e-6)
+    out = np.asarray(sample(jax.random.key(0), logits, cfg))
+    np.testing.assert_array_equal(out, np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_per_request_temperature_row_wise():
+    """A (B,) temperature divides each row by its own value: a very cold
+    row becomes deterministic argmax while a hot row still varies."""
+    logits = _logits(seed=7, B=2, V=16)
+    cfg = SamplerConfig(kind="categorical", temperature=1.0)
+    temps = np.array([1e-4, 3.0], np.float32)
+    cold = [int(sample(jax.random.key(s), logits, cfg,
+                       temperature=temps)[0]) for s in range(25)]
+    assert set(cold) == {int(jnp.argmax(logits[0]))}
+    hot = {int(sample(jax.random.key(s), logits, cfg,
+                      temperature=temps)[1]) for s in range(25)}
+    assert len(hot) > 1
+
+
+# ----------------------------------------------------------------------
+# engine regressions: seeded streams reproduce
+def test_continuous_engine_sampled_stream_reproducible(tiny_moe_cfg,
+                                                       tiny_moe_params):
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    rng = np.random.default_rng(31)
+    prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+               for n in (6, 9, 4)]
+
+    def run(seed, temps=(None, 0.7, None)):
+        eng = ContinuousEngine(
+            params, cfg, max_slots=2, slot_len=48, eos_id=None,
+            sampler=SamplerConfig(kind="topk", top_k=8, temperature=1.3),
+            seed=seed)
+        reqs = [eng.submit(p, 5, temperature=t)
+                for p, t in zip(prompts, temps)]
+        eng.run(max_steps=300)
+        assert all(r.state == "finished" for r in reqs)
+        return [r.generated for r in reqs]
+
+    a, b, c = run(0), run(0), run(1)
+    assert a == b, "same seed must reproduce the sampled stream"
+    assert a != c, "different seed should perturb the stream"
+
+
+def test_offload_engine_sampled_stream_reproducible(tiny_moe_cfg,
+                                                    tiny_moe_params):
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    eng = OffloadEngine(params, cfg)  # accounting mode, plain plane
+    prompt = np.array([[5, 9, 2, 11]], np.int32)
+    a, _ = eng.generate(prompt, 6, greedy=False, rng=jax.random.key(4))
+    b, _ = eng.generate(prompt, 6, greedy=False, rng=jax.random.key(4))
+    c, _ = eng.generate(prompt, 6, greedy=False)  # seeded default key
+    d, _ = eng.generate(prompt, 6, greedy=False)
+    assert (a == b).all()
+    assert (c == d).all(), "rng=None must fall back to a FIXED seed"
+    # explicit sampler configs route through the same surface
+    e, _ = eng.generate(prompt, 6, rng=jax.random.key(4),
+                        sampler=SamplerConfig(kind="topp", top_p=0.8))
+    f, _ = eng.generate(prompt, 6, rng=jax.random.key(4),
+                        sampler=SamplerConfig(kind="topp", top_p=0.8))
+    assert (e == f).all()
+    assert e.shape == (1, 6)
+    assert (e >= 0).all() and (e < cfg.vocab_size).all()
+
+
+def test_greedy_engine_rejects_per_request_temperature(tiny_moe_cfg,
+                                                       tiny_moe_params):
+    """A greedy engine's argmax would silently ignore a requested
+    temperature — submit must reject it loudly instead."""
+    eng = ContinuousEngine(tiny_moe_params, tiny_moe_cfg, max_slots=1,
+                           slot_len=32)
+    with pytest.raises(ValueError, match="stochastic sampler"):
+        eng.submit(np.array([1, 2, 3], np.int32), 4, temperature=0.7)
+
+
+def test_no_private_sampling_branches_left():
+    """Engines must not re-grow ad-hoc rng/argmax sampling: the only
+    `jax.random.categorical` call sites live in serving/sampler.py."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+    offenders = []
+    for path in root.rglob("*.py"):
+        if path.name == "sampler.py":
+            continue
+        if "jax.random.categorical" in path.read_text():
+            offenders.append(str(path))
+    assert not offenders, f"ad-hoc sampling outside sampler.py: {offenders}"
