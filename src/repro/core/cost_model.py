@@ -32,7 +32,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Optional
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, parse_block
 
 # bits/param including group scale/zero + meta-quant overhead (measured by
 # quant/hqq.bits_per_param on the paper's group-size schemes)
@@ -86,6 +86,39 @@ def active_param_bytes(cfg: ModelConfig, expert_bits: int,
             + dense * EFFECTIVE_BITS[attn_bits] / 8.0)
 
 
+def kv_read_bytes_per_token(cfg: ModelConfig, context_len: float,
+                            kv_bits: int = 16) -> float:
+    """Device-memory bytes of KV cache read per generated token at a
+    given *live* context length.
+
+    Decode attention reads every live K and V entry of every attention
+    layer once per token — traffic that grows linearly with context and
+    that the weight-only roofline ignored.  Sliding-window layers cap
+    their span at the window (exactly the page-skip bound the ragged
+    kernel enforces, DESIGN.md §9); recurrent mixers hold O(1) state and
+    contribute nothing.  ``kv_bits`` models a quantized cache (the KV
+    analogue of the paper's expert compression).
+    """
+    per_pos = 2 * cfg.n_kv_heads * cfg.head_dim * kv_bits / 8.0  # K and V
+    total = 0.0
+    for kind in cfg.layer_kinds():
+        mixer = parse_block(kind)[0]
+        if mixer == "attn":
+            span = context_len
+        elif mixer == "xattn":
+            # self-KV over the decoded context PLUS the precomputed
+            # encoder K/V the cross sub-block reads every token
+            span = context_len + (cfg.encoder_seq or 0)
+        elif mixer == "swa":
+            span = min(context_len, cfg.sliding_window or context_len)
+        else:
+            # rglru/mlstm/slstm hold O(1) recurrent state; encattn is an
+            # encoder-only mixer that runs once per prompt, not per token
+            continue
+        total += span * per_pos
+    return total
+
+
 @dataclass
 class TokenStats:
     """Per-token averages measured from a routing trace replay."""
@@ -98,10 +131,17 @@ class TokenStats:
 
 def tokens_per_second(cfg: ModelConfig, hw: Hardware, stats: TokenStats,
                       expert_bits: int, attn_bits: int = 4,
-                      naive: bool = False) -> float:
+                      naive: bool = False, context_len: float = 0.0,
+                      kv_bits: int = 16) -> float:
+    """``context_len`` adds the KV-cache read traffic of decode
+    attention at that live context (:func:`kv_read_bytes_per_token`) to
+    the memory-bound compute term — the roofline's attention tax, which
+    the paged/ragged plane keeps proportional to live tokens.  The
+    default 0 reproduces the weight-only Table-2 numbers."""
     eb = expert_bytes(cfg, expert_bits)
     moe_layers = cfg.moe_layer_count
-    t_compute = (active_param_bytes(cfg, expert_bits, attn_bits)
+    t_compute = ((active_param_bytes(cfg, expert_bits, attn_bits)
+                  + kv_read_bytes_per_token(cfg, context_len, kv_bits))
                  / (hw.mem_bw_gbps * 1e9 * hw.mem_eff)
                  + cfg.n_layers * hw.layer_overhead_s)
     if naive:

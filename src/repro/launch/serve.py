@@ -77,6 +77,16 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--token-budget", type=int, default=None,
                     help="per-step token cap (decode rows + prefill "
                          "chunks); default max_slots + prefill_chunk")
+    ap.add_argument("--kv-page", type=int, default=None,
+                    help="block-paged KV (DESIGN.md §9): page size in "
+                         "positions; slots allocate pages on demand and "
+                         "decode attention is sliced to the live page "
+                         "horizon instead of paying slot_len every step")
+    ap.add_argument("--kv-pages-total", type=int, default=None,
+                    help="shared page-pool size (default: full "
+                         "provisioning, max_slots * ceil(slot_len/"
+                         "kv_page)); smaller pools gate admission on "
+                         "actual KV need instead of slot count")
     ap.add_argument("--policy", default="overlap",
                     choices=["fcfs", "overlap"])
     ap.add_argument("--sampler", default="greedy",
@@ -88,6 +98,9 @@ def build_parser() -> argparse.ArgumentParser:
 def main():
     args = build_parser().parse_args()
 
+    if args.kv_page is not None and not args.continuous:
+        raise SystemExit("--kv-page targets the continuous engine's "
+                         "slotted KV plane; add --continuous")
     cfg = get_config(args.arch)
     if cfg.vocab_size > 100_000 or cfg.d_model > 1024:
         cfg = cfg.reduced()
@@ -150,7 +163,9 @@ def main():
                 sampler=SamplerConfig(kind=args.sampler), policy=policy,
                 prefill_chunk=args.prefill_chunk,
                 token_budget=args.token_budget,
-                seed=args.seed, offload=offload_eng)
+                seed=args.seed, offload=offload_eng,
+                kv_page=args.kv_page,
+                kv_pages_total=args.kv_pages_total)
         except ValueError as e:
             raise SystemExit(f"--continuous: {e}")
 
@@ -180,6 +195,11 @@ def main():
         print(f"[continuous] {s['finished']} requests, {s['tokens']} tokens "
               f"in {s['steps']} steps ({s['tokens_per_step']:.2f} tok/step, "
               f"{args.max_slots} slots)")
+        if args.kv_page is not None:
+            print(f"[paged-kv] pool {s['kv_pages_total']} pages x "
+                  f"{s['kv_page_size']} positions "
+                  f"({s['kv_pages_free']} free at exit); decode attention "
+                  f"sliced to the live page horizon (DESIGN.md §9)")
         if offload_eng is not None:
             print(f"[offloaded] pool traffic: {s['offload_demand_loads']} "
                   f"demand + {s['offload_spec_loads']} spec loads, "

@@ -24,6 +24,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ragged_attention as RA
 from repro.sharding.specs import constrain
 
 DEFAULT_Q_CHUNK = 512
@@ -239,7 +240,80 @@ def init_attn_cache(cfg, batch, max_len, window=None):
     }
 
 
-def attention_decode(p, cfg, x_t, cache, cur_pos, *, window=None):
+def init_paged_attn_cache(cfg, n_pages, page_size):
+    """Paged KV plane of one layer (DESIGN.md §9): a batch-free pool of
+    ``n_pages`` fixed-size pages shared by every slot; which pages a row
+    owns lives in the state-level page table (``state["pages"]``), not
+    here.  ``ppos`` carries each written entry's absolute position
+    (−1 = never written / scrubbed) — the same validity convention as
+    the ring cache's ``pos``."""
+    dt = _pdt(cfg)
+    return {
+        "kp": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
+                        dt),
+        "vp": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
+                        dt),
+        "ppos": jnp.full((n_pages, page_size), -1, jnp.int32),
+    }
+
+
+def _attention_decode_paged(p, cfg, x_t, cache, cur_pos, pages, *,
+                            window=None, active=None, layer=None):
+    """Decode / chunk step against the paged KV plane (DESIGN.md §9).
+
+    x_t: (B, C, D); pages: (B, T) page-table rows mapping position
+    ``pos`` to page ``pages[b, pos // ps]`` offset ``pos % ps``.  Writes
+    scatter into the shared pool; rows whose table slot is unallocated
+    (or masked off by ``active`` — idle / mid-admission slots) write
+    nowhere (``mode="drop"``), so a dummy decode can never corrupt a
+    page another row owns or a chunked admission is mid-filling.
+    Attention reads through :mod:`repro.kernels.ragged_attention` — the
+    gathered view is bitwise the ring layout at matched width.
+
+    ``layer``: with the layer-STACKED pool (kp (L, P, ps, Hkv, hd) —
+    how the scanned decode step carries it), the layer index is folded
+    into the scatter/gather indices so the pool is never sliced out of
+    the scan carry: XLA keeps the (donated) pool in place and per-step
+    cost tracks live pages, not pool capacity."""
+    B, C = x_t.shape[0], x_t.shape[1]
+    P, ps = cache["ppos"].shape[-2:]
+    T = pages.shape[1]
+    per_row = getattr(cur_pos, "ndim", 0) == 1
+    pos_b = (cur_pos if per_row
+             else jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B,)))
+    posq = pos_b[:, None] + jnp.arange(C, dtype=jnp.int32)  # (B, C)
+    q = _project_q(p, cfg, x_t)
+    k_new, v_new = _project_kv(p, cfg, x_t)
+    q = apply_rope(q, posq, cfg)
+    k_new = apply_rope(k_new, posq, cfg)
+    ords = posq // ps
+    off = posq % ps
+    pid = jnp.take_along_axis(pages, jnp.clip(ords, 0, T - 1), axis=1)
+    ok = (pid >= 0) & (ords < T)
+    if active is not None:
+        ok = ok & active[:, None]
+    tgt = jnp.where(ok, pid, P)  # P is out of bounds -> write dropped
+    if layer is None:
+        cache = {
+            "kp": cache["kp"].at[tgt, off].set(k_new, mode="drop"),
+            "vp": cache["vp"].at[tgt, off].set(v_new, mode="drop"),
+            "ppos": cache["ppos"].at[tgt, off].set(posq, mode="drop"),
+        }
+    else:
+        cache = {
+            "kp": cache["kp"].at[layer, tgt, off].set(k_new, mode="drop"),
+            "vp": cache["vp"].at[layer, tgt, off].set(v_new, mode="drop"),
+            "ppos": cache["ppos"].at[layer, tgt, off].set(posq,
+                                                          mode="drop"),
+        }
+    o = RA.ragged_attention(q, cache["kp"], cache["vp"], cache["ppos"],
+                            pages, posq, window=window, q_chunk=C,
+                            layer=layer)
+    return _out_proj(p, cfg, o), cache
+
+
+def attention_decode(p, cfg, x_t, cache, cur_pos, *, window=None,
+                     pages=None, active=None, layer=None):
     """Decode / chunked-prefill step with a (possibly rolling) KV cache.
 
     x_t: (B, C, D) — C = 1 is the classic one-token decode step; C > 1
@@ -251,7 +325,17 @@ def attention_decode(p, cfg, x_t, cache, cur_pos, *, window=None):
 
     cur_pos: scalar int32 absolute start position (whole batch in
     lock-step) or (B,) int32 per-row positions (continuous batching).
+
+    ``pages`` switches to the paged KV plane (DESIGN.md §9): ``cache``
+    is then the pooled :func:`init_paged_attn_cache` layout and
+    ``active`` (B,) bool gates which rows may write (idle slots write
+    nowhere instead of into their own ring row).  Dense ring mode
+    ignores ``active`` — a free slot's writes stay row-local there.
     """
+    if pages is not None:
+        return _attention_decode_paged(p, cfg, x_t, cache, cur_pos, pages,
+                                       window=window, active=active,
+                                       layer=layer)
     B, C = x_t.shape[0], x_t.shape[1]
     W = cache["k"].shape[1]
     assert C <= W, f"chunk of {C} tokens exceeds KV width {W}"

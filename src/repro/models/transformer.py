@@ -224,18 +224,21 @@ def _attn_train_with_cache(p, cfg, h, positions, window, max_len,
 # ======================================================================
 # Block decode (single token)
 def _mixer_decode(p, cfg: ModelConfig, kind: str, x_t, state, pos, *,
-                  enc_kv=None):
+                  enc_kv=None, pages=None, active=None, layer=None):
     """Mixer half of one block's decode step (norm1 + mixer + residual,
     plus the cross-attention sub-block for enc-dec decoders).  Shared by
     the scanned :func:`decode_step` and the layerwise packed-offload
     driver (:func:`decode_block_packed`) so both run the exact same
-    non-MoE computation."""
+    non-MoE computation.  ``pages``/``active`` select the paged KV plane
+    (DESIGN.md §9) — ignored by the dense ring caches; ``layer`` marks a
+    layer-stacked paged cache addressed in place (scan-carry path)."""
     mixer, _ = parse_block(kind)
     h = L.apply_norm(p["norm1"], cfg, x_t)
     if mixer in ("attn", "swa", "xattn"):
         window = cfg.sliding_window if mixer == "swa" else None
         y, kv = L.attention_decode(p["attn"], cfg, h, state["kv"], pos,
-                                   window=window)
+                                   window=window, pages=pages,
+                                   active=active, layer=layer)
         state = dict(state, kv=kv)
     elif mixer == "rglru":
         y, rec = R.rglru_decode(p["rglru"], cfg, h, state["rec"])
@@ -256,10 +259,12 @@ def _mixer_decode(p, cfg: ModelConfig, kind: str, x_t, state, pos, *,
 
 
 def _block_decode(p, cfg: ModelConfig, kind: str, x_t, state, pos, *,
-                  enc_kv=None, moe_mode: str = "dispatch", offload_hook=None):
+                  enc_kv=None, moe_mode: str = "dispatch", offload_hook=None,
+                  pages=None, active=None, layer=None):
     mixer, ffn = parse_block(kind)
     info = {}
-    x_t, state = _mixer_decode(p, cfg, kind, x_t, state, pos, enc_kv=enc_kv)
+    x_t, state = _mixer_decode(p, cfg, kind, x_t, state, pos, enc_kv=enc_kv,
+                               pages=pages, active=active, layer=layer)
     if ffn != "none":
         h2 = L.apply_norm(p["norm2"], cfg, x_t)
         B, S, D = h2.shape
@@ -280,7 +285,7 @@ def _block_decode(p, cfg: ModelConfig, kind: str, x_t, state, pos, *,
 def decode_block_packed(p, cfg: ModelConfig, kind: str, x_t, state, pos,
                         store, pstate, l_moe, routers, *, lookahead: int = 1,
                         n_spec: int = 0, fused: bool = True, active=None,
-                        vectorized: bool = True):
+                        vectorized: bool = True, pages=None):
     """One block's decode step with MoE served from the packed expert
     buffer pool — ``moe_mode="packed"`` (DESIGN.md §6).  Identical mixer
     computation to :func:`_block_decode`; the MoE FFN reads HQQ-packed
@@ -294,7 +299,8 @@ def decode_block_packed(p, cfg: ModelConfig, kind: str, x_t, state, pos,
     :func:`decode_block_packed_moe`, DESIGN.md §7)."""
     mixer, ffn = parse_block(kind)
     info = {}
-    x_t, state = _mixer_decode(p, cfg, kind, x_t, state, pos)
+    x_t, state = _mixer_decode(p, cfg, kind, x_t, state, pos, pages=pages,
+                               active=active)
     if ffn != "none":
         h2 = L.apply_norm(p["norm2"], cfg, x_t)
         B, S, D = h2.shape
@@ -313,13 +319,14 @@ def decode_block_packed(p, cfg: ModelConfig, kind: str, x_t, state, pos,
 
 
 def decode_block_packed_mixer(p, cfg: ModelConfig, kind: str, x_t, state,
-                              pos):
+                              pos, pages=None, active=None):
     """Mixer half of a packed MoE block's decode step (pipelined driver,
     DESIGN.md §7): norm1 + mixer + residual plus the pre-MoE norm —
     everything that does NOT read the expert pool state, so this dispatch
     can execute while the previous layer's speculative staging transfer
     is still in flight.  Returns (x_t, state, h2 (B, S, D))."""
-    x_t, state = _mixer_decode(p, cfg, kind, x_t, state, pos)
+    x_t, state = _mixer_decode(p, cfg, kind, x_t, state, pos, pages=pages,
+                               active=active)
     return x_t, state, L.apply_norm(p["norm2"], cfg, x_t)
 
 
@@ -343,8 +350,11 @@ def decode_block_packed_moe(p, cfg: ModelConfig, x_t, h2, store, pstate,
 
 # ======================================================================
 # Decode-state init
-def _block_state(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+def _block_state(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                 paged=None):
     mixer, _ = parse_block(kind)
+    if mixer in ("attn", "xattn", "swa") and paged is not None:
+        return {"kv": L.init_paged_attn_cache(cfg, *paged)}
     if mixer in ("attn", "xattn"):
         return {"kv": L.init_attn_cache(cfg, batch, max_len, None)}
     if mixer == "swa":
@@ -358,17 +368,37 @@ def _block_state(cfg: ModelConfig, kind: str, batch: int, max_len: int):
     return {}
 
 
-def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, *,
+                      kv_pages: int = None, kv_page: int = None,
+                      kv_max_pages: int = None) -> PyTree:
+    """``kv_pages``/``kv_page``/``kv_max_pages`` switch the KV plane to
+    block-paged storage (DESIGN.md §9): every attention layer holds a
+    batch-free pool of ``kv_pages`` pages of ``kv_page`` positions and
+    the state grows a per-row page table ``state["pages"]``
+    ((batch, kv_max_pages), −1 = unallocated) shared by all layers —
+    which is why the whole pool serves any batch size (a B=1 admission
+    chunk writes the same pages the running batch reads)."""
+    paged = None
+    if kv_page is not None:
+        if not cfg.attention_only_stack:
+            raise ValueError(
+                f"paged KV needs a causal-attention stack; {cfg.name} has "
+                f"mixers without a positional KV cache")
+        paged = (kv_pages, kv_page)
+
     def stacked(kind):
-        one = _block_state(cfg, kind, batch, max_len)
+        one = _block_state(cfg, kind, batch, max_len, paged)
         return jax.tree.map(
             lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape).copy(), one)
 
     state: Dict[str, PyTree] = {
         "stack": [stacked(k) for k in cfg.block_pattern],
-        "tail": [_block_state(cfg, k, batch, max_len) for k in cfg.tail_kinds()],
+        "tail": [_block_state(cfg, k, batch, max_len, paged)
+                 for k in cfg.tail_kinds()],
         "pos": jnp.zeros((), jnp.int32),
     }
+    if paged is not None:
+        state["pages"] = jnp.full((batch, kv_max_pages), -1, jnp.int32)
     if cfg.is_encoder_decoder:
         dt = jnp.dtype(cfg.dtype)
         S_e = cfg.encoder_seq
@@ -577,7 +607,8 @@ def make_prefill(cfg: ModelConfig):
 # ======================================================================
 # Decode
 def decode_step(params, cfg: ModelConfig, state, tokens, *,
-                moe_mode: str = "dispatch", collect_info: bool = False):
+                moe_mode: str = "dispatch", collect_info: bool = False,
+                active=None, row=None):
     """tokens: (B, C) int32. Returns (logits (B,C,V), new_state[, infos]).
 
     C = 1 is the classic one-token decode step.  C > 1 is a *prefill
@@ -597,7 +628,17 @@ def decode_step(params, cfg: ModelConfig, state, tokens, *,
     (``repro.runtime.Executor`` packed planes ->
     :func:`decode_block_packed`) rather than this scanned step, because
     its slot state threads across layers; on this backend the layerwise
-    loop is bitwise-identical to the scan (tests/test_offload.py)."""
+    loop is bitwise-identical to the scan (tests/test_offload.py).
+
+    Paged-KV states (``"pages"`` in state, DESIGN.md §9) add two
+    controls: ``active`` (B,) bool gates which rows write KV and advance
+    ``pos`` (idle / mid-admission slots are frozen — their pages are
+    either unallocated or being filled by chunk programs), and
+    ``row`` (traced int32 scalar) runs the step as a **B=1 row chunk**
+    against the shared page pools: tokens must be (1, C), the program
+    slices that row's page-table row and position, writes the chunk's KV
+    straight into the pool pages the row owns (no private accumulator
+    state, no install copy), and advances only that row's ``pos``."""
     if moe_mode == "packed":
         raise ValueError(
             "moe_mode='packed' threads buffer-pool state across layers; "
@@ -613,7 +654,15 @@ def decode_step(params, cfg: ModelConfig, state, tokens, *,
             f"advance one token per step — use forward_train-based "
             f"prefill (transformer.make_prefill) for this arch")
     x = L.embed(params["embed"], cfg, tokens)
-    pos = state["pos"]
+    pages = state.get("pages")
+    if row is not None:
+        assert pages is not None, "row chunks need a paged-KV state"
+        row = jnp.asarray(row, jnp.int32)
+        pages = jax.lax.dynamic_slice(pages, (row, 0),
+                                      (1, pages.shape[1]))
+        pos = jax.lax.dynamic_slice(state["pos"], (row,), (1,))
+    else:
+        pos = state["pos"]
     period = cfg.pattern_period
     infos = []
 
@@ -635,16 +684,30 @@ def decode_step(params, cfg: ModelConfig, state, tokens, *,
                 li = lidx * period + i
                 enc_kv = (enc_kv_stacked["k"][li], enc_kv_stacked["v"][li],
                           enc_kv_stacked["pos"][li])
-            sslice = jax.tree.map(
-                lambda a: jax.lax.dynamic_index_in_dim(a, lidx, 0,
-                                                       keepdims=False),
-                new_stacks[i])
-            x, st, info = _block_decode(pslices[i], cfg, kind, x, sslice,
-                                        pos, enc_kv=enc_kv, moe_mode=moe_mode)
-            new_stacks[i] = jax.tree.map(
-                lambda a, b: jax.lax.dynamic_update_index_in_dim(
-                    a, b, lidx, 0),
-                new_stacks[i], st)
+            if pages is not None:
+                # paged KV: the layer-stacked pool stays WHOLE in the
+                # carry; the layer index rides in the scatter/gather
+                # indices, so XLA updates the (donated) pool in place —
+                # slicing it per layer would copy pool-capacity bytes
+                # every step (DESIGN.md §9)
+                x, st, info = _block_decode(pslices[i], cfg, kind, x,
+                                            new_stacks[i], pos,
+                                            enc_kv=enc_kv,
+                                            moe_mode=moe_mode, pages=pages,
+                                            active=active, layer=lidx)
+                new_stacks[i] = st
+            else:
+                sslice = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, lidx, 0,
+                                                           keepdims=False),
+                    new_stacks[i])
+                x, st, info = _block_decode(pslices[i], cfg, kind, x,
+                                            sslice, pos, enc_kv=enc_kv,
+                                            moe_mode=moe_mode)
+                new_stacks[i] = jax.tree.map(
+                    lambda a, b: jax.lax.dynamic_update_index_in_dim(
+                        a, b, lidx, 0),
+                    new_stacks[i], st)
             if collect_info:
                 inf_out.append(info)
         return (x, tuple(new_stacks)), \
@@ -658,15 +721,25 @@ def decode_step(params, cfg: ModelConfig, state, tokens, *,
     new_tail = []
     for i, kind in enumerate(cfg.tail_kinds()):
         x, st, info = _block_decode(params["tail"][i], cfg, kind, x,
-                                    state["tail"][i], pos, moe_mode=moe_mode)
+                                    state["tail"][i], pos, moe_mode=moe_mode,
+                                    pages=pages, active=active)
         new_tail.append(st)
         if collect_info:
             infos.append(info)
 
     x = L.apply_norm(params["final_norm"], cfg, x)
     logits = L.unembed(params, cfg, x)
+    C = tokens.shape[1]
+    if row is not None:
+        new_pos = jax.lax.dynamic_update_slice(state["pos"], pos + C, (row,))
+    elif pages is not None and active is not None:
+        # frozen rows (idle slots / mid-admission) must not advance: an
+        # admission's next chunk writes at the position it left off
+        new_pos = pos + jnp.where(active, C, 0).astype(pos.dtype)
+    else:
+        new_pos = pos + C
     new_state = dict(state, stack=list(new_stack), tail=new_tail,
-                     pos=pos + tokens.shape[1])
+                     pos=new_pos)
     if collect_info:
         return logits, new_state, (info_stack, infos)
     return logits, new_state

@@ -120,11 +120,12 @@ class Executor:
                self.cfg)
         cfg = self.cfg
         if collect_info:
-            make = lambda: jax.jit(lambda p, st, tk: T.decode_step(
-                p, cfg, st, tk, moe_mode="gather", collect_info=True))
+            make = lambda: jax.jit(lambda p, st, tk, act: T.decode_step(
+                p, cfg, st, tk, moe_mode="gather", collect_info=True,
+                active=act))
         else:
-            make = lambda: jax.jit(lambda p, st, tk: T.decode_step(
-                p, cfg, st, tk, moe_mode="gather"))
+            make = lambda: jax.jit(lambda p, st, tk, act: T.decode_step(
+                p, cfg, st, tk, moe_mode="gather", active=act))
         return T.cached_jit(key, make)
 
     def _plain_step_sampled(self, collect_info: bool, greedy: bool):
@@ -132,24 +133,39 @@ class Executor:
 
         def make():
             if collect:
-                def _step_fn(p, st, tk):
+                def _step_fn(p, st, tk, act):
                     logits, st, infos = T.decode_step(
                         p, cfg, st, tk, moe_mode="gather",
-                        collect_info=True)
+                        collect_info=True, active=act)
                     nxt = (jnp.argmax(logits[:, -1], -1)
                            .astype(jnp.int32) if greedy
                            else logits[:, -1])
                     return nxt, st, infos
             else:
-                def _step_fn(p, st, tk):
+                def _step_fn(p, st, tk, act):
                     logits, st = T.decode_step(p, cfg, st, tk,
-                                               moe_mode="gather")
+                                               moe_mode="gather",
+                                               active=act)
                     nxt = (jnp.argmax(logits[:, -1], -1)
                            .astype(jnp.int32) if greedy
                            else logits[:, -1])
                     return nxt, st
             return jax.jit(_step_fn, donate_argnums=1)
         return T.cached_jit(("cont_step", cfg, collect, greedy), make)
+
+    def _row_chunk_step(self):
+        """B=1 prefill chunk of one slot against the shared page pools
+        (paged admission, DESIGN.md §9): ``decode_step(row=slot)`` —
+        the chunk's KV lands in the pages the slot owns, no install.
+        The state is donated (callers hand in a fresh view and adopt
+        the result) so the pool scatters run in place instead of
+        copying pool-capacity bytes per chunk."""
+        cfg = self.cfg
+        return T.cached_jit(
+            ("decode_gather_row", cfg),
+            lambda: jax.jit(lambda p, st, tk, r: T.decode_step(
+                p, cfg, st, tk, moe_mode="gather", row=r),
+                donate_argnums=1))
 
     # ------------------------------------------------------------------
     # packed-plane per-kind block programs (moved from the PR-2/PR-3
@@ -163,17 +179,18 @@ class Executor:
             if parse_block(kind)[1] == "moe":
                 def make():
                     fn = lambda p, x, st, pos, store, ps, lm, routers, \
-                        act: T.decode_block_packed(
+                        act, pages: T.decode_block_packed(
                             p, cfg, kind, x, st, pos, store, ps, lm,
                             routers, lookahead=spec.lookahead,
                             n_spec=spec.num_speculative, fused=fused,
-                            active=act, vectorized=vectorized)
+                            active=act, vectorized=vectorized, pages=pages)
                     return jax.jit(fn, donate_argnums=(5,))
                 key = ("packed_blk", self._mode, kind)
             else:
                 def make():
-                    fn = lambda p, x, st, pos: T._block_decode(
-                        p, cfg, kind, x, st, pos, moe_mode="gather")
+                    fn = lambda p, x, st, pos, pages, act: T._block_decode(
+                        p, cfg, kind, x, st, pos, moe_mode="gather",
+                        pages=pages, active=act)
                     return jax.jit(fn)
                 # a non-MoE block's program depends only on (cfg, kind) —
                 # identical across offload modes
@@ -188,8 +205,10 @@ class Executor:
             self._blk[key] = T.cached_jit(
                 ("packed_mixer", cfg, kind),
                 lambda: jax.jit(
-                    lambda p, x, st, pos: T.decode_block_packed_mixer(
-                        p, cfg, kind, x, st, pos)))
+                    lambda p, x, st, pos, pages, act:
+                        T.decode_block_packed_mixer(
+                            p, cfg, kind, x, st, pos, pages=pages,
+                            active=act)))
         return self._blk[key]
 
     def _moe_blk(self):
@@ -253,18 +272,23 @@ class Executor:
         ``info`` is the per-MoE-layer route-id list on packed planes, the
         raw ``decode_step`` info stack when ``collect_info`` on plain,
         else ``None``.
+
+        On paged-KV states (``"pages"`` in state) ``active`` also gates
+        KV writes and per-row ``pos`` advance (DESIGN.md §9): frozen
+        rows are idle slots or chunked admissions mid-fill.
         """
         if not self.packed:
             if collect_info:
                 logits, state, infos = self._plain_step(True)(
-                    self.params, state, tokens)
+                    self.params, state, tokens, active)
                 return logits, state, None, infos
             logits, state = self._plain_step(False)(
-                self.params, state, tokens)
+                self.params, state, tokens, active)
             return logits, state, None, None
         cfg = self.cfg
         x = self._jit_embed(self.params, tokens)
         pos = state["pos"]
+        pages = state.get("pages")
         B = int(tokens.shape[0])
         # speculation is the paper's batch-1 interactive feature (batched
         # continuous decode disables it) — same gate the synchronous
@@ -278,7 +302,7 @@ class Executor:
                 lm = jnp.asarray(self.moe_ordinal[l], jnp.int32)
                 if self.pipelined:
                     x, st_l, h2 = self._mixer_blk(kind)(
-                        self._layer_p[l], x, st_l, pos)
+                        self._layer_p[l], x, st_l, pos, pages, active)
                     x, pstate, info = self._moe_blk()(
                         self._layer_p[l], x, h2, self.store, pstate, lm,
                         active)
@@ -291,24 +315,28 @@ class Executor:
                 else:
                     x, st_l, pstate, info = self._decode_blk(kind)(
                         self._layer_p[l], x, st_l, pos, self.store, pstate,
-                        lm, self.routers, active)
+                        lm, self.routers, active, pages)
                 route_ids.append(info["route"]["ids"])
             else:
                 x, st_l, _ = self._decode_blk(kind)(
-                    self._layer_p[l], x, st_l, pos)
+                    self._layer_p[l], x, st_l, pos, pages, active)
             state = T.set_decode_state_layer(state, cfg, l, st_l)
         logits = self._jit_head(self.params, x)
-        state = dict(state, pos=pos + 1)
+        if pages is not None and active is not None:
+            pos = pos + jnp.where(active, 1, 0).astype(pos.dtype)
+        else:
+            pos = pos + 1
+        state = dict(state, pos=pos)
         return logits, state, pstate, route_ids
 
     def decode_sampled(self, state, tokens, *, collect_info: bool,
-                       greedy: bool):
+                       greedy: bool, active=None):
         """Plain-plane decode with sampling prep fused into the jitted
         step (greedy argmax on-device / last-position logits) and the
         state donated — the continuous engine's hot loop."""
         assert not self.packed, "packed decode returns logits; sample host-side"
         return self._plain_step_sampled(collect_info, greedy)(
-            self.params, state, tokens)
+            self.params, state, tokens, active)
 
     # ------------------------------------------------------------------
     def prefill_chunk(self, state, tokens, pstate=None):
@@ -318,26 +346,60 @@ class Executor:
         never touches the pool state (module docstring)."""
         if not self.packed:
             logits, state = self._plain_step(False)(
-                self.params, state, tokens)
+                self.params, state, tokens, None)
             return logits, state, pstate
         cfg = self.cfg
         x = self._jit_embed(self.params, tokens)
         pos = state["pos"]
+        pages = state.get("pages")
         for l, kind in enumerate(self.kinds):
             st_l = T.decode_state_layer(state, cfg, l)
             if l in self.moe_ordinal:
                 lm = jnp.asarray(self.moe_ordinal[l], jnp.int32)
                 x, st_l, h2 = self._mixer_blk(kind)(
-                    self._layer_p[l], x, st_l, pos)
+                    self._layer_p[l], x, st_l, pos, pages, None)
                 x = self._chunk_moe_blk()(
                     self._layer_p[l], x, h2, self.store, lm)
             else:
                 x, st_l, _ = self._decode_blk(kind)(
-                    self._layer_p[l], x, st_l, pos)
+                    self._layer_p[l], x, st_l, pos, pages, None)
             state = T.set_decode_state_layer(state, cfg, l, st_l)
         logits = self._jit_head(self.params, x)
         state = dict(state, pos=pos + tokens.shape[1])
         return logits, state, pstate
+
+    def prefill_chunk_row(self, state, tokens, slot: int):
+        """One slot's prompt chunk against the shared page pools (paged
+        admission, DESIGN.md §9): tokens (1, C) write KV straight into
+        the pages ``slot`` owns at its current position and only that
+        row's ``pos`` advances.  Returns (logits (1, C, V), state').
+        There is no install step — the running batch reads the same
+        pools the chunk just wrote."""
+        assert "pages" in state, "prefill_chunk_row needs a paged-KV state"
+        slot_t = jnp.asarray(slot, jnp.int32)
+        if not self.packed:
+            return self._row_chunk_step()(self.params, state, tokens, slot_t)
+        cfg = self.cfg
+        x = self._jit_embed(self.params, tokens)
+        pos_row = jax.lax.dynamic_slice(state["pos"], (slot_t,), (1,))
+        pages_row = jax.lax.dynamic_slice(
+            state["pages"], (slot_t, 0), (1, state["pages"].shape[1]))
+        for l, kind in enumerate(self.kinds):
+            st_l = T.decode_state_layer(state, cfg, l)
+            if l in self.moe_ordinal:
+                lm = jnp.asarray(self.moe_ordinal[l], jnp.int32)
+                x, st_l, h2 = self._mixer_blk(kind)(
+                    self._layer_p[l], x, st_l, pos_row, pages_row, None)
+                x = self._chunk_moe_blk()(
+                    self._layer_p[l], x, h2, self.store, lm)
+            else:
+                x, st_l, _ = self._decode_blk(kind)(
+                    self._layer_p[l], x, st_l, pos_row, pages_row, None)
+            state = T.set_decode_state_layer(state, cfg, l, st_l)
+        logits = self._jit_head(self.params, x)
+        state = dict(state, pos=jax.lax.dynamic_update_slice(
+            state["pos"], pos_row + tokens.shape[1], (slot_t,)))
+        return logits, state
 
     def prefill(self, tokens, max_len: int, *, chunk: Optional[int] = None,
                 pstate=None):

@@ -52,7 +52,7 @@ from repro.core.offload_engine import (ExpertUsageTracker, routing_from_info)
 from repro.data.pipeline import EOS
 from repro.runtime import (Admission, ChunkTask, Executor, StepPlan,
                            TokenBudgetPolicy)
-from repro.serving.kv_manager import KVSlotManager
+from repro.serving.kv_manager import KVSlotManager, PagedKVManager
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.scheduler import GenRequest, Scheduler
 
@@ -141,7 +141,10 @@ class ContinuousEngine:
                  policy=None, eos_id: Optional[int] = EOS,
                  prefill_chunk: Optional[int] = None,
                  token_budget: Optional[int] = None,
-                 seed: int = 0, offload=None):
+                 seed: int = 0, offload=None,
+                 kv_page: Optional[int] = None,
+                 kv_pages_total: Optional[int] = None,
+                 ragged_bucket: bool = True):
         """``offload``: a packed :class:`~repro.core.offload_engine.
         OffloadEngine` (``quantized=True``) switches this engine into
         **offloaded decode mode** (DESIGN.md §6): experts stay HQQ-packed
@@ -155,7 +158,20 @@ class ContinuousEngine:
         ``prefill_chunk``: admission prompt chunk size; ``None`` = whole
         prompt per step (one chunk).  ``token_budget`` caps the tokens
         one step computes (decode rows + prefill chunks); default
-        ``max_slots + prefill_chunk``."""
+        ``max_slots + prefill_chunk``.
+
+        ``kv_page`` switches the KV plane to **block-paged storage**
+        (DESIGN.md §9): KV lives in a shared pool of ``kv_pages_total``
+        pages of ``kv_page`` positions (default: full provisioning,
+        ``max_slots * ceil(slot_len/kv_page)``), requests reserve pages
+        for their actual ``prompt + max_new`` instead of a slot_len
+        ring, admission chunks write straight into the slot's pages (no
+        install copy), and every decode step's attention is sliced to
+        the live page horizon — cost follows live context, not slot
+        width.  ``ragged_bucket=False`` pins the horizon to the full
+        table, which makes paged decoding BITWISE the dense engine
+        (tests/test_paged_kv.py); bucketing keeps greedy token streams
+        identical while paying only for live pages."""
         self.offload = offload
         if offload is not None:
             if offload._decoder is None:
@@ -172,9 +188,21 @@ class ContinuousEngine:
         self.cfg = cfg
         self.sampler = sampler or SamplerConfig(kind="greedy")
         self.max_slots = max_slots
-        self.slot_len = slot_len
         self.eos_id = eos_id
-        self.kv = KVSlotManager(cfg, max_slots, slot_len)
+        self.paged = kv_page is not None
+        if self.paged:
+            maxp = -(-slot_len // kv_page)
+            self.kv = PagedKVManager(
+                cfg, max_slots, kv_page,
+                kv_pages_total or max_slots * maxp, maxp,
+                bucket=ragged_bucket)
+            slot_len = self.kv.slot_len  # per-request cap, page-rounded
+        else:
+            if kv_pages_total is not None:
+                raise ValueError("kv_pages_total needs kv_page (it sizes "
+                                 "the paged pool)")
+            self.kv = KVSlotManager(cfg, max_slots, slot_len)
+        self.slot_len = slot_len
         self.sched = Scheduler(max_slots, policy)
         self.prefill_chunk = prefill_chunk
         self.budget: Optional[TokenBudgetPolicy] = None
@@ -204,9 +232,12 @@ class ContinuousEngine:
         # token straight back on-device — the host only sees (B,) ints
         self._greedy = self.sampler.kind == "greedy"
         # all-SWA stacks roll their window inside the slot, so a request
-        # may decode past slot_len; anything else must fit the slot ring
+        # may decode past slot_len; anything else must fit the slot ring.
+        # Paged slots never roll (pages are position-indexed), so every
+        # request must fit its page reservation there.
         mixers = {parse_block(k)[0] for k in cfg.block_pattern}
-        self._unbounded = (mixers == {"swa"} and cfg.sliding_window
+        self._unbounded = (not self.paged and mixers == {"swa"}
+                           and cfg.sliding_window
                            and slot_len >= cfg.sliding_window)
         self.tokens = np.zeros((max_slots, 1), np.int32)
         self.step_count = 0
@@ -252,8 +283,25 @@ class ContinuousEngine:
     def _start_admissions(self) -> None:
         """Move policy-selected waiting requests into slots; their
         prompts prefill as chunks over the coming steps (or this step,
-        when unchunked)."""
+        when unchunked).  Paged mode additionally gates admission on the
+        page pool: the policy's pick must be able to reserve its
+        worst-case ``ceil((prompt+max_new)/page_size)`` pages, else
+        admission stalls until releases free pages (head-of-line on
+        memory — the no-preemption discipline, DESIGN.md §9)."""
         while self.kv.n_free and self.sched.has_waiting:
+            if self.paged:
+                idx, cand = self.sched.peek_next(self.usage)
+                need = len(cand.prompt) + cand.max_new_tokens
+                if not self.kv.can_admit(need):
+                    break
+                req = self.sched.pop_at(idx)
+                slot = self.kv.allocate(req.rid, need)
+                req.slot = slot
+                # no accumulator state: chunks write the slot's pages
+                self._admissions.append(Admission(
+                    rid=req.rid, slot=slot, total=len(req.prompt),
+                    state=None, req=req))
+                continue
             req = self.sched.pop_next(self.usage)
             slot = self.kv.allocate(req.rid)
             req.slot = slot
@@ -279,8 +327,18 @@ class ContinuousEngine:
             adm = by_rid[task.rid]
             req: GenRequest = adm.req
             tokens = jnp.asarray(req.prompt[None, task.lo: task.hi])
-            logits, adm.state, _ = self._exec.prefill_chunk(
-                adm.state, tokens)
+            if self.paged:
+                # chunk writes straight into the slot's pool pages —
+                # allocate up to the chunk's end, then adopt the state
+                # (view(): chunks see the full, freshly-synced table)
+                self.kv.ensure(adm.slot, task.hi)
+                logits, new_state = self._exec.prefill_chunk_row(
+                    self.kv.view(), tokens, adm.slot)
+                self.kv.adopt(new_state)
+                self.kv.note_tokens(adm.slot, task.hi)
+            else:
+                logits, adm.state, _ = self._exec.prefill_chunk(
+                    adm.state, tokens)
             adm.next_lo = task.hi
             if task.last:
                 first = int(self._sample_rows(logits[:, -1], [req])[0])
@@ -292,7 +350,13 @@ class ContinuousEngine:
                     finished.append(req)
                     continue
                 self.tokens[adm.slot, 0] = first
-                if self.budget is None:
+                if self.paged:
+                    # KV is already in place — the row joins the decode
+                    # rows as soon as the plan includes it (this step
+                    # when unchunked, next step's plan under a budget:
+                    # the same timing the dense install path produces)
+                    self._admissions.remove(adm)
+                elif self.budget is None:
                     self.kv.write_prefill(adm.state, adm.slot)
                     self._admissions.remove(adm)
                 # else: adm.done marks it ready; installed next step
@@ -359,14 +423,25 @@ class ContinuousEngine:
             return finished
         reqs = sorted((r for r in self.sched.running
                        if r.slot in set(rows)), key=lambda r: r.slot)
+        active = np.zeros((self.max_slots,), bool)
+        active[rows] = True
+        if self.paged:
+            # page for each row's write position, then slice the table
+            # to the live horizon: attention pays for live context, not
+            # slot capacity (DESIGN.md §9)
+            for r in rows:
+                self.kv.ensure(r, self.kv.length(r) + 1)
+            step_state = self.kv.view(self.kv.live_width(rows))
+            act_dev = jnp.asarray(active)
+        else:
+            step_state = self.kv.state
+            act_dev = None
         if self.offload is not None:
             # offloaded decode: layerwise packed step over the slotted
             # state; free slots bypass the expert pool (active mask), so
             # their dummy tokens never pollute the cache or the stats
-            active = np.zeros((self.max_slots,), bool)
-            active[rows] = True
             logits, state, self._pstate, route_ids = self._exec.decode(
-                self.kv.state, jnp.asarray(self.tokens), self._pstate,
+                step_state, jnp.asarray(self.tokens), self._pstate,
                 jnp.asarray(active))
             if self._collect:
                 self.usage.update([np.asarray(i) for i in route_ids],
@@ -375,8 +450,9 @@ class ContinuousEngine:
                        if self._greedy else logits[:, -1])
         else:
             out = self._exec.decode_sampled(
-                self.kv.state, jnp.asarray(self.tokens),
-                collect_info=self._collect, greedy=self._greedy)
+                step_state, jnp.asarray(self.tokens),
+                collect_info=self._collect, greedy=self._greedy,
+                active=act_dev)
             if self._collect:
                 nxt_dev, state, (info_stack, _) = out
                 ids, _ = routing_from_info(self.cfg, info_stack,
@@ -384,7 +460,12 @@ class ContinuousEngine:
                 self.usage.update(ids, rows=rows)
             else:
                 nxt_dev, state = out
-        self.kv.state = state
+        if self.paged:
+            self.kv.adopt(state)
+            for r in rows:
+                self.kv.note_tokens(r, self.kv.length(r) + 1)
+        else:
+            self.kv.state = state
         if self._greedy:
             nxt = np.asarray(nxt_dev)
         else:
@@ -425,6 +506,7 @@ class ContinuousEngine:
                "finished": len(self.sched.finished),
                "tokens": toks,
                "tokens_per_step": toks / max(1, self.step_count)}
+        out.update(self.kv.stats())  # KV occupancy (pages / slot lengths)
         if self.offload is not None:
             hits, spec_hits, demand, spec = (
                 int(c) for c in np.asarray(self._pstate.counts))

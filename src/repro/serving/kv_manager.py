@@ -16,13 +16,23 @@ The manager is deliberately model-agnostic: it treats the decode state as
 an opaque pytree and only assumes the seed layout's axis convention
 (``stack`` leaves carry batch at axis 1 under the scan axis, ``tail``
 leaves at axis 0, ``pos`` is per-row).
+
+:class:`PagedKVManager` is the block-paged alternative (DESIGN.md §9):
+KV lives in a shared pool of fixed-size pages per layer and a slot owns
+an ordered page list instead of a fixed-width ring, so short requests
+stop reserving ``slot_len`` of KV and decode attention is sliced to the
+*live* page horizon every step.  :class:`PagePool` is the host-side
+allocator (heap free list + admission reservations) whose invariants
+are property-tested in ``tests/test_paged_kv.py``.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+import heapq
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
@@ -56,8 +66,12 @@ class KVSlotManager:
         state = T.init_decode_state(cfg, n_slots, slot_len)
         state["pos"] = jnp.zeros((n_slots,), jnp.int32)  # per-row positions
         self.state = state
+        # heap free list: O(log n) allocate/release, lowest slot first
+        # (the order the old pop(0)/sort() list produced)
         self._free: List[int] = list(range(n_slots))
+        heapq.heapify(self._free)
         self._owner: List[Optional[object]] = [None] * n_slots
+        self.peak_slots = 0
         # donate the big state: the write is a pure row update, so XLA
         # reuses the (KV-stack-sized) buffers instead of copying them
         self._write = jax.jit(_write_slot, donate_argnums=0)
@@ -71,15 +85,32 @@ class KVSlotManager:
         return self._owner[slot]
 
     def allocate(self, owner=None) -> int:
-        slot = self._free.pop(0)
+        slot = heapq.heappop(self._free)
         self._owner[slot] = owner
+        self.peak_slots = max(self.peak_slots, self.n_slots - self.n_free)
         return slot
 
     def release(self, slot: int) -> None:
         assert self._owner[slot] is not None, f"slot {slot} already free"
         self._owner[slot] = None
-        self._free.append(slot)
-        self._free.sort()
+        heapq.heappush(self._free, slot)
+
+    def stats(self) -> Dict[str, object]:
+        """KV occupancy counters (surfaced by ``ContinuousEngine.stats``):
+        the dense ring reserves ``slot_len`` positions per slot whether
+        used or not — ``kv_positions_reserved`` vs ``kv_positions_live``
+        is exactly the waste the paged layout removes (DESIGN.md §9)."""
+        pos = np.asarray(self.state["pos"])
+        live = [int(pos[s]) for s in range(self.n_slots)
+                if self._owner[s] is not None]
+        return {"kv_layout": "dense",
+                "kv_slots_in_use": self.n_slots - self.n_free,
+                "kv_slots_free": self.n_free,
+                "kv_positions_reserved":
+                    (self.n_slots - self.n_free) * self.slot_len,
+                "kv_peak_positions_reserved": self.peak_slots * self.slot_len,
+                "kv_positions_live": sum(live),
+                "kv_slot_lengths": live}
 
     # ------------------------------------------------------------------
     def new_row_state(self):
@@ -111,3 +142,301 @@ class KVSlotManager:
         overwrite live context (conservative for SWA stacks, where the
         window may be narrower than the slot)."""
         return self.slot_len - int(self.state["pos"][slot])
+
+
+# ======================================================================
+# Block-paged KV (DESIGN.md §9)
+class PagePool:
+    """Host-side page allocator: heap free list + per-slot ordered page
+    lists + admission *reservations*.
+
+    Pages are allocated lazily (``ensure`` covers positions as they are
+    written) but admission reserves a slot's worst-case page count up
+    front, so a mid-decode allocation can never fail — the conservative
+    no-preemption discipline (a request that is admitted always runs to
+    completion).  Invariants (property-tested): a page has at most one
+    owner, free + owned partitions the pool, a slot's table is gapless
+    in ordinal order, and release returns every page.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        assert n_pages > 0 and page_size > 0
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(n_pages))
+        heapq.heapify(self._free)
+        self.owned: Dict[object, List[int]] = {}
+        self.reserved: Dict[object, int] = {}
+        self.peak_in_use = 0
+        # peak COMMITTED pages (allocated + reserved-but-unallocated):
+        # the honest memory footprint — a reserved page is unavailable
+        # to other requests whether or not it has been written yet
+        self.peak_committed = 0
+
+    # ------------------------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        return max(1, -(-int(n_tokens) // self.page_size))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_reserved_unallocated(self) -> int:
+        return sum(max(0, r - len(self.owned.get(s, [])))
+                   for s, r in self.reserved.items())
+
+    def can_reserve(self, n_pages: int) -> bool:
+        return n_pages <= self.n_free - self.n_reserved_unallocated
+
+    def reserve(self, slot, n_tokens: int) -> None:
+        need = self.pages_for(n_tokens)
+        if not self.can_reserve(need):
+            raise ValueError(
+                f"page pool exhausted: need {need} pages, "
+                f"{self.n_free - self.n_reserved_unallocated} unreserved")
+        assert slot not in self.reserved, f"slot {slot} already reserved"
+        self.reserved[slot] = need
+        self.owned[slot] = []
+        self.peak_committed = max(
+            self.peak_committed,
+            self.n_pages - self.n_free + self.n_reserved_unallocated)
+
+    def ensure(self, slot, n_tokens: int) -> List[int]:
+        """Allocate pages so positions ``0 .. n_tokens−1`` are covered;
+        returns the NEWLY allocated page ids (ordinal order)."""
+        need = self.pages_for(n_tokens)
+        assert slot in self.owned, f"slot {slot} not reserved"
+        assert need <= self.reserved[slot], \
+            f"slot {slot} outgrew its reservation ({need} > " \
+            f"{self.reserved[slot]} pages)"
+        new = []
+        while len(self.owned[slot]) < need:
+            pid = heapq.heappop(self._free)
+            self.owned[slot].append(pid)
+            new.append(pid)
+        self.peak_in_use = max(self.peak_in_use, self.n_pages - self.n_free)
+        return new
+
+    def release(self, slot) -> List[int]:
+        """Free every page the slot owns; returns them (for scrubbing)."""
+        ids = self.owned.pop(slot, [])
+        self.reserved.pop(slot, None)
+        for pid in ids:
+            heapq.heappush(self._free, pid)
+        return ids
+
+    def stats(self) -> Dict[str, object]:
+        return {"pages_total": self.n_pages,
+                "pages_free": self.n_free,
+                "pages_in_use": self.n_pages - self.n_free,
+                "pages_peak_in_use": self.peak_in_use,
+                "pages_peak_committed": self.peak_committed,
+                "pages_reserved_unallocated": self.n_reserved_unallocated,
+                "page_size": self.page_size}
+
+
+class PagedKVManager:
+    """Block-paged slotted decode state (DESIGN.md §9).
+
+    Same slot protocol as :class:`KVSlotManager` — ``allocate`` /
+    ``release`` / per-row ``pos`` — but KV lives in per-layer page pools
+    (``models/layers.init_paged_attn_cache``) indexed through one shared
+    per-slot page table, so:
+
+    * admission prefill chunks write **directly into the pool pages the
+      slot owns** (``decode_step(row=...)``) — there is no B=1 side
+      state and no install scatter;
+    * a request reserves ``ceil((prompt+max_new)/page_size)`` pages, not
+      ``slot_len`` positions;
+    * each decode step runs against a table **view** sliced to the live
+      page horizon (:meth:`live_width`), so attention cost follows live
+      context, not slot capacity.
+
+    The page table is authoritative host-side (``numpy``); the device
+    copy is rebuilt only when allocation changes it.  Released pages
+    have their ``ppos`` scrubbed to −1 (one jitted op over the layer
+    stack) so a reused page can never leak its previous owner's
+    positions into a new row's attention mask.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, page_size: int,
+                 pages_total: int, max_pages_per_slot: int, *,
+                 bucket: bool = True):
+        if not cfg.attention_only_stack:
+            raise ValueError(
+                f"paged KV supports causal-attention stacks; {cfg.name} "
+                f"has mixers that keep cross-token state that page writes "
+                f"cannot isolate")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.page_size = page_size
+        self.max_pages = max_pages_per_slot
+        self.slot_len = max_pages_per_slot * page_size  # per-request cap
+        self.bucket = bucket
+        state = T.init_decode_state(cfg, n_slots, self.slot_len,
+                                    kv_pages=pages_total, kv_page=page_size,
+                                    kv_max_pages=max_pages_per_slot)
+        state["pos"] = jnp.zeros((n_slots,), jnp.int32)
+        self.state = state
+        self.pool = PagePool(pages_total, page_size)
+        self._pages_np = np.full((n_slots, max_pages_per_slot), -1, np.int32)
+        self._pages_dev = jnp.asarray(self._pages_np)
+        self._dirty = False
+        self._free: List[int] = list(range(n_slots))
+        heapq.heapify(self._free)
+        self._owner: List[Optional[object]] = [None] * n_slots
+        self._len = [0] * n_slots  # host mirror of live token counts
+
+    # ------------------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def owner(self, slot: int):
+        return self._owner[slot]
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return (bool(self._free)
+                and self.pool.can_reserve(self.pool.pages_for(n_tokens)))
+
+    def allocate(self, owner=None, n_tokens: int = 1) -> int:
+        """Claim a slot and reserve its worst-case page budget; the
+        slot's position resets to 0 (page writes start at ordinal 0)."""
+        slot = heapq.heappop(self._free)
+        self.pool.reserve(slot, n_tokens)
+        self._owner[slot] = owner
+        self._len[slot] = 0
+        self.state = dict(self.state,
+                          pos=self.state["pos"].at[slot].set(0))
+        return slot
+
+    def release(self, slot: int) -> None:
+        assert self._owner[slot] is not None, f"slot {slot} already free"
+        ids = self.pool.release(slot)
+        # table edit precedes the scrub: the scrub donates the state
+        # (including the device table buffer), so mark it stale first
+        self._pages_np[slot] = -1
+        self._dirty = True
+        self._scrub(ids)
+        self._owner[slot] = None
+        self._len[slot] = 0
+        heapq.heappush(self._free, slot)
+
+    def remaining(self, slot: int) -> int:
+        return self.slot_len - self._len[slot]
+
+    # ------------------------------------------------------------------
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        """Grow the slot's page list to cover positions < n_tokens."""
+        new = self.pool.ensure(slot, n_tokens)
+        if new:
+            base = len(self.pool.owned[slot]) - len(new)
+            for j, pid in enumerate(new):
+                self._pages_np[slot, base + j] = pid
+            self._dirty = True
+
+    def note_tokens(self, slot: int, n_tokens: int) -> None:
+        """Record the slot's live token count (host mirror of ``pos`` —
+        kept on the host so per-step page sizing never syncs a device
+        array)."""
+        self._len[slot] = n_tokens
+
+    def length(self, slot: int) -> int:
+        return self._len[slot]
+
+    # ------------------------------------------------------------------
+    def pages_dev(self):
+        if self._dirty:
+            self._pages_dev = jnp.asarray(self._pages_np)
+            self._dirty = False
+        return self._pages_dev
+
+    def live_width(self, slots) -> int:
+        """Page-table width covering every listed slot's allocated pages
+        — the decode step's attention horizon.  Bucketed to the next
+        power of two so jit recompiles O(log max_pages) programs, not
+        one per width."""
+        used = max((len(self.pool.owned.get(s, [])) for s in slots),
+                   default=1)
+        used = max(1, used)
+        if not self.bucket:
+            return self.max_pages
+        w = 1
+        while w < used:
+            w *= 2
+        return min(w, self.max_pages)
+
+    def view(self, width: Optional[int] = None):
+        """State with the page table sliced to ``width`` ordinals — what
+        one decode step executes against.  The table leaf is always a
+        fresh buffer: decode programs donate their state, and the cached
+        full-width table must survive the donation."""
+        pages = self.pages_dev()
+        if width is not None and width < self.max_pages:
+            pages = pages[:, :width]
+        else:
+            pages = jnp.copy(pages)
+        return dict(self.state, pages=pages)
+
+    def adopt(self, new_state) -> None:
+        """Take the pools/positions a step returned; the (possibly
+        sliced, never written) page table is replaced by the full
+        host-authoritative one."""
+        self.state = dict(new_state, pages=self.pages_dev())
+
+    # ------------------------------------------------------------------
+    def _scrub(self, page_ids: List[int]) -> None:
+        """Reset ``ppos`` of released pages to −1 in every layer (one
+        jitted program; ids padded to max_pages with an out-of-bounds
+        sentinel that ``mode="drop"`` discards).  Without this a reused
+        page would expose its previous owner's absolute positions to the
+        next row's attention mask."""
+        if not page_ids:
+            return
+        pad = np.full((self.max_pages,), self.pool.n_pages, np.int32)
+        for chunk_lo in range(0, len(page_ids), self.max_pages):
+            ids = page_ids[chunk_lo: chunk_lo + self.max_pages]
+            pids = pad.copy()
+            pids[: len(ids)] = ids
+            self.state = self._scrub_fn()(self.state, jnp.asarray(pids))
+
+    def _scrub_fn(self):
+        cfg = self.cfg
+
+        def make():
+            def scrub(state, pids):
+                def scrub_kv(blk):
+                    kv = blk.get("kv")
+                    if not isinstance(kv, dict) or "ppos" not in kv:
+                        return blk
+                    pp = kv["ppos"]
+                    if pp.ndim == 3:  # stacked (n_periods, P, ps)
+                        pp = pp.at[:, pids].set(-1, mode="drop")
+                    else:
+                        pp = pp.at[pids].set(-1, mode="drop")
+                    return dict(blk, kv=dict(kv, ppos=pp))
+                return dict(state,
+                            stack=[scrub_kv(b) for b in state["stack"]],
+                            tail=[scrub_kv(b) for b in state["tail"]])
+            return jax.jit(scrub, donate_argnums=0)
+        return T.cached_jit(("paged_scrub", cfg, self.max_pages), make)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        live = [self._len[s] for s in range(self.n_slots)
+                if self._owner[s] is not None]
+        out = {"kv_layout": "paged",
+               "kv_slots_in_use": self.n_slots - self.n_free,
+               "kv_slots_free": self.n_free,
+               # committed = allocated + reserved-unallocated, so this is
+               # comparable with the dense manager's slot-capacity peak
+               "kv_peak_positions_reserved":
+                   self.pool.peak_committed * self.page_size,
+               "kv_positions_live": sum(live),
+               "kv_slot_lengths": live,
+               "kv_slot_pages": {s: list(self.pool.owned.get(s, []))
+                                 for s in range(self.n_slots)
+                                 if self._owner[s] is not None}}
+        out.update({f"kv_{k}": v for k, v in self.pool.stats().items()})
+        return out

@@ -133,16 +133,30 @@ class Scheduler:
     def n_running(self) -> int:
         return len(self.running)
 
-    def pop_next(self, usage: Optional[ExpertUsageTracker] = None
-                 ) -> GenRequest:
-        """Policy-selected waiting request, moved to running."""
+    def peek_next(self, usage: Optional[ExpertUsageTracker] = None
+                  ) -> "tuple[int, GenRequest]":
+        """Policy-selected waiting request WITHOUT admitting it — the
+        paged engine inspects the pick's KV need before committing a
+        slot.  The policy runs exactly once per admission: the caller
+        passes the returned index to :meth:`pop_at` (re-invoking the
+        policy could pick differently under randomized tie-breaking)."""
         assert self.waiting and len(self.running) < self.max_slots
         idx = self.policy(self.waiting, usage)
+        return idx, self.waiting[idx]
+
+    def pop_at(self, idx: int) -> GenRequest:
+        """Admit the waiting request at ``idx`` (from :meth:`peek_next`)."""
         req = self.waiting.pop(idx)
         req.state = RUNNING
         self.running.append(req)
         self.joins += 1
         return req
+
+    def pop_next(self, usage: Optional[ExpertUsageTracker] = None
+                 ) -> GenRequest:
+        """Policy-selected waiting request, moved to running."""
+        idx, _ = self.peek_next(usage)
+        return self.pop_at(idx)
 
     def evict(self, req: GenRequest, reason: str) -> None:
         self.running.remove(req)

@@ -17,8 +17,8 @@ from repro.models import transformer as T
 # roundtrips); with REPRO_FAIL_ON_SKIP=1 (CI) any skip in them fails
 # the session — an optional-dependency skip must never silently retire
 # those invariants
-PROPERTY_MODULES = ("test_lru.py", "test_moe.py", "test_quant.py",
-                    "test_recurrent.py", "test_runtime.py")
+PROPERTY_MODULES = ("test_lru.py", "test_moe.py", "test_paged_kv.py",
+                    "test_quant.py", "test_recurrent.py", "test_runtime.py")
 _skipped_property_tests = []
 
 

@@ -126,6 +126,36 @@ def test_flash_attention_window(window):
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("window,bq,bk,q_offset", [
+    (16, 8, 16, 0),    # grid 8 -> 3 visited blocks
+    (16, 8, 8, 0),     # grid 16 -> 4
+    (32, 8, 16, 192),  # decode-ish offset, grid 16 -> 4
+    (100, 128, 64, 0),  # window spans the whole grid: no skip
+])
+def test_flash_attention_window_skip_bitwise(window, bq, bk, q_offset):
+    """Sliding-window blocks outside the window are dropped from the KV
+    grid (index-map offset) — bitwise the full-grid kernel (skipped
+    leading blocks are wiped by alpha=exp(-inf)=0, trailing ones
+    contribute p=exp(-inf)=0 exactly) and correct vs the reference."""
+    Sq = 128 if q_offset == 0 else 64
+    Skv = Sq + q_offset
+    q = jax.random.normal(jax.random.key(20), (4, Sq, 32), jnp.float32)
+    k = jax.random.normal(jax.random.key(21), (2, Skv, 32), jnp.float32)
+    v = jax.random.normal(jax.random.key(22), (2, Skv, 32), jnp.float32)
+    o_skip = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                    bq=bq, bk=bk, q_offset=q_offset,
+                                    skip_window_blocks=True)
+    o_full = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                    bq=bq, bk=bk, q_offset=q_offset,
+                                    skip_window_blocks=False)
+    assert (np.asarray(o_skip) == np.asarray(o_full)).all(), \
+        "grid skip changed bits"
+    o_ref = ref.flash_attention_ref(q, k, v, causal=True, window=window,
+                                    q_offset=q_offset)
+    np.testing.assert_allclose(np.asarray(o_skip), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_flash_attention_bf16():
     q = jax.random.normal(jax.random.key(6), (2, 128, 64), jnp.bfloat16)
     k = jax.random.normal(jax.random.key(7), (2, 128, 64), jnp.bfloat16)
