@@ -86,7 +86,16 @@ def run(smoke=False, trained=False, max_new=None, seed=0):
         assert (out == oracle).all(), f"{name}: diverged from oracle"
         traffic[name] = (stats.hits, stats.spec_hits, stats.demand_loads,
                          stats.spec_loads)
-        bpt = stats.bytes_h2d / max(1, stats.n_tokens)
+        # row fields come from the telemetry registry (the same snapshot
+        # --metrics-json writes); the returned OffloadStats must agree
+        # exactly — a drift here means the collector and the engine's own
+        # accounting diverged (DESIGN.md §10)
+        om = eng.metrics()["offload"]
+        assert (om["hits"], om["spec_hits"], om["demand_loads"],
+                om["spec_loads"]) == traffic[name], \
+            f"{name}: registry drifted from OffloadStats: {om}"
+        assert om["bytes_h2d"] == stats.bytes_h2d
+        bpt = om["bytes_per_token"]
         # steady-state decode: time the jitted token loop alone (prefill
         # and pool-state init are identical across variants)
         dec = eng._decoder  # the packed-plane runtime Executor

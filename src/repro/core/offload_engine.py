@@ -36,6 +36,7 @@ the eviction sequence — in
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
@@ -264,7 +265,8 @@ class OffloadEngine:
     def __init__(self, params, cfg: ModelConfig,
                  spec: Optional[OffloadSpec] = None, quantized: bool = False,
                  *, packed: Optional[bool] = None, fused: bool = True,
-                 pipelined: bool = True, vectorized: bool = True):
+                 pipelined: bool = True, vectorized: bool = True,
+                 telemetry=None):
         assert cfg.moe is not None, "offloading targets MoE architectures"
         self.cfg = cfg
         self.spec = spec or cfg.offload or OffloadSpec()
@@ -303,6 +305,58 @@ class OffloadEngine:
         # live routing histogram, readable by serving-admission policies
         self.usage = ExpertUsageTracker(self.n_moe_layers,
                                         cfg.moe.num_experts)
+        # telemetry plane (DESIGN.md §10): cumulative transfer accounting
+        # feeds the offload collector; each generate() closes one
+        # roofline window from the stats it already computed (zero extra
+        # device fetches) and traces its prefill/decode spans
+        from repro.obs import Telemetry, jit_cache_metrics
+        self.obs = telemetry if telemetry is not None else Telemetry.off()
+        self.last_stats: Optional[OffloadStats] = None
+        self._cum = OffloadStats(expert_bytes=self.expert_bytes)
+        self.obs.registry.register_collector("offload", self._offload_metrics)
+        self.obs.registry.register_collector("jit", jit_cache_metrics)
+        self._gen_count = 0
+        if self.obs.timing:
+            self.obs.declare_request_schema()
+            self._exec.set_observer(self.obs.exec_observer(self._exec.plane))
+            self.obs.attach_roofline(
+                cfg,
+                expert_bits=self.spec.expert_bits if quantized else 16,
+                attn_bits=self.spec.attn_bits if quantized else 16,
+                expert_bytes=self.expert_bytes)
+
+    # ------------------------------------------------------------------
+    def _offload_metrics(self):
+        """Telemetry ``offload`` namespace: cumulative across generates
+        (the same numbers every returned :class:`OffloadStats` carries —
+        ``benchmarks/offload_bench.py`` asserts the two never drift)."""
+        c = self._cum
+        return {"hits": c.hits, "spec_hits": c.spec_hits,
+                "demand_loads": c.demand_loads, "spec_loads": c.spec_loads,
+                "bytes_h2d": c.bytes_h2d,
+                "bytes_per_token": c.bytes_h2d / max(1, c.n_tokens)}
+
+    def _record_generate(self, stats: OffloadStats, prompt_len: int,
+                         decode_s: float) -> None:
+        """Fold one generate()'s measured stats into the telemetry plane."""
+        self.last_stats = stats
+        c = self._cum
+        c.n_tokens += stats.n_tokens
+        c.hits += stats.hits
+        c.spec_hits += stats.spec_hits
+        c.demand_loads += stats.demand_loads
+        c.spec_loads += stats.spec_loads
+        if self.obs.roofline is not None and decode_s > 0:
+            self.obs.roofline.add_window(
+                stats.n_tokens, decode_s,
+                demand_loads=stats.demand_loads,
+                spec_loads=stats.spec_loads,
+                hits=stats.hits, spec_hits=stats.spec_hits,
+                context_len=prompt_len + stats.n_tokens / 2.0)
+
+    def metrics(self):
+        """Namespaced telemetry snapshot (``repro.obs.schema``)."""
+        return self.obs.snapshot()
 
     # ------------------------------------------------------------------
     def generate(self, prompt: np.ndarray, max_new_tokens: int,
@@ -334,14 +388,23 @@ class OffloadEngine:
                   for _ in range(self.n_moe_layers)]
         stats = OffloadStats(expert_bytes=self.expert_bytes)
 
+        obs = self.obs
+        rid = self._gen_count
+        self._gen_count += 1
+        obs.req_submitted(rid, rid)
+        obs.req_admitted(rid, 0)
+        t_pre = obs.clock_ns() if obs.tracer is not None else 0
         max_len = prompt.shape[1] + max_new_tokens
         pre_logits, state, _ = self._exec.prefill(
             jnp.asarray(prompt), max_len, chunk=prefill_chunk)
+        obs.req_chunk(rid, 0, int(prompt.shape[1]), t_pre)
         # prefill loads each layer once (paper: the encode phase "works
         # relatively well with existing algorithms"); generation-phase
         # accounting starts below.  First token comes from prefill logits.
         rng, tok = self._next_token(rng, pre_logits, sampler)
         out = [int(tok[0, 0])]
+        obs.req_decode_start(rid)
+        t0 = time.perf_counter() if obs.timing else 0.0
         for step_i in range(max_new_tokens - 1):
             logits, state, _, (info_stack, _) = self._exec.decode(
                 state, tok, collect_info=True)
@@ -349,11 +412,14 @@ class OffloadEngine:
             stats.n_tokens += 1
             rng, tok = self._next_token(rng, logits, sampler)
             out.append(int(tok[0, 0]))
+        decode_s = time.perf_counter() - t0 if obs.timing else 0.0
         for c in caches:
             stats.hits += c.hits
             stats.spec_hits += c.spec_hits
             stats.demand_loads += c.demand
             stats.spec_loads += c.spec_loads
+        self._record_generate(stats, int(prompt.shape[1]), decode_s)
+        obs.req_finished(rid, len(out), "length")
         return np.asarray(out)[None], stats
 
     # ------------------------------------------------------------------
@@ -379,16 +445,26 @@ class OffloadEngine:
         slot swaps (DESIGN.md §6/§8)."""
         dec = self._decoder
         pstate = dec.init_pool_state()
+        obs = self.obs
+        rid = self._gen_count
+        self._gen_count += 1
+        obs.req_submitted(rid, rid)
+        obs.req_admitted(rid, 0)
+        t_pre = obs.clock_ns() if obs.tracer is not None else 0
         max_len = prompt.shape[1] + max_new_tokens
         pre_logits, state, _ = dec.prefill(jnp.asarray(prompt), max_len,
                                            chunk=prefill_chunk)
+        obs.req_chunk(rid, 0, int(prompt.shape[1]), t_pre)
         rng, tok = self._next_token(rng, pre_logits, sampler)
         out = [int(tok[0, 0])]
+        obs.req_decode_start(rid)
+        t0 = time.perf_counter() if obs.timing else 0.0
         for _ in range(max_new_tokens - 1):
             logits, state, pstate, route_ids = dec.decode(state, tok, pstate)
             self.usage.update([np.asarray(i) for i in route_ids])
             rng, tok = self._next_token(rng, logits, sampler)
             out.append(int(tok[0, 0]))
+        decode_s = time.perf_counter() - t0 if obs.timing else 0.0
         counts = np.asarray(pstate.counts)
         stats = OffloadStats(
             n_tokens=max_new_tokens - 1,
@@ -396,6 +472,8 @@ class OffloadEngine:
             demand_loads=int(counts[2]), spec_loads=int(counts[3]),
             expert_bytes=self.expert_bytes)
         self._last_pool_state = pstate  # inspectable by tests/examples
+        self._record_generate(stats, int(prompt.shape[1]), decode_s)
+        obs.req_finished(rid, len(out), "length")
         return np.asarray(out)[None], stats
 
     # ------------------------------------------------------------------

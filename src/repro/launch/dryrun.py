@@ -208,13 +208,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: Path
                 "status": "skipped", "reason": SKIPS[(arch, shape_name)]}
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.size
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh_context(mesh):
         lowered, meta = build_lowering(arch, shape_name, mesh)
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     print(mem)

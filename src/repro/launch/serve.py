@@ -92,7 +92,68 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--sampler", default="greedy",
                     choices=["greedy", "categorical", "topk"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the full namespaced metrics snapshot "
+                         "(schema: repro.obs.schema, validated by "
+                         "tools/check_metrics_schema.py) and enable "
+                         "step/request timing + roofline accounting "
+                         "(DESIGN.md §10)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace_event JSON (load in "
+                         "chrome://tracing or ui.perfetto.dev) of every "
+                         "request's lifecycle spans and every step's "
+                         "phase breakdown")
+    ap.add_argument("--roofline-hw", default="t4",
+                    choices=["t4", "3060", "3080m", "a100"],
+                    help="cost-model hardware target for the measured-vs-"
+                         "predicted roofline accounting")
     return ap
+
+
+def make_telemetry(args):
+    """CLI flags -> :class:`repro.obs.Telemetry` (off when neither
+    output was requested — the engines then carry zero instrumentation)."""
+    from repro.obs import Telemetry
+    if args.metrics_json is None and args.trace is None:
+        return Telemetry.off()
+    return Telemetry(timing=True, trace=args.trace is not None,
+                     roofline_hw=args.roofline_hw)
+
+
+def write_outputs(args, obs, mode):
+    if args.metrics_json is not None:
+        obs.write_metrics(args.metrics_json, mode)
+        print(f"[obs] metrics -> {args.metrics_json}")
+    if args.trace is not None:
+        obs.write_trace(args.trace)
+        print(f"[obs] trace   -> {args.trace} "
+              f"({len(obs.tracer.events)} events; load in chrome://tracing)")
+
+
+def print_telemetry_summary(obs):
+    """End-of-run summary straight from the registry — the same numbers
+    the JSON snapshot carries."""
+    snap = obs.snapshot()
+    step = snap.get("step")
+    if step and step["timed"]:
+        total = sum(step[f"{p}_ns"] for p in
+                    ("plan", "chunk", "dispatch", "sync", "sample", "host"))
+        shares = " ".join(
+            f"{p}={100 * step[f'{p}_ns'] / max(1, total):.0f}%"
+            for p in ("plan", "chunk", "dispatch", "sync", "sample", "host"))
+        wall = step["wall_ms"]
+        print(f"[obs] step wall p50={wall['p50']:.2f}ms "
+              f"p95={wall['p95']:.2f}ms over {step['timed']} timed steps; "
+              f"phases: {shares}")
+    roof = snap.get("roofline")
+    if roof and roof["windows"]:
+        print(f"[obs] roofline({roof['hw']}): measured "
+              f"{roof['measured_tok_s']:.2f} tok/s vs predicted "
+              f"{roof['predicted_tok_s']:.2f} tok/s "
+              f"(delta x{roof['delta_ratio']:.2f}); h2d "
+              f"{roof['measured_h2d_bytes_per_token']/1e6:.2f}MB/tok vs "
+              f"naive {roof['naive_h2d_bytes_per_token']/1e6:.2f}MB/tok "
+              f"(saves x{roof['h2d_savings_ratio']:.1f})")
 
 
 def main():
@@ -101,6 +162,12 @@ def main():
     if args.kv_page is not None and not args.continuous:
         raise SystemExit("--kv-page targets the continuous engine's "
                          "slotted KV plane; add --continuous")
+    if ((args.metrics_json is not None or args.trace is not None)
+            and not (args.continuous or args.offload)):
+        raise SystemExit("--metrics-json/--trace instrument the continuous "
+                         "and offload engines; add --continuous or "
+                         "--offload")
+    telem = make_telemetry(args)
     cfg = get_config(args.arch)
     if cfg.vocab_size > 100_000 or cfg.d_model > 1024:
         cfg = cfg.reduced()
@@ -124,7 +191,9 @@ def main():
         from repro.configs.base import OffloadSpec
         spec = resolve_offload_spec(cfg.offload or OffloadSpec(),
                                     args.cache_size, args.num_speculative)
-        eng = OffloadEngine(params, cfg, spec, quantized=args.quantize)
+        eng = OffloadEngine(params, cfg, spec, quantized=args.quantize,
+                            telemetry=telem if not args.continuous
+                            else None)
         if args.continuous:
             # continuous + offloaded decode compose (DESIGN.md §6); the
             # packed pool needs quantized weights
@@ -148,6 +217,11 @@ def main():
         if eng.size_report:
             print("quantized sizes:", {k: f"{v/1e6:.1f}MB"
                                        for k, v in eng.size_report.items()})
+        print_telemetry_summary(eng.obs)
+        write_outputs(args, eng.obs, {
+            "engine": "offload", "arch": cfg.name,
+            "offloaded": True, "timing": eng.obs.timing,
+            "plane": eng._exec.plane, "roofline": eng.obs.timing})
         return
 
     if args.continuous:
@@ -165,7 +239,8 @@ def main():
                 token_budget=args.token_budget,
                 seed=args.seed, offload=offload_eng,
                 kv_page=args.kv_page,
-                kv_pages_total=args.kv_pages_total)
+                kv_pages_total=args.kv_pages_total,
+                telemetry=telem)
         except ValueError as e:
             raise SystemExit(f"--continuous: {e}")
 
@@ -205,6 +280,13 @@ def main():
                   f"demand + {s['offload_spec_loads']} spec loads, "
                   f"{s['offload_hits']} hits "
                   f"({s['offload_bytes_h2d']/1e6:.1f}MB h2d measured)")
+        print_telemetry_summary(eng.obs)
+        write_outputs(args, eng.obs, {
+            "engine": "continuous", "arch": cfg.name,
+            "kv_layout": "paged" if args.kv_page is not None else "dense",
+            "offloaded": offload_eng is not None,
+            "timing": eng.obs.timing, "plane": eng._exec.plane,
+            "roofline": eng.obs.timing})
         return
 
     eng = ServeEngine(params, cfg, SamplerConfig(kind=args.sampler))

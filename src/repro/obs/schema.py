@@ -1,0 +1,111 @@
+"""The telemetry plane's stable, namespaced metrics schema (DESIGN.md §10).
+
+One place defines what every engine/plane/KV-layout combination emits, so
+three consumers can never drift: the snapshot tests
+(``tests/test_obs.py``) assert engines emit EXACTLY these keys, the CI
+validator (``tools/check_metrics_schema.py``) checks ``--metrics-json``
+files against them, and DESIGN.md §10's schema table is generated from
+this module's docstrings of record.
+
+Metric names are ``namespace.key``.  Namespaces:
+
+* ``engine``   — step/token/request lifecycle counts (collector-backed).
+* ``kv``       — KV occupancy, from the slot/page manager (collector).
+* ``offload``  — expert-streaming traffic counters (collector; only on
+  offloaded engines — the counters the engine already fetches).
+* ``jit``      — process-wide engine-executable cache
+  (``transformer.cached_jit_stats``, minus the unserializable keys).
+* ``step``     — per-engine-step phase breakdown (declared counters +
+  wall-clock histogram; only when timing is enabled).
+* ``exec``     — executor dispatch phases, per plane (declared when an
+  observer is attached; the packed planes split mixer/MoE/staging).
+* ``request``  — per-request lifecycle aggregates (declared with timing).
+* ``roofline`` — measured-vs-predicted accounting (gauges; set when a
+  roofline accountant is attached).
+
+The legacy flat ``ContinuousEngine.stats()`` dict is a *projection* of
+this schema (``repro.obs.flatten_legacy``): ``engine.*`` keys flatten
+bare, ``kv.*`` → ``kv_*``, ``offload.*`` → ``offload_*`` and every other
+namespace → ``<ns>_<key>`` — collisions are structurally impossible
+because namespaces flatten through disjoint prefixes (asserted).
+"""
+from __future__ import annotations
+
+from typing import Dict, FrozenSet
+
+SCHEMA_VERSION = 1
+
+ENGINE_KEYS = frozenset({
+    "steps", "joins", "evictions", "finished", "waiting", "running",
+    "tokens", "tokens_per_step", "decode_tokens",
+})
+
+KV_KEYS_DENSE = frozenset({
+    "layout", "slots_in_use", "slots_free", "positions_reserved",
+    "peak_positions_reserved", "positions_live", "slot_lengths",
+})
+
+KV_KEYS_PAGED = frozenset({
+    "layout", "slots_in_use", "slots_free", "peak_positions_reserved",
+    "positions_live", "slot_lengths", "slot_pages", "pages_total",
+    "pages_free", "pages_in_use", "pages_peak_in_use",
+    "pages_peak_committed", "pages_reserved_unallocated", "page_size",
+})
+
+OFFLOAD_KEYS = frozenset({
+    "hits", "spec_hits", "demand_loads", "spec_loads", "bytes_h2d",
+    "bytes_per_token",
+})
+
+JIT_KEYS = frozenset({"builds", "hits", "entries"})
+
+# per-step phase breakdown: plan build / prefill chunks / decode dispatch
+# / kernel wait (the device sync) / host-side sampling / bookkeeping
+STEP_KEYS = frozenset({
+    "timed", "plan_ns", "chunk_ns", "dispatch_ns", "sync_ns",
+    "sample_ns", "host_ns", "wall_ms",
+})
+
+# executor dispatch phases differ by plane — the packed_pipelined plane
+# is the only one with a separate speculative-staging dispatch
+EXEC_KEYS_BY_PLANE: Dict[str, FrozenSet[str]] = {
+    "plain": frozenset({"dispatch_ns"}),
+    "packed_vectorized": frozenset({"embed_ns", "block_ns", "head_ns"}),
+    "packed_pipelined": frozenset({"embed_ns", "mixer_ns", "moe_ns",
+                                   "stage_ns", "head_ns"}),
+}
+
+REQUEST_KEYS = frozenset({
+    "submitted", "finished", "queue_wait_steps", "gen_tokens",
+})
+
+ROOFLINE_KEYS = frozenset({
+    "hw", "windows", "window_steps", "measured_tok_s", "predicted_tok_s",
+    "delta_ratio", "measured_h2d_bytes_per_token",
+    "naive_h2d_bytes_per_token", "h2d_savings_ratio", "context_len",
+})
+
+HISTOGRAM_FIELDS = frozenset({"count", "sum", "min", "max", "p50", "p95",
+                              "buckets"})
+
+
+def expected_namespaces(*, kv_layout: str = "dense", offloaded: bool = False,
+                        timing: bool = True, plane: str = "plain",
+                        roofline: bool = True) -> Dict[str, FrozenSet[str]]:
+    """The exact ``{namespace: key set}`` a ContinuousEngine snapshot
+    carries for one engine/plane/KV-layout combination — what the
+    snapshot tests and the CI validator both check against."""
+    out = {
+        "engine": ENGINE_KEYS,
+        "kv": KV_KEYS_PAGED if kv_layout == "paged" else KV_KEYS_DENSE,
+        "jit": JIT_KEYS,
+    }
+    if offloaded:
+        out["offload"] = OFFLOAD_KEYS
+    if timing:
+        out["step"] = STEP_KEYS
+        out["request"] = REQUEST_KEYS
+        out["exec"] = EXEC_KEYS_BY_PLANE[plane]
+        if roofline:
+            out["roofline"] = ROOFLINE_KEYS
+    return out

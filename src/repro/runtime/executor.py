@@ -76,6 +76,12 @@ class Executor:
         self.store = store
         self.fused = fused
         self.vectorized = vectorized
+        # optional dispatch-phase observer (repro.obs.ExecPhases);
+        # host-side timestamps around dispatches only — never a device
+        # sync.  Executors can be shared across engines (the offload
+        # engine hands its decoder to ContinuousEngine), so the LAST
+        # attached observer wins.
+        self._obs = None
         if self.packed:
             if spec is None or store is None:
                 raise ValueError("packed planes need spec= and store= "
@@ -101,6 +107,14 @@ class Executor:
             # executor instances with identical config+flags
             self._mode = (cfg, spec, fused, self.pipelined, vectorized)
             self._blk: Dict[Any, Any] = {}
+
+    # ------------------------------------------------------------------
+    def set_observer(self, obs) -> None:
+        """Attach (or detach with ``None``) the dispatch-phase observer
+        for :meth:`decode` / :meth:`decode_sampled` — an object with
+        ``begin()`` / ``mark(phase)`` whose phases match this plane's
+        ``repro.obs.schema.EXEC_KEYS_BY_PLANE`` entry."""
+        self._obs = obs
 
     # ------------------------------------------------------------------
     # state / pool construction
@@ -277,16 +291,25 @@ class Executor:
         KV writes and per-row ``pos`` advance (DESIGN.md §9): frozen
         rows are idle slots or chunked admissions mid-fill.
         """
+        obs = self._obs
+        if obs is not None:
+            obs.begin()
         if not self.packed:
             if collect_info:
                 logits, state, infos = self._plain_step(True)(
                     self.params, state, tokens, active)
+                if obs is not None:
+                    obs.mark("dispatch")
                 return logits, state, None, infos
             logits, state = self._plain_step(False)(
                 self.params, state, tokens, active)
+            if obs is not None:
+                obs.mark("dispatch")
             return logits, state, None, None
         cfg = self.cfg
         x = self._jit_embed(self.params, tokens)
+        if obs is not None:
+            obs.mark("embed")
         pos = state["pos"]
         pages = state.get("pages")
         B = int(tokens.shape[0])
@@ -303,25 +326,39 @@ class Executor:
                 if self.pipelined:
                     x, st_l, h2 = self._mixer_blk(kind)(
                         self._layer_p[l], x, st_l, pos, pages, active)
+                    if obs is not None:
+                        obs.mark("mixer")
                     x, pstate, info = self._moe_blk()(
                         self._layer_p[l], x, h2, self.store, pstate, lm,
                         active)
+                    if obs is not None:
+                        obs.mark("moe")
                     tgt = self.moe_ordinal[l] + self.spec.lookahead
                     if speculate and tgt < self.n_moe_layers:
                         pstate = self._stage_blk()(
                             self.store, pstate,
                             jnp.asarray(tgt, jnp.int32),
                             info["hidden_pre_moe"], self.routers)
+                        if obs is not None:
+                            obs.mark("stage")
                 else:
                     x, st_l, pstate, info = self._decode_blk(kind)(
                         self._layer_p[l], x, st_l, pos, self.store, pstate,
                         lm, self.routers, active, pages)
+                    if obs is not None:
+                        obs.mark("block")
                 route_ids.append(info["route"]["ids"])
             else:
                 x, st_l, _ = self._decode_blk(kind)(
                     self._layer_p[l], x, st_l, pos, pages, active)
+                if obs is not None:
+                    # non-MoE dispatch: the pipelined plane's mixer bucket,
+                    # the vectorized plane's block bucket
+                    obs.mark("mixer" if self.pipelined else "block")
             state = T.set_decode_state_layer(state, cfg, l, st_l)
         logits = self._jit_head(self.params, x)
+        if obs is not None:
+            obs.mark("head")
         if pages is not None and active is not None:
             pos = pos + jnp.where(active, 1, 0).astype(pos.dtype)
         else:
@@ -335,8 +372,14 @@ class Executor:
         step (greedy argmax on-device / last-position logits) and the
         state donated — the continuous engine's hot loop."""
         assert not self.packed, "packed decode returns logits; sample host-side"
-        return self._plain_step_sampled(collect_info, greedy)(
+        obs = self._obs
+        if obs is not None:
+            obs.begin()
+        out = self._plain_step_sampled(collect_info, greedy)(
             self.params, state, tokens, active)
+        if obs is not None:
+            obs.mark("dispatch")
+        return out
 
     # ------------------------------------------------------------------
     def prefill_chunk(self, state, tokens, pstate=None):

@@ -50,6 +50,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, parse_block
 from repro.core.offload_engine import (ExpertUsageTracker, routing_from_info)
 from repro.data.pipeline import EOS
+from repro.obs import Telemetry, jit_cache_metrics
 from repro.runtime import (Admission, ChunkTask, Executor, StepPlan,
                            TokenBudgetPolicy)
 from repro.serving.kv_manager import KVSlotManager, PagedKVManager
@@ -144,7 +145,8 @@ class ContinuousEngine:
                  seed: int = 0, offload=None,
                  kv_page: Optional[int] = None,
                  kv_pages_total: Optional[int] = None,
-                 ragged_bucket: bool = True):
+                 ragged_bucket: bool = True,
+                 telemetry: Optional[Telemetry] = None):
         """``offload``: a packed :class:`~repro.core.offload_engine.
         OffloadEngine` (``quantized=True``) switches this engine into
         **offloaded decode mode** (DESIGN.md §6): experts stay HQQ-packed
@@ -171,7 +173,15 @@ class ContinuousEngine:
         width.  ``ragged_bucket=False`` pins the horizon to the full
         table, which makes paged decoding BITWISE the dense engine
         (tests/test_paged_kv.py); bucketing keeps greedy token streams
-        identical while paying only for live pages."""
+        identical while paying only for live pages.
+
+        ``telemetry``: a :class:`repro.obs.Telemetry` turns on the
+        unified telemetry plane (DESIGN.md §10) — per-step phase timing,
+        per-request span tracing and roofline accounting.  Default is
+        ``Telemetry.off()``: only the pull-time collectors that back
+        :meth:`metrics` / :meth:`stats` exist, the decode loop carries
+        zero instrumentation, and generated tokens are bitwise identical
+        either way (tests/test_obs.py)."""
         self.offload = offload
         if offload is not None:
             if offload._decoder is None:
@@ -242,6 +252,36 @@ class ContinuousEngine:
         self.tokens = np.zeros((max_slots, 1), np.int32)
         self.step_count = 0
         self._rng = jax.random.key(seed)
+        # telemetry plane (DESIGN.md §10): collectors are registered even
+        # in the off mode (they only run at snapshot time and back the
+        # legacy stats() projection); timing/tracing/roofline attach only
+        # when an enabled Telemetry is passed in
+        self.obs = telemetry if telemetry is not None else Telemetry.off()
+        reg = self.obs.registry
+        reg.register_collector("engine", self._engine_metrics)
+        reg.register_collector("kv", self.kv.metrics)
+        reg.register_collector("jit", jit_cache_metrics)
+        if offload is not None:
+            reg.register_collector("offload", self._offload_metrics)
+        if self.obs.timing:
+            self.obs.declare_step_schema()
+            self.obs.declare_request_schema()
+            # executors can be shared (the offload engine hands over its
+            # decoder) — the last engine to attach an observer wins
+            self._exec.set_observer(self.obs.exec_observer(self._exec.plane))
+            if offload is not None:
+                q = offload.size_report is not None
+                self.obs.attach_roofline(
+                    cfg,
+                    expert_bits=offload.spec.expert_bits if q else 16,
+                    attn_bits=offload.spec.attn_bits if q else 16,
+                    expert_bytes=offload.expert_bytes,
+                    # the same tiny counts array stats() already fetches,
+                    # read once per roofline window — never per step
+                    h2d_counts_fn=lambda: tuple(
+                        int(c) for c in np.asarray(self._pstate.counts)))
+            else:
+                self.obs.attach_roofline(cfg)
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 32, on_token=None,
@@ -262,7 +302,9 @@ class ContinuousEngine:
         req = GenRequest(prompt=prompt, max_new_tokens=max_new_tokens,
                          arrival=self.step_count, on_token=on_token,
                          on_finish=on_finish, temperature=temperature)
-        return self.sched.submit(req)
+        self.sched.submit(req)
+        self.obs.req_submitted(req.rid, self.step_count)
+        return req
 
     # ------------------------------------------------------------------
     def _sample_rows(self, logits, reqs: List[GenRequest]) -> np.ndarray:
@@ -295,6 +337,7 @@ class ContinuousEngine:
                 if not self.kv.can_admit(need):
                     break
                 req = self.sched.pop_at(idx)
+                self.obs.req_admitted(req.rid, self.step_count - req.arrival)
                 slot = self.kv.allocate(req.rid, need)
                 req.slot = slot
                 # no accumulator state: chunks write the slot's pages
@@ -303,6 +346,7 @@ class ContinuousEngine:
                     state=None, req=req))
                 continue
             req = self.sched.pop_next(self.usage)
+            self.obs.req_admitted(req.rid, self.step_count - req.arrival)
             slot = self.kv.allocate(req.rid)
             req.slot = slot
             self._admissions.append(Admission(
@@ -326,6 +370,8 @@ class ContinuousEngine:
         for task in chunks:
             adm = by_rid[task.rid]
             req: GenRequest = adm.req
+            t0 = (self.obs.clock_ns()
+                  if self.obs.tracer is not None else 0)
             tokens = jnp.asarray(req.prompt[None, task.lo: task.hi])
             if self.paged:
                 # chunk writes straight into the slot's pool pages —
@@ -339,6 +385,7 @@ class ContinuousEngine:
             else:
                 logits, adm.state, _ = self._exec.prefill_chunk(
                     adm.state, tokens)
+            self.obs.req_chunk(req.rid, task.lo, task.hi, t0)
             adm.next_lo = task.hi
             if task.last:
                 first = int(self._sample_rows(logits[:, -1], [req])[0])
@@ -347,8 +394,11 @@ class ContinuousEngine:
                     self._admissions.remove(adm)
                     self.kv.release(adm.slot)
                     self.sched.evict(req, self._reason(req, first))
+                    self.obs.req_finished(req.rid, len(req.generated),
+                                          req.finish_reason)
                     finished.append(req)
                     continue
+                self.obs.req_decode_start(req.rid)
                 self.tokens[adm.slot, 0] = first
                 if self.paged:
                     # KV is already in place — the row joins the decode
@@ -409,8 +459,13 @@ class ContinuousEngine:
         """One engine step: run the step plan (prefill chunks + one
         batched decode over the planned rows).  Returns requests
         finished this step."""
+        st = self.obs.step_begin(self.step_count)
         plan = self._plan()
+        if st is not None:
+            st.mark("plan")
         finished = self._run_chunks(plan.chunks)
+        if st is not None:
+            st.mark("chunk")
         # unchunked admission keeps the legacy timing: a request admitted
         # this step decodes this step.  Budgeted (chunked) steps decode
         # exactly the planned rows so the budget accounting stays exact.
@@ -420,6 +475,7 @@ class ContinuousEngine:
             if plan.chunks:
                 self.step_count += 1
                 self.sched.check_invariants()
+            self.obs.step_end(st, n_chunks=len(plan.chunks))
             return finished
         reqs = sorted((r for r in self.sched.running
                        if r.slot in set(rows)), key=lambda r: r.slot)
@@ -460,6 +516,8 @@ class ContinuousEngine:
                 self.usage.update(ids, rows=rows)
             else:
                 nxt_dev, state = out
+        if st is not None:
+            st.mark("dispatch")
         if self.paged:
             self.kv.adopt(state)
             for r in rows:
@@ -467,24 +525,40 @@ class ContinuousEngine:
         else:
             self.kv.state = state
         if self._greedy:
+            # the step's one blocking device fetch — everything the
+            # device is still computing lands in this phase
             nxt = np.asarray(nxt_dev)
+            if st is not None:
+                st.mark("sync")
         else:
             nxt = self._sample_rows(
                 jnp.asarray(nxt_dev)[np.asarray(rows)], reqs)
             full = np.zeros((self.max_slots,), np.int32)
             full[np.asarray(rows)] = nxt
             nxt = full
+            if st is not None:
+                st.mark("sample")
         for req in reqs:
             t = int(nxt[req.slot])
             req.emit(t)
             if self._done(req, t):
                 self.kv.release(req.slot)
                 self.sched.evict(req, self._reason(req, t))
+                self.obs.req_finished(req.rid, len(req.generated),
+                                      req.finish_reason)
                 finished.append(req)
             else:
                 self.tokens[req.slot, 0] = t
         self.step_count += 1
         self.sched.check_invariants()
+        if st is not None:
+            st.mark("host")
+            # live context from host-side request records — never a
+            # device fetch (the dense manager's pos lives on device)
+            ctx = (sum(len(r.prompt) + len(r.generated) for r in reqs)
+                   / max(1, len(reqs)))
+            self.obs.step_end(st, n_decode=len(reqs),
+                              n_chunks=len(plan.chunks), context_len=ctx)
         return finished
 
     def run(self, max_steps: Optional[int] = None) -> List[GenRequest]:
@@ -499,25 +573,39 @@ class ContinuousEngine:
         return self.sched.finished
 
     # ------------------------------------------------------------------
-    def stats(self) -> Dict[str, float]:
+    # telemetry collectors (pull-time only — DESIGN.md §10)
+    def _engine_metrics(self) -> Dict[str, float]:
         toks = sum(len(r.generated) for r in self.sched.finished)
-        out = {"steps": self.step_count, "joins": self.sched.joins,
-               "evictions": self.sched.evictions,
-               "finished": len(self.sched.finished),
-               "tokens": toks,
-               "tokens_per_step": toks / max(1, self.step_count)}
-        out.update(self.kv.stats())  # KV occupancy (pages / slot lengths)
-        if self.offload is not None:
-            hits, spec_hits, demand, spec = (
-                int(c) for c in np.asarray(self._pstate.counts))
-            bytes_h2d = (demand + spec) * self.offload.expert_bytes
-            # traffic counters cover every decode step, so normalize by
-            # ALL emitted tokens — still-running requests included
-            emitted = toks + sum(len(r.generated)
-                                 for r in self.sched.running)
-            out.update(offload_hits=hits, offload_spec_hits=spec_hits,
-                       offload_demand_loads=demand,
-                       offload_spec_loads=spec,
-                       offload_bytes_h2d=bytes_h2d,
-                       offload_bytes_per_token=bytes_h2d / max(1, emitted))
+        out = self.sched.metrics()
+        out.update(steps=self.step_count, tokens=toks,
+                   tokens_per_step=toks / max(1, self.step_count),
+                   # every emitted token, still-running requests included
+                   decode_tokens=toks + sum(len(r.generated)
+                                            for r in self.sched.running))
         return out
+
+    def _offload_metrics(self) -> Dict[str, float]:
+        hits, spec_hits, demand, spec = (
+            int(c) for c in np.asarray(self._pstate.counts))
+        bytes_h2d = (demand + spec) * self.offload.expert_bytes
+        # traffic counters cover every decode step, so normalize by
+        # ALL emitted tokens — still-running requests included
+        emitted = sum(len(r.generated)
+                      for r in self.sched.finished + self.sched.running)
+        return {"hits": hits, "spec_hits": spec_hits,
+                "demand_loads": demand, "spec_loads": spec,
+                "bytes_h2d": bytes_h2d,
+                "bytes_per_token": bytes_h2d / max(1, emitted)}
+
+    def metrics(self) -> Dict[str, Dict[str, object]]:
+        """Namespaced telemetry snapshot ``{namespace: {key: value}}``
+        (``repro.obs.schema``) — collectors pull fresh state at call
+        time; timing/roofline namespaces appear when enabled."""
+        return self.obs.snapshot()
+
+    def stats(self) -> Dict[str, float]:
+        """Legacy flat view — a pure projection of :meth:`metrics`
+        through ``repro.obs.flatten_legacy`` (``engine.*`` flattens
+        bare, ``kv.*`` → ``kv_*``, ``offload.*`` → ``offload_*``), so
+        the two surfaces can never disagree on a value."""
+        return self.obs.legacy_flat()

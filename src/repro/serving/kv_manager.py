@@ -95,22 +95,28 @@ class KVSlotManager:
         self._owner[slot] = None
         heapq.heappush(self._free, slot)
 
-    def stats(self) -> Dict[str, object]:
-        """KV occupancy counters (surfaced by ``ContinuousEngine.stats``):
-        the dense ring reserves ``slot_len`` positions per slot whether
-        used or not — ``kv_positions_reserved`` vs ``kv_positions_live``
-        is exactly the waste the paged layout removes (DESIGN.md §9)."""
+    def metrics(self) -> Dict[str, object]:
+        """KV occupancy counters — the telemetry ``kv`` namespace
+        (``repro.obs.schema.KV_KEYS_DENSE``): the dense ring reserves
+        ``slot_len`` positions per slot whether used or not —
+        ``positions_reserved`` vs ``positions_live`` is exactly the waste
+        the paged layout removes (DESIGN.md §9).  Pull-time only: the
+        ``pos`` fetch happens per snapshot, never per step."""
         pos = np.asarray(self.state["pos"])
         live = [int(pos[s]) for s in range(self.n_slots)
                 if self._owner[s] is not None]
-        return {"kv_layout": "dense",
-                "kv_slots_in_use": self.n_slots - self.n_free,
-                "kv_slots_free": self.n_free,
-                "kv_positions_reserved":
+        return {"layout": "dense",
+                "slots_in_use": self.n_slots - self.n_free,
+                "slots_free": self.n_free,
+                "positions_reserved":
                     (self.n_slots - self.n_free) * self.slot_len,
-                "kv_peak_positions_reserved": self.peak_slots * self.slot_len,
-                "kv_positions_live": sum(live),
-                "kv_slot_lengths": live}
+                "peak_positions_reserved": self.peak_slots * self.slot_len,
+                "positions_live": sum(live),
+                "slot_lengths": live}
+
+    def stats(self) -> Dict[str, object]:
+        """Legacy flat projection of :meth:`metrics` (``kv_*`` keys)."""
+        return {f"kv_{k}": v for k, v in self.metrics().items()}
 
     # ------------------------------------------------------------------
     def new_row_state(self):
@@ -423,20 +429,26 @@ class PagedKVManager:
         return T.cached_jit(("paged_scrub", cfg, self.max_pages), make)
 
     # ------------------------------------------------------------------
-    def stats(self) -> Dict[str, object]:
+    def metrics(self) -> Dict[str, object]:
+        """Telemetry ``kv`` namespace (``schema.KV_KEYS_PAGED``) — slot
+        occupancy from the host mirrors plus the page pool's counters."""
         live = [self._len[s] for s in range(self.n_slots)
                 if self._owner[s] is not None]
-        out = {"kv_layout": "paged",
-               "kv_slots_in_use": self.n_slots - self.n_free,
-               "kv_slots_free": self.n_free,
+        out = {"layout": "paged",
+               "slots_in_use": self.n_slots - self.n_free,
+               "slots_free": self.n_free,
                # committed = allocated + reserved-unallocated, so this is
                # comparable with the dense manager's slot-capacity peak
-               "kv_peak_positions_reserved":
+               "peak_positions_reserved":
                    self.pool.peak_committed * self.page_size,
-               "kv_positions_live": sum(live),
-               "kv_slot_lengths": live,
-               "kv_slot_pages": {s: list(self.pool.owned.get(s, []))
-                                 for s in range(self.n_slots)
-                                 if self._owner[s] is not None}}
-        out.update({f"kv_{k}": v for k, v in self.pool.stats().items()})
+               "positions_live": sum(live),
+               "slot_lengths": live,
+               "slot_pages": {s: list(self.pool.owned.get(s, []))
+                              for s in range(self.n_slots)
+                              if self._owner[s] is not None}}
+        out.update(self.pool.stats())
         return out
+
+    def stats(self) -> Dict[str, object]:
+        """Legacy flat projection of :meth:`metrics` (``kv_*`` keys)."""
+        return {f"kv_{k}": v for k, v in self.metrics().items()}

@@ -164,6 +164,14 @@ class Scheduler:
         self.finished.append(req)
         self.evictions += 1
 
+    def metrics(self) -> dict:
+        """Queue/lifecycle counts for the telemetry ``engine`` namespace
+        (the engine merges in its step/token counters)."""
+        return {"joins": self.joins, "evictions": self.evictions,
+                "finished": len(self.finished),
+                "waiting": len(self.waiting),
+                "running": len(self.running)}
+
     def check_invariants(self) -> None:
         assert len(self.running) <= self.max_slots
         slots = [r.slot for r in self.running]

@@ -106,7 +106,7 @@ def train(params, cfg: ModelConfig, opt_cfg: O.OptimizerConfig,
     eval_fn = jax.jit(make_eval_step(cfg))
     opt_state = O.init_opt_state(params)
     history = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     it = iter(batches)
     for step in range(tcfg.steps):
         batch = {k: jnp.asarray(v) for k, v in next(it).items()}
@@ -114,7 +114,7 @@ def train(params, cfg: ModelConfig, opt_cfg: O.OptimizerConfig,
         if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = step
-            m["wall_s"] = time.time() - t0
+            m["wall_s"] = time.perf_counter() - t0
             history.append(m)
             log(f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
                 f"lr {m['lr']:.2e} gnorm {m['grad_norm']:.2f} "

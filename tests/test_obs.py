@@ -1,0 +1,254 @@
+"""Telemetry plane (DESIGN.md §10): registry/histogram/tracer unit
+behavior, legacy ``stats()`` projection, snapshot schema exactness for
+every engine/plane/KV-layout combination, and the hot-path contract —
+tokens are bitwise identical with telemetry fully on (timing + tracing)
+or fully off, on every decode plane."""
+import importlib.util
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs.base import OffloadSpec
+from repro.core.offload_engine import OffloadEngine
+from repro.obs import Telemetry, flatten_legacy
+from repro.obs.registry import Histogram, MetricsRegistry
+from repro.obs.schema import (EXEC_KEYS_BY_PLANE, HISTOGRAM_FIELDS,
+                              JIT_KEYS, OFFLOAD_KEYS, REQUEST_KEYS,
+                              ROOFLINE_KEYS, expected_namespaces)
+from repro.obs.tracing import PID_REQUESTS, Tracer
+from repro.serving.engine import ContinuousEngine
+from repro.serving.sampler import SamplerConfig
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _prompts(cfg, n, seed=0, lo=4, hi=14):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, int(rng.integers(lo, hi)))
+            .astype(np.int32) for _ in range(n)]
+
+
+def _offload_spec():
+    return OffloadSpec(cache_size=4, num_speculative=2, expert_bits=3,
+                       attn_bits=4)
+
+
+def _run_serving(cfg, params, telemetry, *, kv_page=None, offload=None,
+                 sampler=None, seed=0):
+    eng = ContinuousEngine(params, cfg, max_slots=2, slot_len=48,
+                           eos_id=None, kv_page=kv_page, offload=offload,
+                           sampler=sampler, seed=seed, telemetry=telemetry)
+    reqs = [eng.submit(p, m) for p, m in
+            zip(_prompts(cfg, 4, seed=5), [4, 7, 3, 6])]
+    eng.run(max_steps=300)
+    assert all(r.state == "finished" for r in reqs)
+    return eng, [r.generated for r in reqs]
+
+
+# ----------------------------------------------------------------------
+# registry / histogram / tracer / flatten units
+def test_histogram_log_buckets_and_quantiles():
+    h = Histogram()
+    for v in (1.0, 2.0, 4.0, 4.5, 100.0):
+        h.observe(v)
+    s = h.snapshot()
+    assert s["count"] == 5 and s["sum"] == pytest.approx(111.5)
+    assert s["min"] == 1.0 and s["max"] == 100.0
+    # each bucket spans one power of two -> estimates within the sample
+    # range and monotone across quantiles
+    assert s["min"] <= s["p50"] <= s["p95"] <= s["max"]
+    # 4.0 and 4.5 land in bucket 3 ([4, 8)); 1.0 in bucket 1; 2.0 in 2
+    assert s["buckets"] == {"1": 1, "2": 1, "3": 2, "7": 1}
+
+
+def test_histogram_empty_snapshot_is_total():
+    s = Histogram().snapshot()
+    assert set(s) == HISTOGRAM_FIELDS
+    assert s["count"] == 0 and s["p95"] == 0.0
+
+
+def test_registry_kind_conflict_rejected():
+    r = MetricsRegistry()
+    r.counter("ns", "x")
+    r.counter("ns", "x")  # re-declare same kind is idempotent
+    with pytest.raises(ValueError):
+        r.gauge("ns", "x")
+
+
+def test_registry_collector_overlap_asserts():
+    r = MetricsRegistry()
+    r.counter("engine", "steps")
+    r.register_collector("engine", lambda: {"steps": 3})
+    with pytest.raises(AssertionError):
+        r.snapshot()
+
+
+def test_flatten_legacy_prefixes_and_collisions():
+    flat = flatten_legacy({"engine": {"steps": 3}, "kv": {"slots_free": 1},
+                           "offload": {"hits": 2}, "step": {"timed": 4}})
+    assert flat == {"steps": 3, "kv_slots_free": 1, "offload_hits": 2,
+                    "step_timed": 4}
+    with pytest.raises(AssertionError):
+        flatten_legacy({"kv": {"x": 1}, "engine": {"kv_x": 2}})
+
+
+def test_tracer_chrome_format_and_metadata_dedup():
+    clock = iter(range(0, 10_000_000, 1_000_000))
+    tr = Tracer(clock_ns=lambda: next(clock))
+    assert tr.request_track(7) == 7
+    tr.request_track(7)  # second call must not duplicate the thread meta
+    tr.complete("decode", PID_REQUESTS, 7, 10.0, 25.0, args={"tokens": 3})
+    tr.instant("finish", PID_REQUESTS, 7)
+    doc = tr.to_chrome()
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    names = [(e["ph"], e["name"]) for e in doc["traceEvents"]]
+    assert names.count(("M", "thread_name")) == 3  # steps, exec, req 7
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert spans == [{"ph": "X", "name": "decode", "pid": PID_REQUESTS,
+                      "tid": 7, "ts": 10.0, "dur": 25.0,
+                      "args": {"tokens": 3}}]
+
+
+# ----------------------------------------------------------------------
+# snapshot schema exactness: engines emit EXACTLY the documented key set
+def _assert_schema(snapshot, **combo):
+    want = expected_namespaces(**combo)
+    assert set(snapshot) == set(want), \
+        f"namespaces {sorted(snapshot)} != {sorted(want)}"
+    for ns in want:
+        assert set(snapshot[ns]) == set(want[ns]), \
+            f"{ns}: {sorted(set(snapshot[ns]) ^ set(want[ns]))} drifted"
+
+
+@pytest.mark.parametrize("kv_page", [None, 16], ids=["dense", "paged"])
+def test_continuous_snapshot_schema(tiny_moe_cfg, tiny_moe_params, kv_page):
+    eng, _ = _run_serving(tiny_moe_cfg, tiny_moe_params,
+                          Telemetry(timing=True, trace=True),
+                          kv_page=kv_page)
+    _assert_schema(eng.metrics(),
+                   kv_layout="paged" if kv_page else "dense",
+                   timing=True, plane="plain", roofline=True)
+    assert set(eng.metrics()["step"]["wall_ms"]) == HISTOGRAM_FIELDS
+
+
+def test_continuous_snapshot_schema_telemetry_off(tiny_moe_cfg,
+                                                  tiny_moe_params):
+    eng, _ = _run_serving(tiny_moe_cfg, tiny_moe_params, None)
+    _assert_schema(eng.metrics(), kv_layout="dense", timing=False)
+    # the legacy flat stats() shim still carries its historical keys
+    s = eng.stats()
+    for key in ("steps", "tokens", "tokens_per_step", "finished",
+                "kv_slots_in_use", "kv_slots_free", "jit_hits"):
+        assert key in s, f"legacy stats() lost {key!r}"
+
+
+def test_offloaded_continuous_snapshot_schema(tiny_moe_cfg,
+                                              tiny_moe_params):
+    off = OffloadEngine(tiny_moe_params, tiny_moe_cfg, _offload_spec(),
+                        quantized=True)
+    eng, _ = _run_serving(tiny_moe_cfg, tiny_moe_params,
+                          Telemetry(timing=True, trace=True), offload=off)
+    snap = eng.metrics()
+    _assert_schema(snap, kv_layout="dense", offloaded=True, timing=True,
+                   plane="packed_pipelined", roofline=True)
+    # the offload namespace carries real traffic and the roofline saw it
+    assert snap["offload"]["demand_loads"] + snap["offload"]["spec_loads"] > 0
+    assert snap["roofline"]["windows"] >= 1
+    assert snap["roofline"]["measured_tok_s"] > 0
+    assert snap["roofline"]["h2d_savings_ratio"] > 1.0, \
+        "expert streaming should beat the naive all-experts-every-layer bound"
+    assert "offload_hits" in eng.stats()
+
+
+def test_offload_engine_snapshot_schema(tiny_moe_cfg, tiny_moe_params):
+    prompt = _prompts(tiny_moe_cfg, 1, seed=2)[0][None]
+    off = OffloadEngine(tiny_moe_params, tiny_moe_cfg, _offload_spec(),
+                        quantized=True)  # default engine: telemetry off
+    off.generate(prompt, 4)
+    assert set(off.metrics()) == {"offload", "jit"}
+    assert set(off.metrics()["offload"]) == OFFLOAD_KEYS
+    telem = Telemetry(timing=True, trace=True)
+    on = OffloadEngine(tiny_moe_params, tiny_moe_cfg, _offload_spec(),
+                       quantized=True, telemetry=telem)
+    on.generate(prompt, 4)
+    snap = on.metrics()
+    assert set(snap) == {"offload", "jit", "request", "exec", "roofline"}
+    assert set(snap["request"]) == REQUEST_KEYS
+    assert set(snap["exec"]) == EXEC_KEYS_BY_PLANE["packed_pipelined"]
+    assert set(snap["roofline"]) == ROOFLINE_KEYS
+    assert set(snap["jit"]) == JIT_KEYS
+    assert snap["request"]["finished"] == 1
+
+
+# ----------------------------------------------------------------------
+# hot-path contract: bitwise-identical tokens with telemetry on or off
+@pytest.mark.parametrize("mode", ["plain_dense", "plain_paged",
+                                  "categorical"])
+def test_parity_telemetry_on_off(tiny_moe_cfg, tiny_moe_params, mode):
+    kv_page = 16 if mode == "plain_paged" else None
+    sampler = (SamplerConfig(kind="categorical")
+               if mode == "categorical" else None)
+    _, off_toks = _run_serving(tiny_moe_cfg, tiny_moe_params, None,
+                               kv_page=kv_page, sampler=sampler, seed=11)
+    _, on_toks = _run_serving(tiny_moe_cfg, tiny_moe_params,
+                              Telemetry(timing=True, trace=True),
+                              kv_page=kv_page, sampler=sampler, seed=11)
+    assert on_toks == off_toks, f"{mode}: telemetry perturbed the tokens"
+
+
+def test_parity_telemetry_on_off_offloaded(tiny_moe_cfg, tiny_moe_params):
+    off_eng = OffloadEngine(tiny_moe_params, tiny_moe_cfg, _offload_spec(),
+                            quantized=True)
+    _, base = _run_serving(tiny_moe_cfg, tiny_moe_params, None,
+                           offload=off_eng, seed=11)
+    _, on = _run_serving(tiny_moe_cfg, tiny_moe_params,
+                         Telemetry(timing=True, trace=True),
+                         offload=off_eng, seed=11)
+    assert on == base, "telemetry perturbed the offloaded packed plane"
+
+
+def test_parity_offload_engine_generate(tiny_moe_cfg, tiny_moe_params):
+    prompt = _prompts(tiny_moe_cfg, 1, seed=9)[0][None]
+    base = OffloadEngine(tiny_moe_params, tiny_moe_cfg, _offload_spec(),
+                         quantized=True)
+    out0, stats0 = base.generate(prompt, 6)
+    on = OffloadEngine(tiny_moe_params, tiny_moe_cfg, _offload_spec(),
+                       quantized=True,
+                       telemetry=Telemetry(timing=True, trace=True))
+    out1, stats1 = on.generate(prompt, 6)
+    assert (out0 == out1).all()
+    assert (stats0.hits, stats0.demand_loads) == \
+        (stats1.hits, stats1.demand_loads)
+
+
+# ----------------------------------------------------------------------
+# serialized artifacts validate against the CI checker itself
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_metrics_schema", ROOT / "tools" / "check_metrics_schema.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_metrics_and_trace_files_pass_ci_checker(tiny_moe_cfg,
+                                                 tiny_moe_params, tmp_path):
+    eng, _ = _run_serving(tiny_moe_cfg, tiny_moe_params,
+                          Telemetry(timing=True, trace=True))
+    mpath, tpath = tmp_path / "metrics.json", tmp_path / "trace.json"
+    eng.obs.write_metrics(mpath, {
+        "engine": "continuous", "arch": tiny_moe_cfg.name,
+        "kv_layout": "dense", "offloaded": False, "timing": True,
+        "plane": "plain", "roofline": True})
+    eng.obs.write_trace(tpath)
+    checker = _load_checker()
+    assert checker.check_metrics(mpath) == []
+    assert checker.check_trace(tpath) == []
+    # and the checker actually rejects drift
+    doc = json.loads(mpath.read_text())
+    del doc["metrics"]["engine"]["steps"]
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(doc))
+    assert checker.check_metrics(bad), "checker passed a broken snapshot"
