@@ -30,6 +30,7 @@ _MODULES = {
     "qwen1.5-4b": "repro.configs.qwen1_5_4b",
     "mixtral-offload": "repro.configs.mixtral_offload",
     "tiny-moe": "repro.configs.tiny_moe",
+    "tiny-draft": "repro.configs.tiny_draft",
 }
 
 ASSIGNED_ARCHS: List[str] = [

@@ -1,0 +1,210 @@
+"""Draft models + acceptance rule for token-level draft-and-verify
+decoding (DESIGN.md §11).
+
+The paper amortizes *expert* transfer with speculative expert loading
+(§3.2); token-level speculation amortizes it further — one packed verify
+chunk (C = k+1 through ``runtime.Executor.decode``) serves several
+accepted tokens, so each h2d expert fetch pays for more than one emitted
+token.  The pieces here are engine-agnostic:
+
+* :func:`accept_length` / :func:`verify_round` — the pure acceptance
+  rule.  The target's greedy argmax at chunk position ``j`` is computed
+  from exactly the canonical prefix whenever every earlier draft token
+  matched, so emitting ``target[:a+1]`` (longest matching prefix plus
+  the target's own next token) is bitwise identical to non-speculative
+  greedy decode *for any draft whatsoever* — the draft only ever
+  controls speed, never output.
+* :class:`DenseDraft` — a real dense draft model (a ``configs/`` dense
+  config sharing the target's vocab, e.g. ``tiny-draft``) run through a
+  plain-plane Executor with its own KV state and rollback bookkeeping.
+* :class:`ReplayDraft` — replays a precomputed reference continuation
+  with a controllable miss rate.  This is the measurement instrument:
+  it pins the acceptance rate, which is what lets tests exercise every
+  partial-rollback path deterministically and lets the benchmark report
+  machinery speedup *at a stated acceptance rate* instead of at
+  whatever an untrained draft happens to produce.
+
+Draft-side bookkeeping contract (both drafts): ``consumed`` counts the
+canonical tokens the draft has folded into its state.  ``propose(tail,
+k)`` first consumes ``tail`` (the canonical tokens emitted since the
+draft last saw the stream — length 1, or 2 after a fully-accepted
+round), then proposes ``k`` greedy tokens, feeding itself the first
+``k−1`` of them.  ``accept(a)`` keeps ``min(a, k−1)`` of those fed
+draft tokens as canonical (they matched the target) and rolls the
+position back over the rest — for the dense draft the rollback is a pos
+reset only: ring entries beyond ``pos`` are dead by the attention
+validity mask and are overwritten when the real token lands at the same
+position.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+# ----------------------------------------------------------------------
+# the acceptance rule (pure; property-tested in tests/test_spec_decode)
+def accept_length(draft_tokens: Sequence[int],
+                  target_tokens: Sequence[int]) -> int:
+    """Longest prefix of ``draft_tokens`` matching the target's greedy
+    choices.  ``target_tokens[j]`` is the target argmax at chunk
+    position j (i.e. its prediction for the token *after* draft token
+    j); draft token j is accepted iff every draft token before it
+    matched and ``draft_tokens[j] == target_tokens[j]``."""
+    a = 0
+    for d, t in zip(draft_tokens, target_tokens):
+        if int(d) != int(t):
+            break
+        a += 1
+    return a
+
+
+def verify_round(draft_tokens: Sequence[int],
+                 target_tokens: Sequence[int]):
+    """One round's emission: ``target_tokens`` has k+1 entries (the
+    argmax rows of the C = k+1 verify chunk), ``draft_tokens`` has k.
+    Returns ``(emitted, a)`` — the accepted prefix plus the target's own
+    next token (``a+1 ≤ k+1`` tokens), and the acceptance length ``a``
+    the KV/draft rollback uses."""
+    a = accept_length(draft_tokens, target_tokens)
+    return [int(t) for t in target_tokens[: a + 1]], a
+
+
+# ----------------------------------------------------------------------
+class DenseDraft:
+    """A dense draft model behind the standard draft contract (module
+    docstring): plain-plane Executor, own KV ring, pos-reset rollback."""
+
+    kind = "dense"
+
+    def __init__(self, params, cfg: ModelConfig):
+        from repro.runtime.executor import Executor
+        if not cfg.attention_only_stack:
+            raise ValueError(f"draft {cfg.name!r} must be a causal "
+                             f"attention stack (rollback = pos reset)")
+        if cfg.moe is not None:
+            raise ValueError(f"draft {cfg.name!r} must be dense — an MoE "
+                             f"draft would compete for the h2d bus")
+        self.cfg = cfg
+        self._exec = Executor(params, cfg)
+        self._state = None
+        self._consumed = 0
+        self._n_fed = 0
+
+    @property
+    def consumed(self) -> int:
+        return self._consumed
+
+    def start(self, prompt, max_len: int) -> None:
+        """Prefill the draft on the prompt (1, S); the draft's KV ring is
+        sized ``max_len`` (callers pass target length + k headroom so
+        rejected draft feeds never wrap)."""
+        prompt = jnp.asarray(prompt)
+        assert prompt.ndim == 2 and prompt.shape[0] == 1
+        _, self._state, _ = self._exec.prefill(prompt, max_len)
+        self._consumed = int(prompt.shape[1])
+        self._n_fed = 0
+
+    def _feed(self, tok: int):
+        logits, self._state, _, _ = self._exec.decode(
+            self._state, jnp.asarray([[tok]], jnp.int32))
+        return int(jnp.argmax(logits[0, -1]))
+
+    def propose(self, tail: Sequence[int], k: int) -> np.ndarray:
+        """Consume canonical ``tail`` (length 1 or 2), then propose k
+        greedy draft tokens d_1..d_k (feeding d_1..d_{k−1})."""
+        assert len(tail) >= 1, "tail must contain the last emitted token"
+        # rollback: reposition over any rejected draft feeds — their ring
+        # entries are masked out (kpos <= qpos) and will be overwritten
+        st = self._state
+        self._state = dict(st, pos=jnp.full_like(st["pos"], self._consumed))
+        for t in tail:
+            d = self._feed(int(t))
+        self._consumed += len(tail)
+        out = [d]
+        self._n_fed = 0
+        for _ in range(k - 1):
+            d = self._feed(d)
+            self._n_fed += 1
+            out.append(d)
+        return np.asarray(out, np.int64)
+
+    def accept(self, a: int) -> None:
+        """Round outcome: the first ``a`` proposed tokens matched the
+        target and are now canonical; of those the draft fed itself
+        ``min(a, k−1)`` — keep them, roll position back over the rest."""
+        self._consumed += min(int(a), self._n_fed)
+        self._n_fed = 0
+
+
+# ----------------------------------------------------------------------
+class ReplayDraft:
+    """Replays a reference continuation as the draft (module docstring).
+
+    ``reference`` is the full canonical stream (prompt + greedy
+    continuation of the *target*), so proposals are exactly what the
+    target will emit — acceptance 1.0 — except every ``miss_every``-th
+    proposal is deliberately corrupted to force a rejection
+    (``miss_every=0`` never misses).  Mirrors the dense draft's
+    ``consumed`` arithmetic exactly so the engines cannot tell them
+    apart."""
+
+    kind = "replay"
+
+    def __init__(self, reference, *, miss_every: int = 0,
+                 vocab_size: int = 512):
+        self._ref = np.asarray(reference).reshape(-1).astype(np.int64)
+        self.miss_every = int(miss_every)
+        self.vocab_size = int(vocab_size)
+        self._consumed = 0
+        self._n_fed = 0
+        self._n_proposed = 0
+
+    @property
+    def consumed(self) -> int:
+        return self._consumed
+
+    def start(self, prompt, max_len: int) -> None:
+        prompt = np.asarray(prompt).reshape(-1)
+        assert prompt.size <= self._ref.size and \
+            np.array_equal(prompt, self._ref[: prompt.size]), \
+            "replay reference must start with the prompt"
+        self._consumed = int(prompt.size)
+        self._n_fed = 0
+        self._n_proposed = 0
+
+    def propose(self, tail: Sequence[int], k: int) -> np.ndarray:
+        self._consumed += len(tail)
+        out: List[int] = []
+        for j in range(k):
+            idx = self._consumed + j
+            t = int(self._ref[idx]) if idx < self._ref.size else 0
+            self._n_proposed += 1
+            if self.miss_every and self._n_proposed % self.miss_every == 0:
+                t = (t + 1) % self.vocab_size
+            out.append(t)
+        self._n_fed = k - 1
+        return np.asarray(out, np.int64)
+
+    def accept(self, a: int) -> None:
+        self._consumed += min(int(a), self._n_fed)
+        self._n_fed = 0
+
+
+def make_draft(name: Optional[str], seed: int = 0):
+    """Build a :class:`DenseDraft` from a registered config name (the
+    ``--draft-config`` path).  Random-init weights, like every in-repo
+    engine — output parity never depends on draft quality."""
+    if name is None:
+        return None
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.transformer import init_model
+    cfg = get_config(name)
+    params = init_model(jax.random.PRNGKey(seed), cfg)
+    return DenseDraft(params, cfg)

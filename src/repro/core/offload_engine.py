@@ -44,7 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, OffloadSpec
+from repro.configs.base import ModelConfig, OffloadSpec, parse_block
 from repro.core import cost_model, expert_pool as EP, speculative
 from repro.core.lru_cache import PyLRU
 from repro.core.trace import moe_positions, stacked_routers
@@ -266,7 +266,7 @@ class OffloadEngine:
                  spec: Optional[OffloadSpec] = None, quantized: bool = False,
                  *, packed: Optional[bool] = None, fused: bool = True,
                  pipelined: bool = True, vectorized: bool = True,
-                 telemetry=None):
+                 telemetry=None, draft=None, num_draft_tokens: int = 0):
         assert cfg.moe is not None, "offloading targets MoE architectures"
         self.cfg = cfg
         self.spec = spec or cfg.offload or OffloadSpec()
@@ -316,6 +316,13 @@ class OffloadEngine:
         self.obs.registry.register_collector("offload", self._offload_metrics)
         self.obs.registry.register_collector("jit", jit_cache_metrics)
         self._gen_count = 0
+        # token-level draft-and-verify (DESIGN.md §11): engine-level
+        # defaults; generate(draft=, num_draft_tokens=) overrides
+        self.draft = draft
+        self.num_draft_tokens = int(num_draft_tokens or 0)
+        self._spec_metrics = None
+        if self.draft is not None and self.num_draft_tokens >= 1:
+            self._ensure_spec_metrics()
         if self.obs.timing:
             self.obs.declare_request_schema()
             self._exec.set_observer(self.obs.exec_observer(self._exec.plane))
@@ -324,6 +331,13 @@ class OffloadEngine:
                 expert_bits=self.spec.expert_bits if quantized else 16,
                 attn_bits=self.spec.attn_bits if quantized else 16,
                 expert_bytes=self.expert_bytes)
+
+    # ------------------------------------------------------------------
+    def _ensure_spec_metrics(self):
+        if self._spec_metrics is None:
+            from repro.obs import SpecMetrics
+            self._spec_metrics = SpecMetrics(self.obs.registry)
+        return self._spec_metrics
 
     # ------------------------------------------------------------------
     def _offload_metrics(self):
@@ -362,7 +376,8 @@ class OffloadEngine:
     def generate(self, prompt: np.ndarray, max_new_tokens: int,
                  greedy: bool = True, rng=None,
                  sampler: Optional[SamplerConfig] = None, *,
-                 prefill_chunk: Optional[int] = None
+                 prefill_chunk: Optional[int] = None, draft=None,
+                 num_draft_tokens: Optional[int] = None
                  ) -> Tuple[np.ndarray, OffloadStats]:
         """prompt: (1, S) int32.  Returns (generated (1, n), stats).
 
@@ -374,11 +389,26 @@ class OffloadEngine:
         may be omitted, in which case a fixed seeded key makes sampled
         runs reproducible.  ``prefill_chunk`` chunks the prompt's prefill
         (bitwise-identical to whole-prompt prefill on every plane —
-        DESIGN.md §8)."""
+        DESIGN.md §8).
+
+        ``draft``/``num_draft_tokens`` (defaulting to the engine-level
+        settings; explicit ``num_draft_tokens=0`` disables) switch greedy
+        decode to draft-and-verify speculation (DESIGN.md §11) — bitwise
+        identical output, several tokens per verify chunk."""
         sampler = sampler or SamplerConfig(
             kind="greedy" if greedy else "categorical")
         if sampler.kind != "greedy" and rng is None:
             rng = jax.random.key(0)  # seeded default, not a crash in split
+        draft = self.draft if draft is None else draft
+        k = self.num_draft_tokens if num_draft_tokens is None \
+            else int(num_draft_tokens)
+        if draft is not None and k >= 1:
+            if sampler.kind != "greedy":
+                raise ValueError("draft-and-verify speculation is greedy "
+                                 "decoding only (DESIGN.md §11)")
+            return self._generate_speculative(
+                prompt, max_new_tokens, draft, k,
+                prefill_chunk=prefill_chunk)
         if self._decoder is not None:
             return self._generate_packed(prompt, max_new_tokens,
                                          sampler=sampler, rng=rng,
@@ -477,22 +507,140 @@ class OffloadEngine:
         return np.asarray(out)[None], stats
 
     # ------------------------------------------------------------------
+    def _generate_speculative(self, prompt: np.ndarray, max_new_tokens: int,
+                              draft, k: int, *,
+                              prefill_chunk: Optional[int] = None
+                              ) -> Tuple[np.ndarray, OffloadStats]:
+        """Draft-and-verify greedy decode (DESIGN.md §11).
+
+        Per round the draft proposes ``k_eff = min(k, remaining−1)``
+        tokens; the target verifies them in ONE ``C = k_eff+1`` chunk
+        through :meth:`Executor.decode` (one pool acquire per MoE layer
+        per chunk), accepts the longest matching prefix plus its own
+        next token, then rolls back: the target KV rollback is a pos
+        reset only — ring/page entries past ``pos`` are dead under the
+        attention validity mask and get overwritten when real tokens
+        land at the same positions.  The invariant ``pos = S + n − 1``
+        (n tokens emitted) holds at every round boundary, which is what
+        makes the output bitwise identical to non-speculative greedy:
+        each chunk position's argmax conditions on exactly the canonical
+        prefix as long as every earlier draft token matched."""
+        from repro.core.draft import verify_round
+        # rollback is a pos reset, which only works while the KV ring has
+        # never wrapped: a wrapped SWA ring would have rejected verify-
+        # chunk writes overwrite the live entry `window` positions back
+        win = self.cfg.sliding_window
+        if (win and any(parse_block(b)[0] == "swa"
+                        for b in self.cfg.block_pattern)
+                and int(prompt.shape[1]) + max_new_tokens > win):
+            raise ValueError(
+                f"speculative decoding needs the request inside the SWA "
+                f"window ({int(prompt.shape[1])} + {max_new_tokens} > "
+                f"window={win}): a wrapped ring cannot roll back rejected "
+                f"verify chunks")
+        packed = self._decoder is not None
+        dec = self._exec
+        pstate = dec.init_pool_state() if packed else None
+        caches = None if packed else [
+            PyLRU(self.spec.cache_size, self.spec.num_speculative)
+            for _ in range(self.n_moe_layers)]
+        stats = OffloadStats(expert_bytes=self.expert_bytes)
+        spec_m = self._ensure_spec_metrics()
+        obs = self.obs
+        rid = self._gen_count
+        self._gen_count += 1
+        obs.req_submitted(rid, rid)
+        obs.req_admitted(rid, 0)
+        t_pre = obs.clock_ns() if obs.tracer is not None else 0
+        S = int(prompt.shape[1])
+        max_len = S + max_new_tokens
+        pre_logits, state, _ = dec.prefill(jnp.asarray(prompt), max_len,
+                                           chunk=prefill_chunk)
+        obs.req_chunk(rid, 0, S, t_pre)
+        out = [int(jnp.argmax(pre_logits[0, -1]))]
+        # the draft's KV ring needs k extra positions of headroom: after
+        # a rejection it has fed itself up to k−1 tokens past the stream
+        draft.start(np.asarray(prompt), max_len + k)
+        prompt_list = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        obs.req_decode_start(rid)
+        t0 = time.perf_counter() if obs.timing else 0.0
+
+        def _one_step(tok):
+            nonlocal state, pstate
+            if packed:
+                logits, state, pstate, route_ids = dec.decode(
+                    state, tok, pstate)
+                self.usage.update([np.asarray(i) for i in route_ids])
+            else:
+                logits, state, _, (info_stack, _) = dec.decode(
+                    state, tok, collect_info=True)
+                self._account(info_stack, caches, stats)
+            return logits
+
+        while len(out) < max_new_tokens:
+            k_eff = min(k, max_new_tokens - len(out) - 1)
+            if k_eff < 1:
+                # last token: a plain C=1 step
+                logits = _one_step(jnp.asarray([[out[-1]]], jnp.int32))
+                stats.n_tokens += 1
+                out.append(int(jnp.argmax(logits[0, -1])))
+                continue
+            canon = prompt_list + out
+            d = draft.propose(canon[draft.consumed:], k_eff)
+            chunk = np.concatenate(
+                [[out[-1]], np.asarray(d)]).astype(np.int32)[None]
+            logits = _one_step(jnp.asarray(chunk))
+            tgt = np.asarray(jnp.argmax(logits[0], -1))  # (k_eff+1,)
+            emitted, a = verify_round(d, tgt)
+            out.extend(emitted)
+            stats.n_tokens += len(emitted)
+            # target KV rollback: pos reset to the canonical frontier
+            state = dict(state, pos=jnp.full_like(state["pos"],
+                                                  S + len(out) - 1))
+            draft.accept(a)
+            spec_m.round(k_eff, a)
+
+        decode_s = time.perf_counter() - t0 if obs.timing else 0.0
+        if packed:
+            counts = np.asarray(pstate.counts)
+            stats.hits = int(counts[0])
+            stats.spec_hits = int(counts[1])
+            stats.demand_loads = int(counts[2])
+            stats.spec_loads = int(counts[3])
+            self._last_pool_state = pstate
+        else:
+            for c in caches:
+                stats.hits += c.hits
+                stats.spec_hits += c.spec_hits
+                stats.demand_loads += c.demand
+                stats.spec_loads += c.spec_loads
+        spec_m.add_bytes(stats.bytes_h2d)
+        self._record_generate(stats, S, decode_s)
+        obs.req_finished(rid, len(out), "length")
+        return np.asarray(out)[None], stats
+
+    # ------------------------------------------------------------------
     def _account(self, info_stack, caches: List[PyLRU], stats: OffloadStats):
-        """Feed one decode step's routing decisions to the cache machinery,
-        layer by layer, staging lookahead predictions as the paper does
-        (prefetch for l+j fires while 'computing' layer l)."""
+        """Feed one decode chunk's routing decisions to the cache
+        machinery, position by position, layer by layer.  Expert staging
+        (prefetch for l+j fires while 'computing' layer l) runs only for
+        C = 1 steps — the same ``T == 1`` gate the packed planes apply,
+        so a C = k+1 speculative verify chunk never stages on either
+        execution mode (DESIGN.md §11)."""
         spec = self.spec
         ids, hiddens = routing_from_info(self.cfg, info_stack)
         self.usage.update(ids)
-        for l in range(self.n_moe_layers):
-            caches[l].access(ids[l][0])
-            tgt = l + spec.lookahead
-            if tgt < self.n_moe_layers:
-                pred = speculative.predict_experts(
-                    jnp.asarray(self.routers[tgt]),
-                    jnp.asarray(hiddens[l][0])[None],
-                    spec.num_speculative)
-                caches[tgt].stage(np.asarray(pred[0]))
+        n_pos = int(ids[0].shape[0]) if ids else 1
+        for t in range(n_pos):
+            for l in range(self.n_moe_layers):
+                caches[l].access(ids[l][t])
+                tgt = l + spec.lookahead
+                if n_pos == 1 and tgt < self.n_moe_layers:
+                    pred = speculative.predict_experts(
+                        jnp.asarray(self.routers[tgt]),
+                        jnp.asarray(hiddens[l][t])[None],
+                        spec.num_speculative)
+                    caches[tgt].stage(np.asarray(pred[0]))
 
     # ------------------------------------------------------------------
     def throughput_estimate(self, stats: OffloadStats, hw_name: str) -> float:

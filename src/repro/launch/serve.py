@@ -52,6 +52,25 @@ def resolve_offload_spec(spec, cache_size=None, num_speculative=None):
                          else num_speculative))
 
 
+def resolve_draft(draft_config, num_draft_tokens):
+    """CLI speculation flags -> ``(draft_config_name, k)``.
+
+    Speculation is enabled iff a draft config was given AND k resolves
+    >= 1; ``--num-draft-tokens`` defaults to 4 when a draft is set but
+    the count flag is absent.  ``None`` means "flag not given"; 0 is a
+    real value — ``--num-draft-tokens 0`` must disable speculation, not
+    fall back to the default k (the same or-truthiness trap
+    :func:`resolve_offload_spec` guards; regression-tested in
+    ``tests/test_serve_cli.py``).
+    """
+    if draft_config is None:
+        return None, 0
+    k = 4 if num_draft_tokens is None else int(num_draft_tokens)
+    if k <= 0:
+        return None, 0
+    return draft_config, k
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny-moe", choices=list_archs())
@@ -62,6 +81,16 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--quantize", action="store_true")
     ap.add_argument("--cache-size", type=int, default=None)
     ap.add_argument("--num-speculative", type=int, default=None)
+    ap.add_argument("--draft-config", default=None, choices=list_archs(),
+                    help="token-level draft-and-verify decoding "
+                         "(DESIGN.md §11): a dense arch sharing the "
+                         "target's vocab proposes tokens the target "
+                         "verifies in one chunk — greedy output is "
+                         "bitwise identical to non-speculative decode")
+    ap.add_argument("--num-draft-tokens", type=int, default=None,
+                    help="draft tokens proposed per verify round "
+                         "(default 4 when --draft-config is set; 0 "
+                         "disables speculation)")
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching with simulated arrivals")
     ap.add_argument("--n-requests", type=int, default=12)
@@ -156,6 +185,16 @@ def print_telemetry_summary(obs):
               f"(saves x{roof['h2d_savings_ratio']:.1f})")
 
 
+def print_spec_summary(obs):
+    snap = obs.snapshot()
+    spec = snap.get("spec")
+    if spec and spec["rounds"]:
+        print(f"[spec] {spec['rounds']} verify rounds, acceptance "
+              f"{spec['acceptance_rate']:.2f}, "
+              f"{spec['bytes_h2d_per_accepted']/1e6:.2f}MB h2d per "
+              f"emitted token")
+
+
 def main():
     args = build_parser().parse_args()
 
@@ -167,6 +206,15 @@ def main():
         raise SystemExit("--metrics-json/--trace instrument the continuous "
                          "and offload engines; add --continuous or "
                          "--offload")
+    draft_name, draft_k = resolve_draft(args.draft_config,
+                                        args.num_draft_tokens)
+    if draft_name is not None and not (args.offload or args.continuous):
+        raise SystemExit("--draft-config targets the offload and "
+                         "continuous engines; add --offload or "
+                         "--continuous")
+    if draft_name is not None and args.sampler != "greedy":
+        raise SystemExit("--draft-config needs --sampler greedy (the "
+                         "acceptance rule compares argmax streams)")
     telem = make_telemetry(args)
     cfg = get_config(args.arch)
     if cfg.vocab_size > 100_000 or cfg.d_model > 1024:
@@ -191,9 +239,14 @@ def main():
         from repro.configs.base import OffloadSpec
         spec = resolve_offload_spec(cfg.offload or OffloadSpec(),
                                     args.cache_size, args.num_speculative)
+        draft = None
+        if draft_name is not None and not args.continuous:
+            from repro.core.draft import make_draft
+            draft = make_draft(draft_name, seed=args.seed)
         eng = OffloadEngine(params, cfg, spec, quantized=args.quantize,
                             telemetry=telem if not args.continuous
-                            else None)
+                            else None,
+                            draft=draft, num_draft_tokens=draft_k)
         if args.continuous:
             # continuous + offloaded decode compose (DESIGN.md §6); the
             # packed pool needs quantized weights
@@ -218,10 +271,12 @@ def main():
             print("quantized sizes:", {k: f"{v/1e6:.1f}MB"
                                        for k, v in eng.size_report.items()})
         print_telemetry_summary(eng.obs)
+        print_spec_summary(eng.obs)
         write_outputs(args, eng.obs, {
             "engine": "offload", "arch": cfg.name,
             "offloaded": True, "timing": eng.obs.timing,
-            "plane": eng._exec.plane, "roofline": eng.obs.timing})
+            "plane": eng._exec.plane, "roofline": eng.obs.timing,
+            "speculative": draft_k > 0})
         return
 
     if args.continuous:
@@ -230,6 +285,11 @@ def main():
         policy = (ExpertOverlapPolicy(params, cfg)
                   if args.policy == "overlap" and cfg.moe is not None
                   else fcfs_policy)
+        draft_params, draft_cfg = None, None
+        if draft_name is not None:
+            draft_cfg = get_config(draft_name)
+            draft_params = T.init_model(jax.random.key(args.seed),
+                                        draft_cfg)
         try:
             eng = ContinuousEngine(
                 params, cfg, max_slots=args.max_slots,
@@ -240,7 +300,9 @@ def main():
                 seed=args.seed, offload=offload_eng,
                 kv_page=args.kv_page,
                 kv_pages_total=args.kv_pages_total,
-                telemetry=telem)
+                telemetry=telem,
+                draft_params=draft_params, draft_cfg=draft_cfg,
+                num_draft_tokens=draft_k)
         except ValueError as e:
             raise SystemExit(f"--continuous: {e}")
 
@@ -281,12 +343,13 @@ def main():
                   f"{s['offload_hits']} hits "
                   f"({s['offload_bytes_h2d']/1e6:.1f}MB h2d measured)")
         print_telemetry_summary(eng.obs)
+        print_spec_summary(eng.obs)
         write_outputs(args, eng.obs, {
             "engine": "continuous", "arch": cfg.name,
             "kv_layout": "paged" if args.kv_page is not None else "dense",
             "offloaded": offload_eng is not None,
             "timing": eng.obs.timing, "plane": eng._exec.plane,
-            "roofline": eng.obs.timing})
+            "roofline": eng.obs.timing, "speculative": draft_k > 0})
         return
 
     eng = ServeEngine(params, cfg, SamplerConfig(kind=args.sampler))

@@ -306,10 +306,14 @@ def decode_block_packed(p, cfg: ModelConfig, kind: str, x_t, state, pos,
         B, S, D = h2.shape
         h2d = h2.reshape(B * S, D)
         if ffn == "moe":
+            # acquire masks per ROW of the (B*S, D) token matrix; expand
+            # the per-slot mask across chunk positions (C=1 unchanged)
+            act_tok = active if (active is None or S == 1) \
+                else jnp.repeat(active, S)
             y2d, route, pstate = M.moe_apply_packed(
                 p["moe"], cfg, h2d, store, pstate, l_moe, routers,
                 lookahead=lookahead, n_spec=n_spec, fused=fused,
-                active=active, vectorized=vectorized)
+                active=act_tok, vectorized=vectorized)
             info["route"] = route
             info["hidden_pre_moe"] = h2d
         else:
@@ -341,9 +345,10 @@ def decode_block_packed_moe(p, cfg: ModelConfig, x_t, h2, store, pstate,
     Returns (x_t, pstate, info)."""
     B, S, D = h2.shape
     h2d = h2.reshape(B * S, D)
+    act_tok = active if (active is None or S == 1) else jnp.repeat(active, S)
     y2d, route, pstate = M.moe_apply_packed(
         p["moe"], cfg, h2d, store, pstate, l_moe, None, n_spec=0,
-        fused=fused, active=active, vectorized=vectorized)
+        fused=fused, active=act_tok, vectorized=vectorized)
     x_t = x_t + y2d.reshape(B, S, D)
     return x_t, pstate, {"route": route, "hidden_pre_moe": h2d}
 

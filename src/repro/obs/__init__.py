@@ -36,8 +36,8 @@ from repro.obs.tracing import Tracer
 
 __all__ = ["Telemetry", "MetricsRegistry", "Tracer", "RooflineAccountant",
            "Counter", "Gauge", "Histogram", "ExecPhases", "StepTimer",
-           "flatten_legacy", "metrics_document", "write_metrics_json",
-           "jit_cache_metrics", "SCHEMA_VERSION"]
+           "SpecMetrics", "flatten_legacy", "metrics_document",
+           "write_metrics_json", "jit_cache_metrics", "SCHEMA_VERSION"]
 
 _STEP_PHASES = ("plan", "chunk", "dispatch", "sync", "sample", "host")
 
@@ -96,6 +96,51 @@ class StepTimer:
         now = self._clock()
         self.marks.append((phase, self._t, now))
         self._t = now
+
+
+class SpecMetrics:
+    """``spec`` namespace (DESIGN.md §11): speculation accounting shared
+    by both engines.  Declared at wiring time (the full key set exists
+    before any round runs — ``schema.SPEC_KEYS``): per-round
+    ``proposed``/``accepted`` histograms, a ``rounds`` counter, the
+    cumulative ``acceptance_rate`` gauge, and ``bytes_h2d_per_accepted``
+    — measured h2d traffic divided by tokens the verify chunks emitted
+    (stays 0.0 on engines with resident experts)."""
+
+    __slots__ = ("rounds", "h_proposed", "h_accepted", "g_rate", "g_bytes",
+                 "proposed_total", "accepted_total", "emitted_total",
+                 "bytes_total")
+
+    def __init__(self, registry: MetricsRegistry):
+        self.rounds = registry.counter("spec", "rounds")
+        self.h_proposed = registry.histogram("spec", "proposed")
+        self.h_accepted = registry.histogram("spec", "accepted")
+        self.g_rate = registry.gauge("spec", "acceptance_rate")
+        self.g_bytes = registry.gauge("spec", "bytes_h2d_per_accepted")
+        self.g_rate.set(0.0)
+        self.g_bytes.set(0.0)
+        self.proposed_total = 0
+        self.accepted_total = 0
+        self.emitted_total = 0
+        self.bytes_total = 0.0
+
+    def round(self, proposed: int, accepted: int) -> None:
+        """One verify round: ``proposed`` = k_eff draft tokens offered,
+        ``accepted`` = length of the matching prefix (the round emitted
+        ``accepted + 1`` tokens — prefix plus the target's bonus)."""
+        self.rounds.add(1)
+        self.h_proposed.observe(proposed)
+        self.h_accepted.observe(accepted)
+        self.proposed_total += int(proposed)
+        self.accepted_total += int(accepted)
+        self.emitted_total += int(accepted) + 1
+        self.g_rate.set(self.accepted_total / max(1, self.proposed_total))
+
+    def add_bytes(self, bytes_h2d: float) -> None:
+        """Fold one generation's measured h2d bytes into the
+        per-accepted-token gauge."""
+        self.bytes_total += float(bytes_h2d)
+        self.g_bytes.set(self.bytes_total / max(1, self.emitted_total))
 
 
 class Telemetry:

@@ -22,6 +22,10 @@ Metric names are ``namespace.key``.  Namespaces:
 * ``request``  — per-request lifecycle aggregates (declared with timing).
 * ``roofline`` — measured-vs-predicted accounting (gauges; set when a
   roofline accountant is attached).
+* ``spec``     — token-level draft-and-verify accounting (declared only
+  when speculation is wired: per-round proposed/accepted histograms,
+  cumulative acceptance rate, h2d bytes per accepted token —
+  DESIGN.md §11).
 
 The legacy flat ``ContinuousEngine.stats()`` dict is a *projection* of
 this schema (``repro.obs.flatten_legacy``): ``engine.*`` keys flatten
@@ -85,13 +89,19 @@ ROOFLINE_KEYS = frozenset({
     "naive_h2d_bytes_per_token", "h2d_savings_ratio", "context_len",
 })
 
+SPEC_KEYS = frozenset({
+    "rounds", "proposed", "accepted", "acceptance_rate",
+    "bytes_h2d_per_accepted",
+})
+
 HISTOGRAM_FIELDS = frozenset({"count", "sum", "min", "max", "p50", "p95",
                               "buckets"})
 
 
 def expected_namespaces(*, kv_layout: str = "dense", offloaded: bool = False,
                         timing: bool = True, plane: str = "plain",
-                        roofline: bool = True) -> Dict[str, FrozenSet[str]]:
+                        roofline: bool = True, speculative: bool = False
+                        ) -> Dict[str, FrozenSet[str]]:
     """The exact ``{namespace: key set}`` a ContinuousEngine snapshot
     carries for one engine/plane/KV-layout combination — what the
     snapshot tests and the CI validator both check against."""
@@ -102,6 +112,8 @@ def expected_namespaces(*, kv_layout: str = "dense", offloaded: bool = False,
     }
     if offloaded:
         out["offload"] = OFFLOAD_KEYS
+    if speculative:
+        out["spec"] = SPEC_KEYS
     if timing:
         out["step"] = STEP_KEYS
         out["request"] = REQUEST_KEYS

@@ -279,7 +279,10 @@ class Executor:
                collect_info: bool = False):
         """One decode step for every row — the unified engine entry.
 
-        tokens: (B, 1) int32.  Returns ``(logits, state', pstate',
+        tokens: (B, C) int32 — C = 1 for plain decode, C = k+1 for a
+        speculative verify chunk (DESIGN.md §11); KV is written at
+        ``pos .. pos+C−1`` and ``pos`` advances by C (active rows).
+        Returns ``(logits, state', pstate',
         info)`` on every plane; ``pstate`` threads the expert buffer pool
         (packed planes; ``None`` on plain), ``active`` (B,) bool masks
         rows whose output is discarded (continuous batching free slots).
@@ -359,10 +362,13 @@ class Executor:
         logits = self._jit_head(self.params, x)
         if obs is not None:
             obs.mark("head")
+        # decode is the C=1 case of a chunk; a C=k+1 verify chunk
+        # (speculative decoding, DESIGN.md §11) advances by its width
+        C = int(tokens.shape[1])
         if pages is not None and active is not None:
-            pos = pos + jnp.where(active, 1, 0).astype(pos.dtype)
+            pos = pos + jnp.where(active, C, 0).astype(pos.dtype)
         else:
-            pos = pos + 1
+            pos = pos + C
         state = dict(state, pos=pos)
         return logits, state, pstate, route_ids
 

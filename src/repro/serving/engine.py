@@ -146,7 +146,10 @@ class ContinuousEngine:
                  kv_page: Optional[int] = None,
                  kv_pages_total: Optional[int] = None,
                  ragged_bucket: bool = True,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 draft_params=None,
+                 draft_cfg: Optional[ModelConfig] = None,
+                 num_draft_tokens: int = 0):
         """``offload``: a packed :class:`~repro.core.offload_engine.
         OffloadEngine` (``quantized=True``) switches this engine into
         **offloaded decode mode** (DESIGN.md §6): experts stay HQQ-packed
@@ -174,6 +177,20 @@ class ContinuousEngine:
         table, which makes paged decoding BITWISE the dense engine
         (tests/test_paged_kv.py); bucketing keeps greedy token streams
         identical while paying only for live pages.
+
+        ``draft_params`` / ``draft_cfg`` / ``num_draft_tokens``: token-
+        level draft-and-verify decoding (DESIGN.md §11).  With a dense
+        draft model sharing the target's vocab and ``num_draft_tokens=k
+        >= 1``, each step decodes every running row through one C =
+        k+1 verify chunk instead of k+1 single-token steps: the draft
+        proposes k tokens per row, the target verifies them in one
+        chunk, the longest matching prefix plus the target's own next
+        token is emitted, and both target KV (``truncate``) and draft
+        state roll back past each row's rejection point.  Greedy
+        sampler only; the output token streams are bitwise those of
+        non-speculative decode for any draft.  ``num_draft_tokens=0``
+        disables speculation regardless of the draft arguments (the
+        CLI ablation path).
 
         ``telemetry``: a :class:`repro.obs.Telemetry` turns on the
         unified telemetry plane (DESIGN.md §10) — per-step phase timing,
@@ -282,6 +299,52 @@ class ContinuousEngine:
                         int(c) for c in np.asarray(self._pstate.counts)))
             else:
                 self.obs.attach_roofline(cfg)
+        # --------------------------------------------------------------
+        # token-level draft-and-verify decoding (DESIGN.md §11)
+        self.spec_k = int(num_draft_tokens or 0)
+        self._spec_metrics = None
+        if self.spec_k > 0:
+            if draft_params is None or draft_cfg is None:
+                raise ValueError("num_draft_tokens >= 1 needs draft_params "
+                                 "and draft_cfg (the dense draft model)")
+            if not self._greedy:
+                raise ValueError(
+                    "draft-and-verify decoding is greedy-only: the "
+                    "acceptance rule compares the target's argmax stream")
+            # a wrapped ring cannot roll back: a rejected verify-chunk
+            # write would overwrite the live entry W positions back.
+            # Bound every request to the narrowest ring width instead of
+            # letting SWA slots roll (dense rings are min(slot_len,
+            # window) wide; paged KV is position-indexed and never
+            # wraps, so its cap stays the page reservation)
+            self._unbounded = False
+            self._spec_cap = slot_len
+            if (not self.paged and cfg.sliding_window
+                    and any(parse_block(k)[0] == "swa"
+                            for k in cfg.block_pattern)):
+                self._spec_cap = min(slot_len, cfg.sliding_window)
+            if draft_cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {draft_cfg.vocab_size} != target vocab "
+                    f"{cfg.vocab_size}; draft and target must share tokens")
+            if not draft_cfg.attention_only_stack or draft_cfg.moe is not None:
+                raise ValueError(
+                    f"draft {draft_cfg.name!r} must be a dense causal-"
+                    f"attention stack (rollback = pos reset; an MoE draft "
+                    f"would compete for the h2d bus)")
+            self._draft_exec = Executor(draft_params, draft_cfg)
+            # draft ring gets k positions of headroom: rejected draft
+            # self-feeds land past the canonical stream and must never
+            # wrap onto live context
+            self._draft_kv = KVSlotManager(draft_cfg, max_slots,
+                                           slot_len + self.spec_k)
+            self._draft_consumed = np.zeros(max_slots, np.int64)
+            # which request's draft state each slot row holds — draft
+            # admission is lazy (first speculative step touching the row)
+            self._draft_rid = np.full(max_slots, -1, np.int64)
+            from repro.obs import SpecMetrics
+            self._spec_metrics = SpecMetrics(self.obs.registry)
+            self._spec_last_h2d = 0.0
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 32, on_token=None,
@@ -295,10 +358,16 @@ class ContinuousEngine:
                 "engine decodes greedily (argmax ignores temperature) — "
                 "construct it with sampler=SamplerConfig(kind='categorical'"
                 "/'topk'/'topp')")
-        if not self._unbounded and prompt.size + max_new_tokens > self.slot_len:
+        cap = (self.slot_len if self._spec_metrics is None
+               else self._spec_cap)
+        if not self._unbounded and prompt.size + max_new_tokens > cap:
+            detail = (f"slot_len={self.slot_len}" if cap == self.slot_len
+                      else f"the speculative ring cap {cap} (= min(slot_"
+                           f"len, sliding_window); a wrapped ring cannot "
+                           f"roll back rejected verify chunks)")
             raise ValueError(
-                f"request needs {prompt.size + max_new_tokens} KV positions "
-                f"> slot_len={self.slot_len}")
+                f"request needs {prompt.size + max_new_tokens} KV "
+                f"positions > {detail}")
         req = GenRequest(prompt=prompt, max_new_tokens=max_new_tokens,
                          arrival=self.step_count, on_token=on_token,
                          on_finish=on_finish, temperature=temperature)
@@ -479,6 +548,17 @@ class ContinuousEngine:
             return finished
         reqs = sorted((r for r in self.sched.running
                        if r.slot in set(rows)), key=lambda r: r.slot)
+        if self._spec_metrics is not None:
+            # one draft-and-verify round for the whole batch; k is
+            # clipped so no row can emit past its budget (a row with one
+            # token left falls the batch back to the plain step below —
+            # which is what non-speculative decode would run anyway)
+            k_round = min([self.spec_k]
+                          + [r.max_new_tokens - len(r.generated) - 1
+                             for r in reqs])
+            if k_round >= 1:
+                return self._step_speculative(st, plan, finished, rows,
+                                              reqs, k_round)
         active = np.zeros((self.max_slots,), bool)
         active[rows] = True
         if self.paged:
@@ -555,6 +635,178 @@ class ContinuousEngine:
             st.mark("host")
             # live context from host-side request records — never a
             # device fetch (the dense manager's pos lives on device)
+            ctx = (sum(len(r.prompt) + len(r.generated) for r in reqs)
+                   / max(1, len(reqs)))
+            self.obs.step_end(st, n_decode=len(reqs),
+                              n_chunks=len(plan.chunks), context_len=ctx)
+        return finished
+
+    # ------------------------------------------------------------------
+    # token-level draft-and-verify decoding (DESIGN.md §11)
+    def _draft_admit(self, req: GenRequest) -> None:
+        """Bind a running request to its slot's draft-state row: B=1
+        draft prefill over the prompt, scattered in at the draft ring
+        width.  Lazy — runs at the first speculative step that touches
+        the row, so requests admitted under any admission mode (whole,
+        chunked, paged) pick up draft state identically."""
+        slot = req.slot
+        _, st, _ = self._draft_exec.prefill(
+            jnp.asarray(req.prompt[None]), self._draft_kv.slot_len)
+        self._draft_kv.write_prefill(st, slot)
+        self._draft_consumed[slot] = req.prompt.size
+        self._draft_rid[slot] = req.rid
+
+    def _draft_propose(self, reqs: List[GenRequest], k: int) -> Dict[int, List[int]]:
+        """Batched draft catch-up + proposal: every row first consumes
+        its canonical tail (the tokens emitted since the draft last saw
+        the stream), then proposes k greedy tokens, feeding itself the
+        first k−1.  Rows run in lockstep (B = max_slots sub-steps); a
+        row that finishes early dummy-feeds one position PAST its last
+        real feed (dead under the validity mask, overwritten when a real
+        token lands there).  The draft state's ``pos`` is host-
+        authoritative: it is rebuilt from ``_draft_consumed`` before
+        every sub-step, which is also what rolls rejected feeds back."""
+        kvd = self._draft_kv
+        queues: Dict[int, List[int]] = {}
+        total: Dict[int, int] = {}
+        fed: Dict[int, int] = {}
+        props: Dict[int, List[int]] = {}
+        for req in reqs:
+            r = req.slot
+            canon = np.concatenate(
+                [req.prompt.astype(np.int64),
+                 np.asarray(req.generated, np.int64)])
+            q = [int(t) for t in canon[int(self._draft_consumed[r]):]]
+            assert q, "draft ahead of the canonical stream"
+            queues[r], total[r] = q, len(q) + k - 1
+            fed[r], props[r] = 0, []
+        state = kvd.state
+        pos_dtype = state["pos"].dtype
+        for _ in range(max(total.values())):
+            toks = np.zeros((self.max_slots, 1), np.int32)
+            pos = np.zeros((self.max_slots,), np.int64)
+            for req in reqs:
+                r = req.slot
+                i = min(fed[r], total[r])  # done rows park one past last
+                pos[r] = int(self._draft_consumed[r]) + i
+                if fed[r] < len(queues[r]):
+                    toks[r, 0] = queues[r][fed[r]]
+                elif fed[r] < total[r]:
+                    toks[r, 0] = props[r][fed[r] - len(queues[r])]
+            state = dict(state, pos=jnp.asarray(pos).astype(pos_dtype))
+            logits, state, _, _ = self._draft_exec.decode(
+                state, jnp.asarray(toks))
+            am = np.asarray(jnp.argmax(logits[:, -1], -1))
+            for req in reqs:
+                r = req.slot
+                if fed[r] < total[r]:
+                    fed[r] += 1
+                    if fed[r] >= len(queues[r]):
+                        props[r].append(int(am[r]))
+        kvd.state = state  # pos is stale; _draft_consumed is the truth
+        for req in reqs:
+            self._draft_consumed[req.slot] += len(queues[req.slot])
+        return props
+
+    def _step_speculative(self, st, plan, finished, rows,
+                          reqs: List[GenRequest], k_round: int
+                          ) -> List[GenRequest]:
+        """One draft-and-verify round over the running rows: draft
+        proposes ``k_round`` tokens per row, the target verifies them in
+        a single C = k_round+1 chunk through the executor, each row
+        emits its longest matching prefix plus the target's own next
+        token, and target KV (``truncate``) and draft bookkeeping roll
+        back past each row's rejection point.  Bitwise the plain decode
+        path under greedy sampling (tests/test_spec_decode.py)."""
+        from repro.core.draft import verify_round
+        C = k_round + 1
+        for req in reqs:
+            if self._draft_rid[req.slot] != req.rid:
+                self._draft_admit(req)
+        props = self._draft_propose(reqs, k_round)
+        chunk = np.zeros((self.max_slots, C), np.int32)
+        for req in reqs:
+            chunk[req.slot, 0] = self.tokens[req.slot, 0]
+            chunk[req.slot, 1:] = props[req.slot]
+        active = np.zeros((self.max_slots,), bool)
+        active[rows] = True
+        base_len = {}
+        if self.paged:
+            for r in rows:
+                base_len[r] = self.kv.length(r)
+                self.kv.ensure(r, base_len[r] + C)
+            step_state = self.kv.view(self.kv.live_width(rows))
+            act_dev = jnp.asarray(active)
+        else:
+            step_state = self.kv.state
+            act_dev = None
+        if self.offload is not None:
+            logits, state, self._pstate, route_ids = self._exec.decode(
+                step_state, jnp.asarray(chunk), self._pstate,
+                jnp.asarray(active))
+            if self._collect:
+                # packed route ids are token-major (B*C, K): map each
+                # chunk position back to its slot for the usage histogram
+                tok_rows = [r * C + j for r in rows for j in range(C)]
+                self.usage.update([np.asarray(i) for i in route_ids],
+                                  rows=tok_rows)
+        else:
+            logits, state, _, infos = self._exec.decode(
+                step_state, jnp.asarray(chunk), active=act_dev,
+                collect_info=self._collect)
+            if self._collect:
+                info_stack, _ = infos
+                ids, _ = routing_from_info(self.cfg, info_stack,
+                                           want_hiddens=False)
+                tok_rows = [r * C + j for r in rows for j in range(C)]
+                self.usage.update(ids, rows=tok_rows)
+        if st is not None:
+            st.mark("dispatch")
+        if self.paged:
+            self.kv.adopt(state)
+            for r in rows:
+                self.kv.note_tokens(r, base_len[r] + C)
+        else:
+            self.kv.state = state
+        # the round's one blocking fetch: every row's target argmax
+        tgt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+        if st is not None:
+            st.mark("sync")
+        for req in reqs:
+            r = req.slot
+            emitted, a = verify_round(props[r], tgt[r])
+            self._spec_metrics.round(k_round, a)
+            stopped = False
+            for t in emitted:
+                req.emit(int(t))
+                if self._done(req, int(t)):
+                    stopped = True
+                    break
+            if stopped:
+                self.kv.release(r)
+                self.sched.evict(req, self._reason(req, req.generated[-1]))
+                self.obs.req_finished(req.rid, len(req.generated),
+                                      req.finish_reason)
+                finished.append(req)
+                self._draft_rid[r] = -1
+            else:
+                # roll back to the canonical position: live KV is
+                # prompt + generated minus the one un-fed last token —
+                # exactly where non-speculative decode would stand
+                self.tokens[r, 0] = req.generated[-1]
+                self.kv.truncate(
+                    r, len(req.prompt) + len(req.generated) - 1)
+                self._draft_consumed[r] += min(a, k_round - 1)
+        if self.offload is not None:
+            hits, spec_hits, demand, spec_l = (
+                int(c) for c in np.asarray(self._pstate.counts))
+            total_h2d = (demand + spec_l) * self.offload.expert_bytes
+            self._spec_metrics.add_bytes(total_h2d - self._spec_last_h2d)
+            self._spec_last_h2d = total_h2d
+        self.step_count += 1
+        self.sched.check_invariants()
+        if st is not None:
+            st.mark("host")
             ctx = (sum(len(r.prompt) + len(r.generated) for r in reqs)
                    / max(1, len(reqs)))
             self.obs.step_end(st, n_decode=len(reqs),

@@ -149,6 +149,21 @@ class KVSlotManager:
         window may be narrower than the slot)."""
         return self.slot_len - int(self.state["pos"][slot])
 
+    def truncate(self, slot: int, n_tokens: int) -> None:
+        """Roll the slot back so exactly ``n_tokens`` positions are live
+        — the speculative-decode rejection path (DESIGN.md §11).  For
+        the dense ring this is a pos reset *only*: ring entries at
+        positions ≥ n_tokens carry kpos > qpos for every future query,
+        so the attention validity mask already hides them, and the next
+        real token overwrites the same ring slot.  Valid only while the
+        ring has never wrapped (bounded mode), which the speculative
+        path guarantees."""
+        assert 0 <= n_tokens <= int(self.state["pos"][slot]), \
+            f"truncate({slot}, {n_tokens}) would extend, not roll back"
+        self.state = dict(
+            self.state,
+            pos=self.state["pos"].at[slot].set(np.int32(n_tokens)))
+
 
 # ======================================================================
 # Block-paged KV (DESIGN.md §9)
@@ -231,6 +246,20 @@ class PagePool:
         for pid in ids:
             heapq.heappush(self._free, pid)
         return ids
+
+    def trim(self, slot, n_tokens: int) -> List[int]:
+        """Give back the pages beyond ``pages_for(n_tokens)`` — the
+        speculative-decode rejection path.  The reservation is kept (the
+        request may regrow into it), only allocations shrink; returns
+        the freed page ids (highest ordinals first) for scrubbing."""
+        keep = self.pages_for(n_tokens)
+        assert slot in self.owned, f"slot {slot} not reserved"
+        freed = []
+        while len(self.owned[slot]) > keep:
+            pid = self.owned[slot].pop()
+            heapq.heappush(self._free, pid)
+            freed.append(pid)
+        return freed
 
     def stats(self) -> Dict[str, object]:
         return {"pages_total": self.n_pages,
@@ -350,6 +379,27 @@ class PagedKVManager:
 
     def length(self, slot: int) -> int:
         return self._len[slot]
+
+    def truncate(self, slot: int, n_tokens: int) -> None:
+        """Roll the slot back so exactly ``n_tokens`` positions are live
+        — the speculative-decode rejection path (DESIGN.md §11).  Pos
+        and the host length mirror reset, and pages past
+        ``pages_for(n_tokens)`` are returned to the pool (scrubbed, so
+        a reused page cannot leak the rejected tokens' positions into
+        another row's mask) — after a rejection the slot's page table is
+        exactly what non-speculative decode at the same position holds,
+        a property the spec tests assert literally."""
+        assert n_tokens >= 0 and n_tokens <= self._len[slot], \
+            f"truncate({slot}, {n_tokens}) would extend, not roll back"
+        freed = self.pool.trim(slot, n_tokens)
+        if freed:
+            base = len(self.pool.owned[slot])
+            self._pages_np[slot, base: base + len(freed)] = -1
+            self._dirty = True
+            self._scrub(freed)
+        self._len[slot] = n_tokens
+        self.state = dict(self.state,
+                          pos=self.state["pos"].at[slot].set(n_tokens))
 
     # ------------------------------------------------------------------
     def pages_dev(self):

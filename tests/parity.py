@@ -1,0 +1,127 @@
+"""Shared cross-plane parity harness (no ``test_`` prefix — imported,
+not collected).
+
+The repo's load-bearing acceptance invariant is that every execution
+plane, KV layout and admission mode emits the SAME greedy token stream
+— and, where the design says so, the same h2d transfer counters.  That
+invariant used to be asserted by hand-rolled loops scattered across
+``test_offload.py`` / ``test_runtime.py`` / ``test_paged_kv.py``; this
+module is the one implementation they (and the speculative-decoding
+matrix in ``test_spec_decode.py``) all drive, so a new plane or KV
+layout gets the whole grid by adding one factory entry.
+
+Pieces:
+
+* :func:`make_prompts` / :func:`oracle_streams` — seeded workloads and
+  the ``generate_plain`` B=1 oracle every engine must reproduce.
+* :func:`run_offload_generate` / :func:`offload_plane_engines` — the
+  batch OffloadEngine across its planes (packed pipelined / vectorized
+  / PR-2 sync / accounting replay) with measured-counter extraction.
+* :func:`run_continuous` + :data:`CONTINUOUS_KV_VARIANTS` — the
+  continuous engine across KV layouts (dense / paged / pinned-horizon
+  paged) and admission modes (whole-prompt / chunked / budgeted).
+* :func:`assert_tokens_equal` / :func:`offload_counters` /
+  :func:`continuous_counters` — the equality assertions, with readable
+  divergence output.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.offload_engine import OffloadEngine, generate_plain
+from repro.serving.engine import ContinuousEngine
+
+# the four measured transfer counters every offload plane must agree on
+OFFLOAD_COUNTERS = ("hits", "spec_hits", "demand_loads", "spec_loads")
+# the continuous engine's legacy-flat h2d keys (offloaded mode)
+CONTINUOUS_H2D_KEYS = ("offload_demand_loads", "offload_spec_loads",
+                       "offload_bytes_h2d")
+
+# ContinuousEngine constructor overlays, keyed by variant name — the KV
+# layout x admission grid the parity tests sweep.  ``paged_exact`` pins
+# the table horizon (bitwise-logits mode); the others are the perf modes
+# whose greedy token streams must still match.
+CONTINUOUS_KV_VARIANTS: Dict[str, dict] = {
+    "dense": {},
+    "dense_chunked": dict(prefill_chunk=4),
+    "paged": dict(kv_page=16),
+    "paged_exact": dict(kv_page=16, ragged_bucket=False),
+    "paged_chunked": dict(kv_page=16, prefill_chunk=4),
+}
+
+
+def make_prompts(cfg, lens: Sequence[int], seed: int = 1
+                 ) -> List[np.ndarray]:
+    """Seeded random prompts (token 0 excluded — it is the pad id)."""
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, int(n)).astype(np.int32)
+            for n in lens]
+
+
+def oracle_streams(params, cfg, prompts, max_news) -> List[List[int]]:
+    """The B=1 ``generate_plain`` greedy stream per request — the
+    reference every engine/plane/layout must reproduce bitwise."""
+    return [generate_plain(params, cfg, p[None], m)[0].tolist()
+            for p, m in zip(prompts, max_news)]
+
+
+def assert_tokens_equal(got, want, label: str) -> None:
+    assert got == want, (f"{label}: token stream diverged\n"
+                         f"  got : {got}\n  want: {want}")
+
+
+# ----------------------------------------------------------------------
+# batch OffloadEngine drivers
+def offload_counters(stats):
+    """OffloadStats -> the measured transfer-counter tuple."""
+    return tuple(getattr(stats, k) for k in OFFLOAD_COUNTERS)
+
+
+def run_offload_generate(eng: OffloadEngine, prompt, max_new: int, **kw):
+    """One B=1 generation -> (token list, OffloadStats)."""
+    prompt = np.asarray(prompt, np.int32).reshape(1, -1)
+    out, stats = eng.generate(prompt, max_new, **kw)
+    return out[0].tolist(), stats
+
+
+def offload_plane_engines(params, qdeq, cfg, spec
+                          ) -> Dict[str, OffloadEngine]:
+    """The offload engine across its execution planes.  ``qdeq`` is the
+    dequantized model from ``quantize_for_offload`` — the accounting
+    plane decodes it so its tokens are comparable bitwise with the
+    packed planes (which execute the same quantized weights)."""
+    return {
+        "packed_pipelined": OffloadEngine(params, cfg, spec,
+                                          quantized=True),
+        "packed_vectorized": OffloadEngine(params, cfg, spec,
+                                           quantized=True,
+                                           pipelined=False),
+        "packed_sync": OffloadEngine(params, cfg, spec, quantized=True,
+                                     pipelined=False, vectorized=False),
+        "accounting": OffloadEngine(qdeq, cfg, spec, quantized=False),
+    }
+
+
+# ----------------------------------------------------------------------
+# ContinuousEngine driver
+def run_continuous(params, cfg, prompts, max_news, *, max_slots: int = 2,
+                   slot_len: int = 64, eos_id=None, max_steps: int = 800,
+                   **kw):
+    """Build, submit, drain -> (per-request token lists, engine).
+    Asserts every request actually finished (a hung engine must fail
+    the parity test, not time out silently)."""
+    eng = ContinuousEngine(params, cfg, max_slots=max_slots,
+                           slot_len=slot_len, eos_id=eos_id, **kw)
+    reqs = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+    eng.run(max_steps=max_steps)
+    unfinished = [r.rid for r in reqs if r.state != "finished"]
+    assert not unfinished, f"requests never finished: {unfinished}"
+    return [r.generated for r in reqs], eng
+
+
+def continuous_counters(eng: ContinuousEngine) -> Dict[str, float]:
+    """The offloaded continuous engine's h2d counters (legacy-flat)."""
+    s = eng.stats()
+    return {k: s[k] for k in CONTINUOUS_H2D_KEYS}

@@ -16,7 +16,8 @@ from repro.obs import Telemetry, flatten_legacy
 from repro.obs.registry import Histogram, MetricsRegistry
 from repro.obs.schema import (EXEC_KEYS_BY_PLANE, HISTOGRAM_FIELDS,
                               JIT_KEYS, OFFLOAD_KEYS, REQUEST_KEYS,
-                              ROOFLINE_KEYS, expected_namespaces)
+                              ROOFLINE_KEYS, SPEC_KEYS,
+                              expected_namespaces)
 from repro.obs.tracing import PID_REQUESTS, Tracer
 from repro.serving.engine import ContinuousEngine
 from repro.serving.sampler import SamplerConfig
@@ -36,10 +37,11 @@ def _offload_spec():
 
 
 def _run_serving(cfg, params, telemetry, *, kv_page=None, offload=None,
-                 sampler=None, seed=0):
+                 sampler=None, seed=0, **kw):
     eng = ContinuousEngine(params, cfg, max_slots=2, slot_len=48,
                            eos_id=None, kv_page=kv_page, offload=offload,
-                           sampler=sampler, seed=seed, telemetry=telemetry)
+                           sampler=sampler, seed=seed, telemetry=telemetry,
+                           **kw)
     reqs = [eng.submit(p, m) for p, m in
             zip(_prompts(cfg, 4, seed=5), [4, 7, 3, 6])]
     eng.run(max_steps=300)
@@ -160,6 +162,42 @@ def test_offloaded_continuous_snapshot_schema(tiny_moe_cfg,
     assert snap["roofline"]["h2d_savings_ratio"] > 1.0, \
         "expert streaming should beat the naive all-experts-every-layer bound"
     assert "offload_hits" in eng.stats()
+
+
+def test_speculative_snapshot_schema(tiny_moe_cfg, tiny_moe_params,
+                                     tmp_path):
+    """Draft-and-verify serving declares the full ``spec`` namespace
+    (DESIGN.md §11) — the key set exists even before a round runs, and
+    the values account the rounds that did."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    dcfg = get_config("tiny-draft")
+    dparams = T.init_model(jax.random.key(7), dcfg)
+    eng, _ = _run_serving(tiny_moe_cfg, tiny_moe_params,
+                          Telemetry(timing=True, trace=True),
+                          draft_params=dparams, draft_cfg=dcfg,
+                          num_draft_tokens=3)
+    snap = eng.metrics()
+    _assert_schema(snap, kv_layout="dense", timing=True, plane="plain",
+                   roofline=True, speculative=True)
+    spec = snap["spec"]
+    assert set(spec) == SPEC_KEYS
+    assert spec["rounds"] > 0
+    assert 0.0 <= spec["acceptance_rate"] <= 1.0
+    assert set(spec["proposed"]) == HISTOGRAM_FIELDS
+    assert spec["proposed"]["count"] == spec["rounds"]
+    # acceptance_rate is emitted/proposed accounting: a round emits
+    # accepted+1 tokens, so the flat projection carries spec_* keys too
+    assert "spec_rounds" in flatten_legacy(snap)
+    # the serialized artifact validates against the CI checker
+    mpath = tmp_path / "metrics.json"
+    eng.obs.write_metrics(mpath, {
+        "engine": "continuous", "arch": tiny_moe_cfg.name,
+        "kv_layout": "dense", "offloaded": False, "timing": True,
+        "plane": "plain", "roofline": True, "speculative": True})
+    assert _load_checker().check_metrics(mpath) == []
 
 
 def test_offload_engine_snapshot_schema(tiny_moe_cfg, tiny_moe_params):

@@ -16,6 +16,8 @@ from repro.core.offload_engine import (OffloadEngine, generate_plain,
 from repro.models import transformer as T
 from repro.quant import hqq
 
+import parity
+
 
 @pytest.fixture(scope="module")
 def setup():
@@ -101,9 +103,9 @@ def test_packed_generate_bit_identical_to_dequantized(setup, qdeq,
     decoding the dequantized model, while experts stay HQQ-packed —
     the only dense expert weights ever built are per-slot dequants."""
     cfg, params, prompt = setup
-    oracle = generate_plain(qdeq, cfg, prompt, 12)
-    out, stats = packed_eng.generate(prompt, 12)
-    assert (out == oracle).all()
+    oracle = parity.oracle_streams(qdeq, cfg, [prompt[0]], [12])[0]
+    out, stats = parity.run_offload_generate(packed_eng, prompt, 12)
+    parity.assert_tokens_equal(out, oracle, "packed vs dequantized oracle")
     # real traffic happened and the LRU worked
     assert stats.demand_loads > 0 and stats.hits > 0
     assert stats.n_tokens == 11
@@ -130,11 +132,10 @@ def test_packed_pipelined_matches_synchronous_unrolled(setup, packed_eng):
     cfg, params, prompt = setup
     base = OffloadEngine(params, cfg, SPEC, quantized=True,
                          pipelined=False, vectorized=False)
-    out_b, sb = base.generate(prompt, 8)
-    out_p, sp = packed_eng.generate(prompt, 8)
-    assert (out_p == out_b).all()
-    assert (sp.hits, sp.spec_hits, sp.demand_loads, sp.spec_loads) == \
-        (sb.hits, sb.spec_hits, sb.demand_loads, sb.spec_loads)
+    out_b, sb = parity.run_offload_generate(base, prompt, 8)
+    out_p, sp = parity.run_offload_generate(packed_eng, prompt, 8)
+    parity.assert_tokens_equal(out_p, out_b, "pipelined vs sync")
+    assert parity.offload_counters(sp) == parity.offload_counters(sb)
 
 
 def test_generate_rng_none_samples(setup, qdeq, packed_eng):
@@ -201,11 +202,10 @@ def test_packed_counters_match_accounting_replay(setup, qdeq, packed_eng):
     implementations."""
     cfg, params, prompt = setup
     acct = OffloadEngine(qdeq, cfg, SPEC, quantized=False)
-    out_p, sp = packed_eng.generate(prompt, 12)
-    out_a, sa = acct.generate(prompt, 12)
-    assert (out_p == out_a).all()
-    assert (sp.hits, sp.spec_hits, sp.demand_loads, sp.spec_loads) == \
-        (sa.hits, sa.spec_hits, sa.demand_loads, sa.spec_loads)
+    out_p, sp = parity.run_offload_generate(packed_eng, prompt, 12)
+    out_a, sa = parity.run_offload_generate(acct, prompt, 12)
+    parity.assert_tokens_equal(out_p, out_a, "packed vs accounting")
+    assert parity.offload_counters(sp) == parity.offload_counters(sa)
 
 
 def test_pool_slots_agree_with_lru_state(setup, packed_eng):

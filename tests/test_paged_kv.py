@@ -38,6 +38,8 @@ from repro.models.layers import attention_core
 from repro.serving.engine import ContinuousEngine
 from repro.serving.kv_manager import PagedKVManager, PagePool
 
+import parity
+
 
 # ======================================================================
 # PagePool allocator invariants (property + seeded fallback)
@@ -317,21 +319,10 @@ def test_paged_state_rejects_recurrent():
 
 # ======================================================================
 # Engine parity: paged continuous serving == dense, token for token
-def _run_engine(params, cfg, prompts, max_news, **kw):
-    eng = ContinuousEngine(params, cfg, max_slots=2, slot_len=64,
-                           eos_id=None, **kw)
-    reqs = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
-    eng.run(max_steps=800)
-    assert all(r.state == "finished" for r in reqs)
-    return [r.generated for r in reqs], eng
-
-
 @pytest.fixture(scope="module")
 def _workload(tiny_moe_cfg):
-    rng = np.random.default_rng(1)
-    prompts = [rng.integers(1, tiny_moe_cfg.vocab_size, int(n))
-               .astype(np.int32) for n in (5, 12, 3, 9, 17, 7)]
-    return prompts, [5, 9, 3, 8, 6, 11]
+    return (parity.make_prompts(tiny_moe_cfg, (5, 12, 3, 9, 17, 7), seed=1),
+            [5, 9, 3, 8, 6, 11])
 
 
 def test_paged_engine_bitwise_matches_dense(tiny_moe_cfg, tiny_moe_params,
@@ -339,24 +330,27 @@ def test_paged_engine_bitwise_matches_dense(tiny_moe_cfg, tiny_moe_params,
     """Acceptance: with the table horizon pinned (``ragged_bucket=
     False``) the paged engine's logits are bitwise the dense engine's —
     so greedy token streams match exactly; bucketed slicing (the perf
-    mode) and chunked admission keep the same streams."""
+    mode), chunked admission and a tight page pool keep the same
+    streams.  Drives the shared ``tests/parity.py`` KV-variant grid."""
     prompts, max_news = _workload
-    base, _ = _run_engine(tiny_moe_params, tiny_moe_cfg, prompts, max_news)
-    for kw in (dict(kv_page=16, ragged_bucket=False),
-               dict(kv_page=16),
-               dict(kv_page=16, prefill_chunk=4),
-               dict(kv_page=8, kv_pages_total=10)):
-        toks, eng = _run_engine(tiny_moe_params, tiny_moe_cfg, prompts,
-                                max_news, **kw)
-        assert toks == base, f"paged engine diverged under {kw}"
+    base, _ = parity.run_continuous(tiny_moe_params, tiny_moe_cfg,
+                                    prompts, max_news)
+    variants = {k: v for k, v in parity.CONTINUOUS_KV_VARIANTS.items()
+                if k.startswith("paged")}
+    variants["paged_small_pool"] = dict(kv_page=8, kv_pages_total=10)
+    for name, kw in variants.items():
+        toks, eng = parity.run_continuous(tiny_moe_params, tiny_moe_cfg,
+                                          prompts, max_news, **kw)
+        parity.assert_tokens_equal(toks, base, name)
         s = eng.stats()
         assert s["kv_layout"] == "paged"
         assert s["kv_pages_free"] == s["kv_pages_total"], \
             "all pages must return to the pool at drain"
     # and the dense baseline still matches the B=1 oracle
-    for p, m, got in zip(prompts, max_news, base):
-        assert got == generate_plain(tiny_moe_params, tiny_moe_cfg,
-                                     p[None], m)[0].tolist()
+    parity.assert_tokens_equal(
+        base, parity.oracle_streams(tiny_moe_params, tiny_moe_cfg,
+                                    prompts, max_news),
+        "dense vs oracle")
 
 
 def test_paged_small_pool_serializes_admissions(tiny_moe_cfg,
@@ -417,26 +411,21 @@ def test_paged_offloaded_matches_dense_offloaded(tiny_moe_cfg,
     spec = OffloadSpec(cache_size=4, num_speculative=2, expert_bits=3,
                        attn_bits=4)
     off = OffloadEngine(params, cfg, spec, quantized=True)
-    rng = np.random.default_rng(13)
-    prompts = [rng.integers(1, cfg.vocab_size, int(n)).astype(np.int32)
-               for n in (5, 8, 6, 7)]
+    prompts = parity.make_prompts(cfg, (5, 8, 6, 7), seed=13)
     max_news = [5, 8, 3, 6]
 
     def run(**kw):
-        eng = ContinuousEngine(None, cfg, max_slots=2, slot_len=48,
-                               eos_id=None, offload=off, **kw)
-        reqs = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
-        eng.run(max_steps=400)
-        assert all(r.state == "finished" for r in reqs)
-        s = eng.stats()
-        return [r.generated for r in reqs], \
-            {k: s[k] for k in ("offload_demand_loads", "offload_spec_loads",
-                               "offload_bytes_h2d")}
+        toks, eng = parity.run_continuous(None, cfg, prompts, max_news,
+                                          slot_len=48, max_steps=400,
+                                          offload=off, **kw)
+        return toks, parity.continuous_counters(eng)
 
     base, base_c = run()
-    for kw in (dict(kv_page=16), dict(kv_page=16, ragged_bucket=False)):
-        toks, c = run(**kw)
-        assert toks == base and c == base_c, f"packed paged diverged: {kw}"
+    for name in ("paged", "paged_exact"):
+        toks, c = run(**parity.CONTINUOUS_KV_VARIANTS[name])
+        parity.assert_tokens_equal(toks, base, f"packed {name}")
+        assert c == base_c, f"packed {name} h2d counters diverged: " \
+            f"{c} vs {base_c}"
 
 
 def test_paged_capacity_and_flag_validation(tiny_moe_cfg, tiny_moe_params):

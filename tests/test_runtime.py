@@ -25,6 +25,8 @@ from repro.models import transformer as T
 from repro.runtime import Admission, Executor, TokenBudgetPolicy
 from repro.serving.engine import ContinuousEngine
 
+import parity
+
 
 def _state_leaves(state):
     return [np.asarray(l) for l in jax.tree.leaves(state)]
@@ -130,29 +132,20 @@ def test_continuous_chunked_matches_unchunked(tiny_moe_cfg,
     bitwise the tokens of unchunked admission under greedy decoding —
     while long prompts no longer monopolise whole steps."""
     cfg, params = tiny_moe_cfg, tiny_moe_params
-    rng = np.random.default_rng(17)
-    prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
-               for n in (21, 5, 17, 4, 12)]
+    prompts = parity.make_prompts(cfg, (21, 5, 17, 4, 12), seed=17)
     max_news = [6, 9, 4, 8, 5]
 
-    def run(prefill_chunk):
-        eng = ContinuousEngine(params, cfg, max_slots=2, slot_len=64,
-                               eos_id=None, prefill_chunk=prefill_chunk)
-        reqs = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
-        eng.run(max_steps=800)
-        assert all(r.state == "finished" for r in reqs)
-        return [r.generated for r in reqs], eng
-
-    base, _ = run(None)
+    base, _ = parity.run_continuous(params, cfg, prompts, max_news)
     for chunk in (4, 7):
-        toks, eng = run(chunk)
-        assert toks == base, f"chunked({chunk}) diverged from unchunked"
+        toks, eng = parity.run_continuous(params, cfg, prompts, max_news,
+                                          prefill_chunk=chunk)
+        parity.assert_tokens_equal(toks, base, f"chunked({chunk})")
         # the budget really bounded every step
         assert eng.budget.token_budget == 2 + chunk
     # and both match the B=1 oracle
-    for p, m, got in zip(prompts, max_news, base):
-        oracle = generate_plain(params, cfg, p[None], m)[0].tolist()
-        assert got == oracle
+    parity.assert_tokens_equal(
+        base, parity.oracle_streams(params, cfg, prompts, max_news),
+        "unchunked vs oracle")
 
 
 def test_continuous_offloaded_chunked_matches_and_counters_agree(
@@ -166,28 +159,19 @@ def test_continuous_offloaded_chunked_matches_and_counters_agree(
     spec = OffloadSpec(cache_size=cfg.moe.num_experts, num_speculative=0,
                        expert_bits=3, attn_bits=4)
     off = OffloadEngine(params, cfg, spec, quantized=True)
-    rng = np.random.default_rng(23)
-    prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
-               for n in (19, 5, 14)]
+    prompts = parity.make_prompts(cfg, (19, 5, 14), seed=23)
     max_news = [5, 7, 4]
 
-    def run(prefill_chunk):
-        eng = ContinuousEngine(None, cfg, max_slots=2, slot_len=48,
-                               eos_id=None, offload=off,
-                               prefill_chunk=prefill_chunk)
-        reqs = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
-        eng.run(max_steps=800)
-        assert all(r.state == "finished" for r in reqs)
-        s = eng.stats()
-        return [r.generated for r in reqs], s
-
-    base_toks, base_stats = run(None)
-    toks, stats = run(5)
-    assert toks == base_toks
-    for k in ("offload_demand_loads", "offload_spec_loads",
-              "offload_bytes_h2d"):
-        assert stats[k] == base_stats[k], f"{k} changed under chunking"
-    assert stats["offload_demand_loads"] > 0
+    base_toks, base_eng = parity.run_continuous(
+        None, cfg, prompts, max_news, slot_len=48, offload=off)
+    toks, eng = parity.run_continuous(
+        None, cfg, prompts, max_news, slot_len=48, offload=off,
+        prefill_chunk=5)
+    parity.assert_tokens_equal(toks, base_toks, "offloaded chunked")
+    base_c, c = (parity.continuous_counters(e) for e in (base_eng, eng))
+    assert c == base_c, f"h2d counters changed under chunking: {c} " \
+        f"vs {base_c}"
+    assert c["offload_demand_loads"] > 0
 
 
 # ----------------------------------------------------------------------

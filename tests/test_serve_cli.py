@@ -1,15 +1,20 @@
-"""Serving CLI regression tests (no engine construction — the arg
-handling itself is under test).
+"""Serving CLI regression tests (mostly no engine construction — the
+arg handling itself is under test; the one end-to-end case at the
+bottom checks ``--num-draft-tokens 1`` really decodes bitwise).
 
-The load-bearing one: ``--cache-size 0`` / ``--num-speculative 0`` are
-the paper's no-cache / no-speculation ablations; the launcher used to
-treat them as "flag not given" via ``or``-truthiness and silently ran
-the arch defaults instead."""
+The load-bearing ones: ``--cache-size 0`` / ``--num-speculative 0`` are
+the paper's no-cache / no-speculation ablations, and ``--num-draft-
+tokens 0`` is the no-speculation ablation of DESIGN.md §11; the
+launcher used to treat zero as "flag not given" via ``or``-truthiness
+and silently ran the defaults instead."""
+import re
+
 import pytest
 
 from repro.configs import get_config
 from repro.configs.base import OffloadSpec
-from repro.launch.serve import build_parser, resolve_offload_spec
+from repro.launch.serve import (build_parser, resolve_draft,
+                                resolve_offload_spec)
 
 
 def _spec_for(argv):
@@ -46,3 +51,55 @@ def test_partial_override_keeps_other_default():
 def test_resolve_is_identity_without_overrides():
     base = OffloadSpec(cache_size=4, num_speculative=1)
     assert resolve_offload_spec(base) is base
+
+
+# ----------------------------------------------------------------------
+# token-level speculation flags (DESIGN.md §11)
+def test_draft_flags_unset_disable_cleanly():
+    # no --draft-config: speculation off no matter what k says
+    assert resolve_draft(None, None) == (None, 0)
+    assert resolve_draft(None, 5) == (None, 0)
+    args = build_parser().parse_args([])
+    assert resolve_draft(args.draft_config, args.num_draft_tokens) == \
+        (None, 0)
+
+
+def test_draft_zero_tokens_is_real_ablation():
+    # --num-draft-tokens 0 disables; it must NOT or-truthiness back to 4
+    assert resolve_draft("tiny-draft", 0) == (None, 0)
+    assert resolve_draft("tiny-draft", -3) == (None, 0)
+    args = build_parser().parse_args(
+        ["--continuous", "--draft-config", "tiny-draft",
+         "--num-draft-tokens", "0"])
+    assert resolve_draft(args.draft_config, args.num_draft_tokens) == \
+        (None, 0)
+
+
+def test_draft_default_and_explicit_k():
+    assert resolve_draft("tiny-draft", None) == ("tiny-draft", 4)
+    assert resolve_draft("tiny-draft", 1) == ("tiny-draft", 1)
+
+
+def test_draft_one_token_bitwise_end_to_end(monkeypatch, capsys):
+    """``--num-draft-tokens 1`` (the C=2 boundary) through ``main()``
+    itself: the per-request generations printed by the continuous run
+    must be identical with and without speculation."""
+    from repro.launch import serve
+
+    def run(extra):
+        argv = ["serve", "--continuous", "--arch", "tiny-moe",
+                "--n-requests", "2", "--max-new", "8", "--max-slots", "2",
+                "--slot-len", "64", "--seed", "3"] + extra
+        monkeypatch.setattr("sys.argv", argv)
+        serve.main()
+        out = capsys.readouterr().out
+        found = re.findall(r"req (\d+) finished .*?: ('.*')", out)
+        assert len(found) == 2, f"expected 2 finished requests:\n{out}"
+        # rids are a process-global counter — compare texts in rid order
+        return [t for _, t in sorted(found, key=lambda x: int(x[0]))], out
+
+    base, _ = run([])
+    spec, out = run(["--draft-config", "tiny-draft",
+                     "--num-draft-tokens", "1"])
+    assert spec == base, "k=1 speculation changed the decoded text"
+    assert "[spec]" in out, "speculative run must report spec accounting"

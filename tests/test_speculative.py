@@ -46,3 +46,24 @@ def test_recall_increases_with_n_fetch():
     assert rec[(1, 8)] == 1.0  # fetching all experts is always perfect
     # correlated stream: nearer lookahead predicts at least as well
     assert rec[(1, 2)] >= rec[(2, 2)] - 0.05
+
+
+def test_recall_curve_offline_smoke():
+    """Offline smoke on a fully synthetic random trace (no structure at
+    all): every recall value is a probability, monotone in n_fetch for
+    EVERY lookahead, and n=E is exactly 1.0 — the sanity floor for the
+    Fig-2 reproduction machinery."""
+    rng = np.random.default_rng(5)
+    T, L, D, E, K = 32, 4, 8, 8, 2
+    hiddens = rng.standard_normal((T, L, D))
+    routers = rng.standard_normal((L, D, E))
+    actual = rng.integers(0, E, (T, L, K))
+    lookaheads, fetches = [1, 2, 3], [1, 2, 4, 8]
+    rec = S.recall_curve(hiddens, routers, actual, lookaheads, fetches)
+    assert set(rec) == {(j, n) for j in lookaheads for n in fetches}
+    assert all(0.0 <= v <= 1.0 for v in rec.values())
+    for j in lookaheads:
+        vals = [rec[(j, n)] for n in fetches]
+        assert all(b >= a for a, b in zip(vals, vals[1:])), \
+            f"recall not monotone in n_fetch at lookahead {j}: {vals}"
+        assert rec[(j, E)] == 1.0

@@ -29,12 +29,13 @@ sys.path.insert(0, str(ROOT / "src"))
 
 from repro.obs.schema import (EXEC_KEYS_BY_PLANE, HISTOGRAM_FIELDS,  # noqa: E402
                               JIT_KEYS, OFFLOAD_KEYS, REQUEST_KEYS,
-                              ROOFLINE_KEYS, SCHEMA_VERSION,
+                              ROOFLINE_KEYS, SCHEMA_VERSION, SPEC_KEYS,
                               expected_namespaces)
 
 # histograms serialize as nested dicts; everything else is scalar-ish
 HISTOGRAM_METRICS = {("step", "wall_ms"), ("request", "queue_wait_steps"),
-                     ("request", "gen_tokens")}
+                     ("request", "gen_tokens"), ("spec", "proposed"),
+                     ("spec", "accepted")}
 
 # span/instant names every traced continuous-serve run must carry
 REQUIRED_TRACE_NAMES = {"submit", "queue_wait", "decode", "finish"}
@@ -47,16 +48,22 @@ def expected_for_mode(mode):
     timing = bool(mode.get("timing", False))
     plane = mode.get("plane", "plain")
     roofline = bool(mode.get("roofline", timing))
+    # read via .get: files from before the speculation PR carry no
+    # "speculative" field and must keep validating
+    speculative = bool(mode.get("speculative", False))
     if engine == "continuous":
         return expected_namespaces(
             kv_layout=mode.get("kv_layout", "dense"),
             offloaded=bool(mode.get("offloaded", False)),
-            timing=timing, plane=plane, roofline=roofline)
+            timing=timing, plane=plane, roofline=roofline,
+            speculative=speculative)
     if engine == "offload":
         # the batch OffloadEngine has no scheduler/KV-slot plane or step
         # loop — it carries traffic + jit always, request/exec/roofline
-        # when timing is on
+        # when timing is on, spec when draft-and-verify decoding ran
         out = {"offload": OFFLOAD_KEYS, "jit": JIT_KEYS}
+        if speculative:
+            out["spec"] = SPEC_KEYS
         if timing:
             out["request"] = REQUEST_KEYS
             out["exec"] = EXEC_KEYS_BY_PLANE[plane]
