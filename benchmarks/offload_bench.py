@@ -212,6 +212,35 @@ def run(smoke=False, trained=False, max_new=None, seed=0):
         assert spec_speedup >= 1.3, \
             f"speculative decode speedup {spec_speedup:.2f}x below the " \
             f"1.3x acceptance bar"
+
+    # ------------------------------------------------------------------
+    # router top-k ablation (serve --top-k-override): routing each token
+    # to 1 expert instead of the arch default shrinks the per-token
+    # expert working set, so the LRU misses less and the offloaded
+    # decode streams fewer bytes — the traffic drop the CLI flag buys
+    from repro.launch.serve import resolve_top_k
+
+    assert cfg.moe.top_k > 1, "top-k ablation needs a multi-expert router"
+    eng_k1 = OffloadEngine(params, resolve_top_k(cfg, 1), spec,
+                           quantized=True)
+    _, s_k1 = eng_k1.generate(prompt, max_new)
+    bpt_k1 = s_k1.bytes_h2d / max(1, s_k1.n_tokens)
+    bpt_base = pipe["bytes_per_token"]  # same engine class/spec/prompt
+    assert bpt_k1 < bpt_base, \
+        f"k=1 routing must cut h2d traffic: {bpt_k1:.0f} >= {bpt_base:.0f}"
+    results.append({
+        "name": "offload_bench", "variant": "top_k_override",
+        "top_k": 1, "arch_top_k": cfg.moe.top_k, "max_new": max_new,
+        "bytes_per_token": round(bpt_k1, 1),
+        "baseline_bytes_per_token": round(bpt_base, 1),
+        "h2d_savings_ratio": round(bpt_base / max(1e-9, bpt_k1), 3),
+        "hit_ratio": round(s_k1.hit_ratio, 4),
+    })
+    print(f"[offload_bench] top_k_override: k=1 h2d "
+          f"{bpt_k1 / 1e3:.1f}KB/token vs k={cfg.moe.top_k} "
+          f"{bpt_base / 1e3:.1f}KB/token "
+          f"({bpt_base / max(1e-9, bpt_k1):.2f}x less traffic)")
+
     emit(results, "offload_bench")
     (ROOT / "BENCH_offload.json").write_text(json.dumps(results, indent=1))
     print("[offload_bench] wrote BENCH_offload.json")

@@ -21,6 +21,17 @@ from typing import Optional, Tuple
 MIXERS = ("attn", "swa", "xattn", "encattn", "rglru", "mlstm", "slstm")
 FFNS = ("mlp", "moe", "none")
 
+# Sequence-state family each mixer carries during decode (DESIGN.md §12).
+#   kv  — per-position K/V entries that GROW with context (ring or paged);
+#   rec — fixed-size recurrent state: the degenerate "one page per slot"
+#         case (no growth, no paging, O(1) truncate);
+#   (xattn additionally READS the shared encoder KV, but that plane is
+#   computed once at admission and never scattered to — it is a property
+#   of the whole config, ``is_encoder_decoder``, not of one layer.)
+MIXER_STATE = {"attn": "kv", "swa": "kv", "xattn": "kv",
+               "encattn": "none", "rglru": "rec", "mlstm": "rec",
+               "slstm": "rec"}
+
 
 def parse_block(kind: str) -> Tuple[str, str]:
     mixer, _, ffn = kind.partition("+")
@@ -30,6 +41,25 @@ def parse_block(kind: str) -> Tuple[str, str]:
     if ffn not in FFNS:
         raise ValueError(f"unknown ffn {ffn!r} in block kind {kind!r}")
     return mixer, ffn
+
+
+@dataclass(frozen=True)
+class StatePlaneSpec:
+    """What sequence state ONE layer carries during decode (DESIGN.md §12).
+
+    ``plane``: "kv" (growing per-position K/V — ring or paged), "rec"
+    (fixed-size recurrent state, the degenerate one-page-per-slot case)
+    or "none" (encoder-only mixers; no decode-time state).  ``grows``
+    marks planes whose footprint scales with live context — the only
+    ones a :class:`~repro.serving.kv_manager.PagePool` should ever hold
+    pages for.
+    """
+
+    kind: str
+    mixer: str
+    plane: str
+    grows: bool
+    window: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -147,6 +177,33 @@ class ModelConfig:
     @property
     def uses_attention(self) -> bool:
         return any(parse_block(k)[0] in ("attn", "swa", "xattn") for k in self.block_pattern)
+
+    # ------------------------------------------------------------------
+    # Per-layer sequence-state descriptor (DESIGN.md §12).  The serving
+    # runtime (Executor / StateManager / ContinuousEngine) keys every
+    # state-plane decision off this, never off arch_type.
+    def state_planes(self) -> Tuple["StatePlaneSpec", ...]:
+        """One :class:`StatePlaneSpec` per layer, in layer order."""
+        out = []
+        for kind in self.layer_kinds():
+            mixer = parse_block(kind)[0]
+            plane = MIXER_STATE[mixer]
+            out.append(StatePlaneSpec(
+                kind=kind, mixer=mixer, plane=plane,
+                grows=(plane == "kv"),
+                window=(self.sliding_window if mixer == "swa" else None)))
+        return tuple(out)
+
+    @property
+    def has_kv_layers(self) -> bool:
+        """Any layer carries a growing per-position KV plane — only then
+        do slot rings / page-pool reservations hold real positions.  A
+        pure-recurrent stack (xlstm) reserves ZERO pages per request."""
+        return any(sp.plane == "kv" for sp in self.state_planes())
+
+    @property
+    def has_recurrent_layers(self) -> bool:
+        return any(sp.plane == "rec" for sp in self.state_planes())
 
     @property
     def attention_only_stack(self) -> bool:

@@ -76,14 +76,50 @@ def expert_bytes(cfg: ModelConfig, bits: int) -> float:
 
 def active_param_bytes(cfg: ModelConfig, expert_bits: int,
                        attn_bits: int) -> float:
-    """Bytes read from device memory per generated token (active params)."""
+    """Bytes read from device memory per generated token (active params).
+
+    Dense models are the E=1 case (DESIGN.md §12): with no router their
+    whole FFN is "active" every token, so its parameters count in the
+    dense read at ``attn_bits`` — a MoE arch only reads its top-k
+    experts' worth, which is the whole point of the paper's traffic
+    model."""
     moe_layers = cfg.moe_layer_count
-    n_expert_active = moe_layers * cfg.moe.top_k * expert_param_count(cfg)
+    n_expert_active = (moe_layers * cfg.moe.top_k * expert_param_count(cfg)
+                       if cfg.moe is not None else 0)
     attn_per_layer = cfg.d_model * cfg.head_dim * (cfg.n_heads * 2
                                                    + cfg.n_kv_heads * 2)
-    dense = cfg.n_layers * attn_per_layer + cfg.vocab_size * cfg.d_model
+    mlp_layers = sum(1 for k in cfg.layer_kinds()
+                     if parse_block(k)[1] == "mlp")
+    mats = 2 if cfg.mlp_act == "gelu" else 3  # gated acts add a matrix
+    dense = (cfg.n_layers * attn_per_layer
+             + mlp_layers * mats * cfg.d_model * cfg.d_ff
+             + cfg.vocab_size * cfg.d_model)
     return (n_expert_active * EFFECTIVE_BITS[expert_bits] / 8.0
             + dense * EFFECTIVE_BITS[attn_bits] / 8.0)
+
+
+def recurrent_state_bytes(cfg: ModelConfig) -> int:
+    """Fixed-size recurrent decode state of ONE sequence, summed over
+    layers (mirrors ``models/recurrent.init_*_state``: f32 carries, conv
+    prefix at the param dtype).  This is the "rec" plane of DESIGN.md
+    §12 — the footprint is FLAT in context length, which is exactly why
+    recurrent per-token decode cost must not grow with it."""
+    import jax.numpy as jnp
+
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    D = cfg.d_model
+    pdt = jnp.dtype(cfg.dtype).itemsize
+    total = 0
+    for kind in cfg.layer_kinds():
+        mixer = parse_block(kind)[0]
+        if mixer == "rglru":   # h (D, f32) + conv prefix ((cw-1)*D)
+            total += 4 * D + pdt * (cfg.rglru_conv_width - 1) * D
+        elif mixer == "mlstm":  # C (H,dh,dh) + n (H,dh) + m (H), f32
+            total += 4 * (H * dh * dh + H * dh + H)
+        elif mixer == "slstm":  # h/c/n/m each (H,dh), f32
+            total += 4 * 4 * H * dh
+    return total
 
 
 def kv_read_bytes_per_token(cfg: ModelConfig, context_len: float,
@@ -137,14 +173,28 @@ def tokens_per_second(cfg: ModelConfig, hw: Hardware, stats: TokenStats,
     attention at that live context (:func:`kv_read_bytes_per_token`) to
     the memory-bound compute term — the roofline's attention tax, which
     the paged/ragged plane keeps proportional to live tokens.  The
-    default 0 reproduces the weight-only Table-2 numbers."""
-    eb = expert_bytes(cfg, expert_bits)
+    default 0 reproduces the weight-only Table-2 numbers.
+
+    Per-layer-kind state planes (DESIGN.md §12) each carry their own
+    sequence-state traffic term: attention layers read live KV
+    (growing in ``context_len``; xattn additionally reads the
+    precomputed encoder KV every token), recurrent layers read AND
+    write their fixed carries (flat in ``context_len`` — the
+    structural reason a pure-recurrent stack's predicted tokens/s does
+    not change with context, tests/test_zoo_serving.py), and dense
+    models are the E=1 case with zero expert-streaming terms."""
+    eb = expert_bytes(cfg, expert_bits) if cfg.moe is not None else 0.0
     moe_layers = cfg.moe_layer_count
     t_compute = ((active_param_bytes(cfg, expert_bits, attn_bits)
-                  + kv_read_bytes_per_token(cfg, context_len, kv_bits))
+                  + kv_read_bytes_per_token(cfg, context_len, kv_bits)
+                  + 2 * recurrent_state_bytes(cfg))  # read + write
                  / (hw.mem_bw_gbps * 1e9 * hw.mem_eff)
                  + cfg.n_layers * hw.layer_overhead_s)
     if naive:
+        if cfg.moe is None:
+            raise ValueError("naive offloading models per-layer expert "
+                             "streaming; there are no experts to stream "
+                             f"in dense arch {cfg.name}")
         total_bytes = moe_layers * cfg.moe.num_experts * eb
         t_transfer = total_bytes / (hw.pcie_gbps * 1e9) \
             + moe_layers * hw.copy_latency_s

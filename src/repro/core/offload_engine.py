@@ -653,7 +653,8 @@ class OffloadEngine:
 # ----------------------------------------------------------------------
 def generate_plain(params, cfg: ModelConfig, prompt: np.ndarray,
                    max_new_tokens: int, *,
-                   prefill_chunk: Optional[int] = None) -> np.ndarray:
+                   prefill_chunk: Optional[int] = None,
+                   extras=None) -> np.ndarray:
     """Greedy decode without any offload bookkeeping (parity oracle).
 
     Dispatches through the plain plane of the unified runtime
@@ -661,7 +662,9 @@ def generate_plain(params, cfg: ModelConfig, prompt: np.ndarray,
     block program — every engine that must match this oracle bitwise
     (continuous batching, packed offloading) runs the very same
     programs, and ``prefill_chunk`` splits the prompt without changing
-    a single output bit."""
+    a single output bit.  Works for every layer kind in the config zoo
+    (DESIGN.md §12); enc-dec archs pass
+    ``extras={"audio_embeds": ...}``."""
     ex = Executor(params, cfg)
     return ex.generate_greedy(prompt, max_new_tokens,
-                              prefill_chunk=prefill_chunk)
+                              prefill_chunk=prefill_chunk, extras=extras)

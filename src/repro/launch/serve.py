@@ -52,6 +52,32 @@ def resolve_offload_spec(spec, cache_size=None, num_speculative=None):
                          else num_speculative))
 
 
+def resolve_top_k(cfg, top_k_override):
+    """MELINOE-style router top-k override: serve an MoE arch with
+    fewer experts per token than it was trained with — each dropped
+    expert is h2d traffic the offloaded decode never pays.
+
+    ``None`` means "flag not given" (arch default top_k); 0 or negative
+    is an explicit error, NOT a fall-through to the default (the same
+    or-truthiness trap :func:`resolve_offload_spec` guards — ``k or
+    cfg.moe.top_k`` would silently undo an explicit ``0``).  Values
+    above the arch's top_k clamp down to it: the router can't route to
+    more experts than it scores.
+    """
+    if top_k_override is None:
+        return cfg
+    if cfg.moe is None:
+        raise ValueError(
+            f"--top-k-override targets MoE routing; {cfg.name} is dense")
+    k = int(top_k_override)
+    if k <= 0:
+        raise ValueError(
+            f"--top-k-override must be >= 1 (got {k}); every token "
+            f"routes to at least one expert")
+    k = min(k, cfg.moe.top_k)
+    return cfg.replace(moe=dataclasses.replace(cfg.moe, top_k=k))
+
+
 def resolve_draft(draft_config, num_draft_tokens):
     """CLI speculation flags -> ``(draft_config_name, k)``.
 
@@ -73,7 +99,18 @@ def resolve_draft(draft_config, num_draft_tokens):
 
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tiny-moe", choices=list_archs())
+    ap.add_argument("--arch", "--config", dest="arch", default="tiny-moe",
+                    choices=list_archs(),
+                    help="zoo config id (--config is an alias: any "
+                         "registry arch serves through the same "
+                         "per-layer-kind state planes, DESIGN.md §12)")
+    ap.add_argument("--top-k-override", type=int, default=None,
+                    metavar="K",
+                    help="route each token to min(K, arch top_k) experts "
+                         "instead of the arch default — fewer routed "
+                         "experts = fewer expert loads over the h2d bus "
+                         "in offloaded decode (0/negative is an error, "
+                         "not a fall-back to the default)")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--prompt", action="append", default=None)
     ap.add_argument("--max-new", type=int, default=32)
@@ -220,6 +257,18 @@ def main():
     if cfg.vocab_size > 100_000 or cfg.d_model > 1024:
         cfg = cfg.reduced()
         print(f"[serve] using reduced variant: {cfg.name}")
+    try:
+        cfg = resolve_top_k(cfg, args.top_k_override)
+    except ValueError as e:
+        raise SystemExit(str(e))
+    if args.top_k_override is not None:
+        print(f"[serve] router top-k override: {cfg.moe.top_k} "
+              f"experts/token")
+    if cfg.is_encoder_decoder and not args.continuous:
+        raise SystemExit(
+            f"{cfg.name} is encoder-decoder: serve it with --continuous "
+            f"(the frontend output is encoded once at admission into the "
+            f"shared encoder-KV plane, DESIGN.md §12)")
     rng = jax.random.key(args.seed)
     if args.checkpoint:
         from repro.checkpoint.checkpointer import restore
@@ -313,6 +362,10 @@ def main():
                   f"{decode_bytes(np.array(req.generated))!r}")
 
         arrivals = np.random.default_rng(args.seed)
+        # enc-dec archs need a frontend output per request; the CLI has
+        # no audio pipeline, so a seeded stub stands in for it (the same
+        # convention as the smoke tests)
+        frontend = np.random.default_rng(args.seed + 1)
         submitted = 0
         while submitted < args.n_requests or eng.sched.has_waiting \
                 or eng.sched.n_running:
@@ -321,8 +374,13 @@ def main():
                    and (idle or arrivals.random() < args.arrival_rate)):
                 idle = False
                 e = enc[submitted % len(enc)]
+                extras = None
+                if cfg.is_encoder_decoder:
+                    extras = {"audio_embeds": frontend.standard_normal(
+                        (cfg.encoder_seq, cfg.d_model)).astype(np.float32)}
                 try:
-                    eng.submit(e, args.max_new, on_finish=on_finish)
+                    eng.submit(e, args.max_new, on_finish=on_finish,
+                               extras=extras)
                 except ValueError as err:
                     raise SystemExit(f"--continuous: {err} (raise "
                                      f"--slot-len or lower --max-new)")

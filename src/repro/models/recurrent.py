@@ -129,6 +129,36 @@ def rglru_decode(p, cfg, x_t, state):
     return y, {"h": h, "conv": conv_state}
 
 
+def rglru_chunk(p, cfg, x, state):
+    """Chunked decode/prefill step: x (B, C, D), state carried across calls.
+
+    Projections, conv taps and gates are computed for the whole chunk in
+    parallel (each is per-position with a fixed reduction order, so they
+    are chunk-boundary invariant); the h recurrence runs as a sequential
+    ``lax.scan`` whose step is exactly :func:`rglru_decode`'s update
+    ``h = a_t * h + b_t``.  Splitting a sequence into chunks therefore
+    composes BITWISE with feeding it whole — unlike the
+    ``associative_scan`` training form, which regroups the products and
+    is only allclose (tests/test_recurrent.py).  C = 1 reproduces
+    ``rglru_decode`` bit for bit.
+    """
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_gate_br"]).astype(F32))
+    xi0 = jnp.einsum("bsd,dr->bsr", x, p["w_x"])
+    xi, conv_state = _causal_conv(p, xi0, state["conv"])
+    a, b = _rglru_gates(p, xi)  # (B,C,R)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    h_last, hs = jax.lax.scan(
+        step, state["h"], (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    h = jnp.moveaxis(hs, 0, 1)  # (B,C,R)
+    y = jnp.einsum("bsr,rd->bsd", (gate * h).astype(x.dtype), p["w_out_r"])
+    return y, {"h": h_last, "conv": conv_state}
+
+
 # ======================================================================
 # mLSTM (xLSTM matrix-memory cell), chunkwise-parallel training form.
 def init_mlstm(rng, cfg):
@@ -279,6 +309,20 @@ def mlstm_decode(p, cfg, x_t, state):
     return _mlstm_out(p, cfg, x_t, h), state
 
 
+def mlstm_chunk(p, cfg, x, state):
+    """Chunked decode/prefill step: x (B, C, D), state carried across calls.
+
+    QKV/gate projections are chunk-parallel; the cell update runs through
+    :func:`mlstm_recurrent_ref` — the stabilized sequential oracle — whose
+    per-step carry composes exactly, so chunk boundaries never move a bit
+    (the chunkwise-parallel ``mlstm_scan_core`` regroups the stabilizer
+    maxima per L-block and is only allclose).  ``mlstm_decode`` already
+    scans over S, so this is the same program; the alias exists so the
+    per-mixer chunk entry points are uniform.
+    """
+    return mlstm_decode(p, cfg, x, state)
+
+
 # ======================================================================
 # sLSTM (xLSTM scalar-memory cell with hidden-to-hidden recurrence)
 N_SGATES = 4  # z, i, f, o
@@ -349,6 +393,24 @@ def slstm_decode(p, cfg, x_t, state):
     carry = (state["h"], state["c"], state["n"], state["m"])
     carry, h_t = _slstm_step(p, carry, pre)
     y = _slstm_out(p, cfg, x_t, h_t[:, None])
+    hf, cf, nf, mf = carry
+    return y, {"h": hf, "c": cf, "n": nf, "m": mf}
+
+
+def slstm_chunk(p, cfg, x, state):
+    """Chunked decode/prefill step: x (B, C, D), state carried across calls.
+
+    Gate pre-activations are chunk-parallel; the hidden-to-hidden
+    recurrence scans :func:`_slstm_step` from the carried state (that IS
+    the training scan, just seeded) — sequential composition makes chunk
+    splits bitwise-invariant, and C = 1 reproduces ``slstm_decode``.
+    """
+    pre = jnp.einsum("bsd,dghj->bsghj", x.astype(F32),
+                     p["w_gates_in"].astype(F32))
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    carry, hs = jax.lax.scan(lambda c, i: _slstm_step(p, c, i),
+                             carry, jnp.moveaxis(pre, 1, 0))
+    y = _slstm_out(p, cfg, x, jnp.moveaxis(hs, 0, 1))
     hf, cf, nf, mf = carry
     return y, {"h": hf, "c": cf, "n": nf, "m": mf}
 

@@ -241,13 +241,16 @@ def _mixer_decode(p, cfg: ModelConfig, kind: str, x_t, state, pos, *,
                                    active=active, layer=layer)
         state = dict(state, kv=kv)
     elif mixer == "rglru":
-        y, rec = R.rglru_decode(p["rglru"], cfg, h, state["rec"])
+        fn = R.rglru_decode if x_t.shape[1] == 1 else R.rglru_chunk
+        y, rec = fn(p["rglru"], cfg, h, state["rec"])
         state = dict(state, rec=rec)
     elif mixer == "mlstm":
-        y, rec = R.mlstm_decode(p["mlstm"], cfg, h, state["rec"])
+        fn = R.mlstm_decode if x_t.shape[1] == 1 else R.mlstm_chunk
+        y, rec = fn(p["mlstm"], cfg, h, state["rec"])
         state = dict(state, rec=rec)
     elif mixer == "slstm":
-        y, rec = R.slstm_decode(p["slstm"], cfg, h, state["rec"])
+        fn = R.slstm_decode if x_t.shape[1] == 1 else R.slstm_chunk
+        y, rec = fn(p["slstm"], cfg, h, state["rec"])
         state = dict(state, rec=rec)
     x_t = x_t + y
     if mixer == "xattn":
@@ -383,13 +386,12 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, *,
     ((batch, kv_max_pages), −1 = unallocated) shared by all layers —
     which is why the whole pool serves any batch size (a B=1 admission
     chunk writes the same pages the running batch reads)."""
-    paged = None
-    if kv_page is not None:
-        if not cfg.attention_only_stack:
-            raise ValueError(
-                f"paged KV needs a causal-attention stack; {cfg.name} has "
-                f"mixers without a positional KV cache")
-        paged = (kv_pages, kv_page)
+    # Per-layer-kind state planes (DESIGN.md §12): only "kv" layers take
+    # the paged layout — recurrent layers keep their fixed-size state
+    # (the degenerate one-page-per-slot case) whether or not the config
+    # is paged, and a pure-recurrent stack simply has an all-dense state
+    # plus an (unused) page table.
+    paged = (kv_pages, kv_page) if kv_page is not None else None
 
     def stacked(kind):
         one = _block_state(cfg, kind, batch, max_len, paged)
@@ -544,6 +546,16 @@ def _collect_enc_kv(params, cfg, enc_out):
                                     (cfg.n_layers, S_e)).copy()}
 
 
+def encode_enc_kv(params, cfg: ModelConfig, audio_embeds):
+    """Encoder pass + per-decoder-layer cross-attn K/V — the admission-
+    time computation of the read-only shared encoder-KV plane
+    (DESIGN.md §12): run ONCE per request when it is admitted, referenced
+    by every decode step, never scattered to.  ``audio_embeds``:
+    (B, encoder_seq, d_model)."""
+    enc_out, _ = _run_encoder(params, cfg, audio_embeds)
+    return _collect_enc_kv(params, cfg, enc_out)
+
+
 def prefill(params, cfg: ModelConfig, batch, max_len: int):
     """``batch`` may carry ``pad_mask`` (B, S) for left-padded prompts of
     unequal length; the returned state then has per-row ``pos`` (B,)."""
@@ -617,11 +629,15 @@ def decode_step(params, cfg: ModelConfig, state, tokens, *,
     """tokens: (B, C) int32. Returns (logits (B,C,V), new_state[, infos]).
 
     C = 1 is the classic one-token decode step.  C > 1 is a *prefill
-    chunk* (attention-mixer stacks only): the chunk's K/V are written
-    into the caches at positions ``pos .. pos+C-1`` and ``pos`` advances
-    by C — the runtime executor drives chunked prefill through exactly
-    this step (DESIGN.md §8), so decode and chunked prefill share one
-    block program.
+    chunk*: attention mixers write the chunk's K/V into the caches at
+    positions ``pos .. pos+C-1``; recurrent mixers (rglru/mlstm/slstm)
+    fold the chunk through their sequential chunk forms
+    (``repro.models.recurrent.*_chunk`` — carry composition is exact, so
+    chunk splits are bitwise-invariant); enc-dec decoders additionally
+    read the shared ``state["enc_kv"]`` plane.  ``pos`` advances by C —
+    the runtime executor drives chunked prefill through exactly this
+    step (DESIGN.md §8/§12), so decode and chunked prefill share one
+    block program for EVERY layer kind in the config zoo.
 
     ``state["pos"]`` may be a scalar (whole batch in lock-step) or (B,)
     per-row positions (continuous batching / padded prefill).
@@ -649,15 +665,6 @@ def decode_step(params, cfg: ModelConfig, state, tokens, *,
             "moe_mode='packed' threads buffer-pool state across layers; "
             "drive it with a packed-plane repro.runtime.Executor "
             "(layerwise decode_block_packed), not the scanned decode_step")
-    if tokens.shape[1] > 1 and not cfg.attention_only_stack:
-        # recurrent mixers (rglru/mlstm/slstm) fold exactly ONE token
-        # into their state per decode call — a C > 1 chunk would silently
-        # drop every token after the first (trace-time check, free)
-        raise ValueError(
-            f"prefill chunks (C={tokens.shape[1]} > 1) need a causal-"
-            f"attention stack; {cfg.name}'s recurrent/enc-dec mixers "
-            f"advance one token per step — use forward_train-based "
-            f"prefill (transformer.make_prefill) for this arch")
     x = L.embed(params["embed"], cfg, tokens)
     pages = state.get("pages")
     if row is not None:
@@ -673,6 +680,25 @@ def decode_step(params, cfg: ModelConfig, state, tokens, *,
 
     enc_kv_stacked = state.get("enc_kv")
 
+    def _enc_kv_for(li):
+        """Per-layer cross-attn view of the shared encoder-KV plane —
+        READ-ONLY (computed once at admission, never scattered to)."""
+        ek, ev = enc_kv_stacked["k"][li], enc_kv_stacked["v"][li]
+        if row is not None:
+            ek = jax.lax.dynamic_slice_in_dim(ek, row, 1, axis=0)
+            ev = jax.lax.dynamic_slice_in_dim(ev, row, 1, axis=0)
+        return ek, ev, enc_kv_stacked["pos"][li]
+
+    def _gate_rows(old, new):
+        """Freeze inactive rows' fixed-size (rec) state: unlike the ring
+        caches — where a frozen row's writes stay row-local and invisible
+        behind its pos — a recurrent carry update would corrupt the row,
+        so masked rows keep their pre-step state bit for bit."""
+        return jax.tree.map(
+            lambda o, n: jnp.where(
+                active.reshape(active.shape + (1,) * (n.ndim - 1)), n, o),
+            old, new)
+
     # The stacked decode state rides in the scan CARRY and is updated
     # in place with dynamic_update_index — passing it as xs/ys would make
     # XLA double-buffer the entire KV stack (2.5x cache memory at
@@ -684,12 +710,11 @@ def decode_step(params, cfg: ModelConfig, state, tokens, *,
         inf_out = []
         for i in range(period):
             kind = cfg.block_pattern[i]
+            mixer = parse_block(kind)[0]
             enc_kv = None
-            if parse_block(kind)[0] == "xattn" and enc_kv_stacked is not None:
-                li = lidx * period + i
-                enc_kv = (enc_kv_stacked["k"][li], enc_kv_stacked["v"][li],
-                          enc_kv_stacked["pos"][li])
-            if pages is not None:
+            if mixer == "xattn" and enc_kv_stacked is not None:
+                enc_kv = _enc_kv_for(lidx * period + i)
+            if pages is not None and mixer in ("attn", "swa", "xattn"):
                 # paged KV: the layer-stacked pool stays WHOLE in the
                 # carry; the layer index rides in the scatter/gather
                 # indices, so XLA updates the (donated) pool in place —
@@ -702,13 +727,29 @@ def decode_step(params, cfg: ModelConfig, state, tokens, *,
                                             active=active, layer=lidx)
                 new_stacks[i] = st
             else:
+                # dense rings and fixed-size recurrent state (the
+                # DESIGN.md §12 "rec" plane — also taken by rec layers of
+                # a paged hybrid: their state never pages)
                 sslice = jax.tree.map(
                     lambda a: jax.lax.dynamic_index_in_dim(a, lidx, 0,
                                                            keepdims=False),
                     new_stacks[i])
+                blk_in = sslice
+                if row is not None:
+                    blk_in = jax.tree.map(
+                        lambda a: jax.lax.dynamic_slice_in_dim(a, row, 1,
+                                                               axis=0),
+                        sslice)
                 x, st, info = _block_decode(pslices[i], cfg, kind, x,
-                                            sslice, pos, enc_kv=enc_kv,
+                                            blk_in, pos, enc_kv=enc_kv,
                                             moe_mode=moe_mode)
+                if row is not None:
+                    st = jax.tree.map(
+                        lambda full, r: jax.lax.dynamic_update_slice_in_dim(
+                            full, r, row, axis=0),
+                        sslice, st)
+                elif active is not None:
+                    st = _gate_rows(sslice, st)
                 new_stacks[i] = jax.tree.map(
                     lambda a, b: jax.lax.dynamic_update_index_in_dim(
                         a, b, lidx, 0),
@@ -725,9 +766,32 @@ def decode_step(params, cfg: ModelConfig, state, tokens, *,
 
     new_tail = []
     for i, kind in enumerate(cfg.tail_kinds()):
-        x, st, info = _block_decode(params["tail"][i], cfg, kind, x,
-                                    state["tail"][i], pos, moe_mode=moe_mode,
-                                    pages=pages, active=active)
+        mixer = parse_block(kind)[0]
+        enc_kv = None
+        if mixer == "xattn" and enc_kv_stacked is not None:
+            enc_kv = _enc_kv_for(cfg.n_periods * period + i)
+        st_in = state["tail"][i]
+        if pages is not None and mixer in ("attn", "swa", "xattn"):
+            x, st, info = _block_decode(params["tail"][i], cfg, kind, x,
+                                        st_in, pos, enc_kv=enc_kv,
+                                        moe_mode=moe_mode,
+                                        pages=pages, active=active)
+        else:
+            blk_in = st_in
+            if row is not None:
+                blk_in = jax.tree.map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(a, row, 1, axis=0),
+                    st_in)
+            x, st, info = _block_decode(params["tail"][i], cfg, kind, x,
+                                        blk_in, pos, enc_kv=enc_kv,
+                                        moe_mode=moe_mode)
+            if row is not None:
+                st = jax.tree.map(
+                    lambda full, r: jax.lax.dynamic_update_slice_in_dim(
+                        full, r, row, axis=0),
+                    st_in, st)
+            elif active is not None:
+                st = _gate_rows(st_in, st)
         new_tail.append(st)
         if collect_info:
             infos.append(info)

@@ -61,10 +61,19 @@ class RooflineAccountant:
                     "predicted_tok_s", "delta_ratio",
                     "measured_h2d_bytes_per_token",
                     "naive_h2d_bytes_per_token", "h2d_savings_ratio",
-                    "context_len")}
+                    "context_len", "rec_state_bytes_per_token",
+                    "enc_kv_read_bytes_per_token")}
         self._g["hw"].set(hw)
         self._g["window_steps"].set(self.window)
         self._g["windows"].set(0)
+        # per-layer-kind state-plane traffic terms (DESIGN.md §12),
+        # static per config: the rec plane is read AND written each
+        # token but never grows; the shared encoder KV is the xattn
+        # cross-read at zero decoded context — both flat in context_len
+        self._g["rec_state_bytes_per_token"].set(
+            2.0 * cost_model.recurrent_state_bytes(cfg))
+        self._g["enc_kv_read_bytes_per_token"].set(
+            cost_model.kv_read_bytes_per_token(cfg, 0.0))
         for k in ("measured_tok_s", "predicted_tok_s", "delta_ratio",
                   "measured_h2d_bytes_per_token",
                   "naive_h2d_bytes_per_token", "h2d_savings_ratio",

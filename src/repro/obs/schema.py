@@ -87,6 +87,10 @@ ROOFLINE_KEYS = frozenset({
     "hw", "windows", "window_steps", "measured_tok_s", "predicted_tok_s",
     "delta_ratio", "measured_h2d_bytes_per_token",
     "naive_h2d_bytes_per_token", "h2d_savings_ratio", "context_len",
+    # per-layer-kind state-plane traffic (DESIGN.md §12): fixed-size
+    # recurrent carries (read+write, flat in context) and the shared
+    # encoder-KV cross-read — both set at attach time per config
+    "rec_state_bytes_per_token", "enc_kv_read_bytes_per_token",
 })
 
 SPEC_KEYS = frozenset({

@@ -122,6 +122,19 @@ class Executor:
         """Fresh decode state (stacked layout, scalar pos 0)."""
         return T.init_decode_state(self.cfg, batch, max_len)
 
+    def encode(self, audio_embeds):
+        """Encoder pass + cross-attn K/V collection — the admission-time
+        computation of the read-only shared encoder-KV plane
+        (DESIGN.md §12).  Returns the ``state["enc_kv"]`` pytree
+        ({"k", "v": (n_layers, B, S_e, H_kv, Dh), "pos"}); runs once per
+        request, referenced by every decode step, never scattered to."""
+        assert self.cfg.is_encoder_decoder, "encode() is the enc-dec frontend"
+        cfg = self.cfg
+        fn = T.cached_jit(
+            ("encode_enc_kv", cfg),
+            lambda: jax.jit(lambda p, a: T.encode_enc_kv(p, cfg, a)))
+        return fn(self.params, jnp.asarray(audio_embeds))
+
     def init_pool_state(self) -> "EP.PoolState":
         assert self.packed, "buffer pools exist on packed planes only"
         return EP.init_pool_state(self.store, self.spec)
@@ -451,35 +464,39 @@ class Executor:
         return logits, state
 
     def prefill(self, tokens, max_len: int, *, chunk: Optional[int] = None,
-                pstate=None):
-        """Whole-prompt prefill = chunked prefill over a fresh state.
+                pstate=None, extras=None):
+        """Whole-prompt prefill = chunked prefill over a fresh state —
+        for EVERY layer kind in the config zoo (DESIGN.md §12).
 
         tokens: (B, S) int32, no padding (rows prefill alone or in
         equal-length lock-step; the static engine's left-padded batches
         go through :meth:`prefill_padded`).  ``chunk=None`` processes the
         prompt as ONE chunk; any chunking is bitwise-identical
-        (tests/test_runtime.py).  Returns (logits of the last chunk,
-        state, pstate).
+        (tests/test_runtime.py): attention mixers only change the number
+        of query rows per dispatch, recurrent mixers fold chunks through
+        their sequential chunk forms whose carry composition is exact
+        (``repro.models.recurrent.*_chunk``).  The full-sequence
+        ``forward_train`` prefill (chunkwise-parallel train forms) stays
+        available via :meth:`prefill_padded` — it matches this path only
+        to recurrent-vs-chunkwise tolerance, never bitwise, which is why
+        every serving engine and its oracle run THIS path.
 
-        Recurrent / enc-dec stacks cannot chunk (their mixers fold one
-        token per decode call — ``decode_step`` rejects C > 1): the
-        plain plane falls back to the full-sequence ``forward_train``
-        prefill for them, and an explicit ``chunk`` raises.
+        Encoder-decoder stacks need ``extras={"audio_embeds": (B, S_e,
+        D)}``; the encoder runs once up front (:meth:`encode`) and the
+        chunks read the resulting shared ``enc_kv`` plane.
+
+        Returns (logits of the last chunk, state, pstate).
         """
         tokens = jnp.asarray(tokens)
         B, S = tokens.shape
-        if not self.cfg.attention_only_stack:
-            if chunk is not None and chunk < S:
-                raise ValueError(
-                    f"chunked prefill needs a causal-attention stack; "
-                    f"{self.cfg.name} has recurrent/enc-dec mixers")
-            assert not self.packed, \
-                "packed planes need fully-scanned attention+MoE stacks"
-            logits, state = T.make_prefill(self.cfg)(
-                self.params, {"tokens": tokens}, max_len)
-            return logits, state, pstate
         C = S if chunk is None else max(1, min(int(chunk), S))
         state = self.init_state(B, max_len)
+        if self.cfg.is_encoder_decoder:
+            if not extras or "audio_embeds" not in extras:
+                raise ValueError(
+                    f"{self.cfg.name} is encoder-decoder: prefill needs "
+                    "extras={'audio_embeds': (B, encoder_seq, d_model)}")
+            state["enc_kv"] = self.encode(extras["audio_embeds"])
         logits = None
         for lo in range(0, S, C):
             logits, state, pstate = self.prefill_chunk(
@@ -497,16 +514,19 @@ class Executor:
 
     # ------------------------------------------------------------------
     def generate_greedy(self, prompt, max_new_tokens: int, *,
-                        prefill_chunk: Optional[int] = None) -> np.ndarray:
+                        prefill_chunk: Optional[int] = None,
+                        extras=None) -> np.ndarray:
         """Greedy decode of one prompt (1, S) — the parity oracle loop
         shared by ``generate_plain`` and the tests.  Plain plane only
         (the offload engine drives the packed planes with stats/usage
-        accounting around the same Executor calls)."""
+        accounting around the same Executor calls).  ``extras`` carries
+        non-token conditioning (enc-dec ``audio_embeds``)."""
         assert not self.packed
         prompt = jnp.asarray(prompt)
         max_len = int(prompt.shape[1]) + max_new_tokens
         pre_logits, state, _ = self.prefill(prompt, max_len,
-                                            chunk=prefill_chunk)
+                                            chunk=prefill_chunk,
+                                            extras=extras)
         first = jnp.argmax(pre_logits[:, -1], axis=-1)
         out = [int(first[0])]
         tok = first[:, None].astype(jnp.int32)

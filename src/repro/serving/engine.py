@@ -53,9 +53,9 @@ from repro.data.pipeline import EOS
 from repro.obs import Telemetry, jit_cache_metrics
 from repro.runtime import (Admission, ChunkTask, Executor, StepPlan,
                            TokenBudgetPolicy)
-from repro.serving.kv_manager import KVSlotManager, PagedKVManager
+from repro.serving.kv_manager import KVSlotManager, StateManager
 from repro.serving.sampler import SamplerConfig, sample
-from repro.serving.scheduler import GenRequest, Scheduler
+from repro.serving.scheduler import GenRequest, Scheduler, admission_cost
 
 
 @dataclass
@@ -217,18 +217,15 @@ class ContinuousEngine:
         self.max_slots = max_slots
         self.eos_id = eos_id
         self.paged = kv_page is not None
+        # per-layer-kind state planes (DESIGN.md §12): the facade picks
+        # dense rings vs paged KV for the growing "kv" layers; recurrent
+        # layers keep fixed-size per-slot state either way and reserve
+        # ZERO pool pages (the degenerate one-page-per-slot case)
+        self.kv = StateManager.create(
+            cfg, max_slots, slot_len, kv_page=kv_page,
+            kv_pages_total=kv_pages_total, bucket=ragged_bucket)
         if self.paged:
-            maxp = -(-slot_len // kv_page)
-            self.kv = PagedKVManager(
-                cfg, max_slots, kv_page,
-                kv_pages_total or max_slots * maxp, maxp,
-                bucket=ragged_bucket)
             slot_len = self.kv.slot_len  # per-request cap, page-rounded
-        else:
-            if kv_pages_total is not None:
-                raise ValueError("kv_pages_total needs kv_page (it sizes "
-                                 "the paged pool)")
-            self.kv = KVSlotManager(cfg, max_slots, slot_len)
         self.slot_len = slot_len
         self.sched = Scheduler(max_slots, policy)
         self.prefill_chunk = prefill_chunk
@@ -258,14 +255,20 @@ class ContinuousEngine:
         # greedy decode folds argmax into the jitted step and feeds the
         # token straight back on-device — the host only sees (B,) ints
         self._greedy = self.sampler.kind == "greedy"
-        # all-SWA stacks roll their window inside the slot, so a request
-        # may decode past slot_len; anything else must fit the slot ring.
-        # Paged slots never roll (pages are position-indexed), so every
-        # request must fit its page reservation there.
-        mixers = {parse_block(k)[0] for k in cfg.block_pattern}
-        self._unbounded = (not self.paged and mixers == {"swa"}
-                           and cfg.sliding_window
-                           and slot_len >= cfg.sliding_window)
+        # request length cap: only GROWING kv planes consume positions.
+        # All-SWA stacks roll their window inside the slot, so a request
+        # may decode past slot_len; a pure-recurrent stack (xlstm) has
+        # no growing plane at all, so NO request ever outgrows its slot.
+        # Anything else must fit the slot ring; paged slots never roll
+        # (pages are position-indexed), so every request must fit its
+        # page reservation there.
+        kv_mixers = {sp.mixer for sp in cfg.state_planes() if sp.grows}
+        self._unbounded = (not self.paged
+                           and (not kv_mixers
+                                or (kv_mixers == {"swa"}
+                                    and cfg.sliding_window
+                                    and slot_len >= cfg.sliding_window)))
+        self._has_rec = cfg.has_recurrent_layers
         self.tokens = np.zeros((max_slots, 1), np.int32)
         self.step_count = 0
         self._rng = jax.random.key(seed)
@@ -311,6 +314,13 @@ class ContinuousEngine:
                 raise ValueError(
                     "draft-and-verify decoding is greedy-only: the "
                     "acceptance rule compares the target's argmax stream")
+            if self._has_rec and (self.paged or offload is not None):
+                raise ValueError(
+                    f"draft-and-verify on {cfg.name!r} needs the dense "
+                    f"non-offloaded engine: recurrent carries roll back "
+                    f"by snapshot-and-restore of the pre-round row state, "
+                    f"which the paged page-table trim and the packed "
+                    f"offload step don't carry")
             # a wrapped ring cannot roll back: a rejected verify-chunk
             # write would overwrite the live entry W positions back.
             # Bound every request to the narrowest ring width instead of
@@ -348,10 +358,25 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 32, on_token=None,
-               on_finish=None, temperature: Optional[float] = None
-               ) -> GenRequest:
+               on_finish=None, temperature: Optional[float] = None,
+               extras: Optional[dict] = None) -> GenRequest:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size > 0, "empty prompt"
+        if self.cfg.is_encoder_decoder:
+            if not extras or "audio_embeds" not in extras:
+                raise ValueError(
+                    f"{self.cfg.name} is encoder-decoder: submit() needs "
+                    f"extras={{'audio_embeds': (S_e, d_model)}} — encoded "
+                    f"once at admission into the read-only shared "
+                    f"encoder-KV plane (DESIGN.md §12)")
+            ae = np.asarray(extras["audio_embeds"], np.float32)
+            if ae.ndim == 2:
+                ae = ae[None]
+            if ae.shape[0] != 1 or ae.shape[1] != self.cfg.encoder_seq:
+                raise ValueError(
+                    f"audio_embeds must be (S_e={self.cfg.encoder_seq}, "
+                    f"d_model) for one request; got {ae.shape}")
+            extras = dict(extras, audio_embeds=ae)
         if temperature is not None and self._greedy:
             raise ValueError(
                 "per-request temperature needs a stochastic sampler; this "
@@ -370,7 +395,8 @@ class ContinuousEngine:
                 f"positions > {detail}")
         req = GenRequest(prompt=prompt, max_new_tokens=max_new_tokens,
                          arrival=self.step_count, on_token=on_token,
-                         on_finish=on_finish, temperature=temperature)
+                         on_finish=on_finish, temperature=temperature,
+                         extras=extras)
         self.sched.submit(req)
         self.obs.req_submitted(req.rid, self.step_count)
         return req
@@ -402,13 +428,25 @@ class ContinuousEngine:
         while self.kv.n_free and self.sched.has_waiting:
             if self.paged:
                 idx, cand = self.sched.peek_next(self.usage)
-                need = len(cand.prompt) + cand.max_new_tokens
+                # per-arch admission cost (scheduler.admission_cost):
+                # only growing kv planes claim pool positions — a pure-
+                # recurrent stack reserves ZERO pages however long the
+                # request runs, so its admission can never stall on the
+                # pool (only on free slots)
+                need = admission_cost(self.cfg, len(cand.prompt),
+                                      cand.max_new_tokens).kv_positions
                 if not self.kv.can_admit(need):
                     break
                 req = self.sched.pop_at(idx)
                 self.obs.req_admitted(req.rid, self.step_count - req.arrival)
                 slot = self.kv.allocate(req.rid, need)
                 req.slot = slot
+                if self.cfg.is_encoder_decoder:
+                    # admission-time encode: the shared encoder-KV plane
+                    # is written once into the slot and only READ by
+                    # every decode step after (never scattered to)
+                    self.kv.write_enc_kv(
+                        slot, self._exec.encode(req.extras["audio_embeds"]))
                 # no accumulator state: chunks write the slot's pages
                 self._admissions.append(Admission(
                     rid=req.rid, slot=slot, total=len(req.prompt),
@@ -418,9 +456,15 @@ class ContinuousEngine:
             self.obs.req_admitted(req.rid, self.step_count - req.arrival)
             slot = self.kv.allocate(req.rid)
             req.slot = slot
+            state = self.kv.new_row_state()
+            if self.cfg.is_encoder_decoder:
+                # B=1 encode at admission; installed into the slot with
+                # the rest of the row state by write_prefill
+                state["enc_kv"] = self._exec.encode(
+                    req.extras["audio_embeds"])
             self._admissions.append(Admission(
                 rid=req.rid, slot=slot, total=len(req.prompt),
-                state=self.kv.new_row_state(), req=req))
+                state=state, req=req))
 
     def _run_chunks(self, chunks) -> List[GenRequest]:
         """Execute this step's prefill chunks; complete admissions whose
@@ -724,6 +768,16 @@ class ContinuousEngine:
             if self._draft_rid[req.slot] != req.rid:
                 self._draft_admit(req)
         props = self._draft_propose(reqs, k_round)
+        rec_snaps = {}
+        if self._has_rec:
+            # recurrent carries cannot roll back by a pos reset — the
+            # verify chunk FOLDS rejected tokens into the fixed-size
+            # state.  Mirror the paged page-table trim with the rec
+            # plane's own trivial preemption primitive: snapshot each
+            # row's pre-round state now, restore + replay the accepted
+            # prefix after the verdict (DESIGN.md §12)
+            for req in reqs:
+                rec_snaps[req.slot] = self.kv.snapshot(req.slot)
         chunk = np.zeros((self.max_slots, C), np.int32)
         for req in reqs:
             chunk[req.slot, 0] = self.tokens[req.slot, 0]
@@ -794,8 +848,22 @@ class ContinuousEngine:
                 # prompt + generated minus the one un-fed last token —
                 # exactly where non-speculative decode would stand
                 self.tokens[r, 0] = req.generated[-1]
-                self.kv.truncate(
-                    r, len(req.prompt) + len(req.generated) - 1)
+                if self._has_rec:
+                    # restore the pre-round snapshot and replay the
+                    # accepted feeds ONE TOKEN AT A TIME: C=1 steps are
+                    # the plain engine's exact programs, so the restored
+                    # carries (and any kv rings riding along) land
+                    # bitwise where non-speculative decode would stand
+                    # — a C-wide replay folds matmuls differently at
+                    # the last partial chunk and drifts ~1e-7
+                    snap = rec_snaps[r]
+                    for j in range(len(emitted)):
+                        _, snap, _, _ = self._exec.decode(
+                            snap, jnp.asarray(chunk[r:r + 1, j:j + 1]))
+                    self.kv.restore(snap, r)
+                else:
+                    self.kv.truncate(
+                        r, len(req.prompt) + len(req.generated) - 1)
                 self._draft_consumed[r] += min(a, k_round - 1)
         if self.offload is not None:
             hits, spec_hits, demand, spec_l = (

@@ -39,7 +39,15 @@ from repro.models import transformer as T
 
 
 def _write_slot(big, small, i):
-    """Scatter a B=1 decode state into row ``i`` of the slotted state."""
+    """Scatter a B=1 decode state into row ``i`` of the slotted state.
+
+    Plane-agnostic (DESIGN.md §12): ``stack`` leaves — ring KV *and*
+    fixed-size recurrent state alike — carry batch at axis 1 under the
+    scan axis, ``tail`` leaves at axis 0, so one tree-map covers every
+    layer kind.  The shared encoder-KV plane (enc-dec decoders) carries
+    batch at axis 1 under the layer axis; its ``pos`` is batch-free
+    (every row's encoder output spans the same positions) and is never
+    written."""
     out = dict(big)
     out["stack"] = [jax.tree.map(lambda b, s: b.at[:, i].set(s[:, 0]), bs, ss)
                     for bs, ss in zip(big["stack"], small["stack"])]
@@ -48,6 +56,38 @@ def _write_slot(big, small, i):
     # small pos is a scalar (unpadded prefill) or (1,) (padded prefill)
     out["pos"] = big["pos"].at[i].set(
         jnp.reshape(jnp.asarray(small["pos"]), (-1,))[0].astype(jnp.int32))
+    if "enc_kv" in big:
+        ek, sk = big["enc_kv"], small["enc_kv"]
+        out["enc_kv"] = dict(ek,
+                             k=ek["k"].at[:, i].set(sk["k"][:, 0]),
+                             v=ek["v"].at[:, i].set(sk["v"][:, 0]))
+    return out
+
+
+def _read_slot(big, i):
+    """Gather row ``i`` of the slotted state into a B=1 state — the exact
+    inverse of :func:`_write_slot`.  This is the snapshot half of the
+    recurrent speculative-rollback protocol (DESIGN.md §12): fixed-size
+    state cannot be rolled back by a pos reset (the carry has already
+    folded the rejected tokens in), so the engine snapshots the row
+    before a verify round and restores + replays on rejection."""
+    out = dict(big)
+    out["stack"] = [jax.tree.map(
+        lambda b: jax.lax.dynamic_slice_in_dim(b, i, 1, axis=1), bs)
+        for bs in big["stack"]]
+    out["tail"] = [jax.tree.map(
+        lambda b: jax.lax.dynamic_slice_in_dim(b, i, 1, axis=0), bt)
+        for bt in big["tail"]]
+    out["pos"] = jax.lax.dynamic_slice(big["pos"], (i,), (1,))
+    if "enc_kv" in big:
+        ek = big["enc_kv"]
+        out["enc_kv"] = dict(
+            ek,
+            k=jax.lax.dynamic_slice_in_dim(ek["k"], i, 1, axis=1),
+            v=jax.lax.dynamic_slice_in_dim(ek["v"], i, 1, axis=1))
+    if "pages" in big:
+        out["pages"] = jax.lax.dynamic_slice_in_dim(big["pages"], i, 1,
+                                                    axis=0)
     return out
 
 
@@ -55,11 +95,6 @@ class KVSlotManager:
     """Free-list over the batch axis of one preallocated decode state."""
 
     def __init__(self, cfg: ModelConfig, n_slots: int, slot_len: int):
-        if not cfg.attention_only_stack:
-            raise ValueError(
-                f"continuous batching supports causal-attention stacks; "
-                f"{cfg.name} has mixers that keep cross-token state "
-                f"(or an encoder) that slot writes cannot isolate")
         self.cfg = cfg
         self.n_slots = n_slots
         self.slot_len = slot_len
@@ -75,6 +110,7 @@ class KVSlotManager:
         # donate the big state: the write is a pure row update, so XLA
         # reuses the (KV-stack-sized) buffers instead of copying them
         self._write = jax.jit(_write_slot, donate_argnums=0)
+        self._read = jax.jit(_read_slot)
 
     # ------------------------------------------------------------------
     @property
@@ -134,13 +170,31 @@ class KVSlotManager:
     def write_prefill(self, small_state, slot: int) -> None:
         """Install a prefilled B=1 state (``max_len == slot_len``) into
         ``slot``; the request's remaining KV budget is slot_len − pos."""
-        kshape = small_state["stack"][0]["kv"]["k"].shape \
-            if small_state["stack"] and "kv" in small_state["stack"][0] else None
-        if kshape is not None and kshape[2] != self.state["stack"][0]["kv"]["k"].shape[2]:
-            raise ValueError(
-                f"prefill state width {kshape[2]} != slot width "
-                f"{self.state['stack'][0]['kv']['k'].shape[2]}; prefill with "
-                f"max_len == slot_len")
+        # width check against the first layer that carries a ring KV
+        # plane (hybrids may lead with recurrent blocks, whose fixed-size
+        # state has no width to check)
+        for bs, ss in zip(self.state["stack"], small_state["stack"]):
+            if "kv" in ss:
+                if ss["kv"]["k"].shape[2] != bs["kv"]["k"].shape[2]:
+                    raise ValueError(
+                        f"prefill state width {ss['kv']['k'].shape[2]} != "
+                        f"slot width {bs['kv']['k'].shape[2]}; prefill "
+                        f"with max_len == slot_len")
+                break
+        self.state = self._write(self.state, small_state, slot)
+
+    # ------------------------------------------------------------------
+    def snapshot(self, slot: int):
+        """B=1 copy of the slot's full state (every plane: rings, rec,
+        enc-KV row, pos) — the pre-round snapshot of the speculative
+        rollback protocol for stacks with fixed-size recurrent state
+        (DESIGN.md §12).  O(slot) device copy; taken only when the config
+        actually has non-attention planes."""
+        return self._read(self.state, slot)
+
+    def restore(self, small_state, slot: int) -> None:
+        """Write a :meth:`snapshot` (or a replayed continuation of one)
+        back into ``slot`` — the restore half of speculative rollback."""
         self.state = self._write(self.state, small_state, slot)
 
     def remaining(self, slot: int) -> int:
@@ -157,7 +211,10 @@ class KVSlotManager:
         so the attention validity mask already hides them, and the next
         real token overwrites the same ring slot.  Valid only while the
         ring has never wrapped (bounded mode), which the speculative
-        path guarantees."""
+        path guarantees.  Fixed-size recurrent planes CANNOT be rolled
+        back this way (the carry already folded the rejected tokens) —
+        the engine pairs this with :meth:`snapshot` / :meth:`restore`
+        for such stacks (DESIGN.md §12)."""
         assert 0 <= n_tokens <= int(self.state["pos"][slot]), \
             f"truncate({slot}, {n_tokens}) would extend, not roll back"
         self.state = dict(
@@ -298,12 +355,13 @@ class PagedKVManager:
     def __init__(self, cfg: ModelConfig, n_slots: int, page_size: int,
                  pages_total: int, max_pages_per_slot: int, *,
                  bucket: bool = True):
-        if not cfg.attention_only_stack:
-            raise ValueError(
-                f"paged KV supports causal-attention stacks; {cfg.name} "
-                f"has mixers that keep cross-token state that page writes "
-                f"cannot isolate")
         self.cfg = cfg
+        # per-layer-kind state planes (DESIGN.md §12): only layers whose
+        # plane GROWS with context hold pool pages.  A stack with no such
+        # layer (pure-recurrent, e.g. xlstm) reserves ZERO pages per
+        # request — its fixed-size state rides in the dense batch rows —
+        # so admission never gates on pool capacity it would never use.
+        self.has_kv = cfg.has_kv_layers
         self.n_slots = n_slots
         self.page_size = page_size
         self.max_pages = max_pages_per_slot
@@ -332,18 +390,27 @@ class PagedKVManager:
         return self._owner[slot]
 
     def can_admit(self, n_tokens: int) -> bool:
+        if not self.has_kv:
+            return bool(self._free)  # zero-page archs gate on slots only
         return (bool(self._free)
                 and self.pool.can_reserve(self.pool.pages_for(n_tokens)))
 
     def allocate(self, owner=None, n_tokens: int = 1) -> int:
-        """Claim a slot and reserve its worst-case page budget; the
-        slot's position resets to 0 (page writes start at ordinal 0)."""
+        """Claim a slot and reserve its worst-case page budget (zero
+        pages when no layer carries a growing KV plane); the slot's
+        position resets to 0 (page writes start at ordinal 0)."""
         slot = heapq.heappop(self._free)
-        self.pool.reserve(slot, n_tokens)
+        if self.has_kv:
+            self.pool.reserve(slot, n_tokens)
         self._owner[slot] = owner
         self._len[slot] = 0
         self.state = dict(self.state,
                           pos=self.state["pos"].at[slot].set(0))
+        # paged prefill chunks write IN PLACE (no install scatter), so a
+        # reused slot's fixed-size recurrent carries must reset here —
+        # KV pages get the same hygiene from the release-time ppos scrub
+        if self.cfg.has_recurrent_layers:
+            self._reset_rec(slot)
         return slot
 
     def release(self, slot: int) -> None:
@@ -364,6 +431,8 @@ class PagedKVManager:
     # ------------------------------------------------------------------
     def ensure(self, slot: int, n_tokens: int) -> None:
         """Grow the slot's page list to cover positions < n_tokens."""
+        if not self.has_kv:
+            return  # no growing plane — nothing to cover
         new = self.pool.ensure(slot, n_tokens)
         if new:
             base = len(self.pool.owned[slot]) - len(new)
@@ -391,7 +460,7 @@ class PagedKVManager:
         a property the spec tests assert literally."""
         assert n_tokens >= 0 and n_tokens <= self._len[slot], \
             f"truncate({slot}, {n_tokens}) would extend, not roll back"
-        freed = self.pool.trim(slot, n_tokens)
+        freed = self.pool.trim(slot, n_tokens) if self.has_kv else []
         if freed:
             base = len(self.pool.owned[slot])
             self._pages_np[slot, base: base + len(freed)] = -1
@@ -402,6 +471,27 @@ class PagedKVManager:
                           pos=self.state["pos"].at[slot].set(n_tokens))
 
     # ------------------------------------------------------------------
+    def _reset_rec(self, slot: int) -> None:
+        """Zero one slot's recurrent ("rec") planes across the layer
+        stack — the rec plane's analogue of the page scrub: without it a
+        reused slot's prefill folds the EVICTED request's final carries
+        into the new prompt (DESIGN.md §12)."""
+        def make():
+            def zrow(d, idx):  # stack leaves carry a leading period axis
+                return dict(d, rec=jax.tree.map(
+                    lambda a: a.at[idx].set(jnp.zeros((), a.dtype)),
+                    d["rec"]))
+
+            def z(state, i):
+                stack = [zrow(d, (slice(None), i)) if "rec" in d else d
+                         for d in state["stack"]]
+                tail = [zrow(d, i) if "rec" in d else d
+                        for d in state["tail"]]
+                return dict(state, stack=stack, tail=tail)
+            return jax.jit(z, donate_argnums=0)
+        fn = T.cached_jit(("reset_rec_row", self.cfg), make)
+        self.state = fn(self.state, slot)
+
     def pages_dev(self):
         if self._dirty:
             self._pages_dev = jnp.asarray(self._pages_np)
@@ -440,6 +530,23 @@ class PagedKVManager:
         sliced, never written) page table is replaced by the full
         host-authoritative one."""
         self.state = dict(new_state, pages=self.pages_dev())
+
+    def write_enc_kv(self, slot: int, enc_kv) -> None:
+        """Install a request's admission-time encoder-KV (B=1 layout from
+        ``transformer.encode_enc_kv``) into its row of the shared
+        read-only plane.  Paged admission writes prompt chunks straight
+        into the big state (``decode_step(row=...)``), so the enc-KV row
+        must be resident BEFORE the first chunk runs (DESIGN.md §12)."""
+        def make():
+            def w(state, enc, i):
+                ek = state["enc_kv"]
+                return dict(state, enc_kv=dict(
+                    ek,
+                    k=ek["k"].at[:, i].set(enc["k"][:, 0]),
+                    v=ek["v"].at[:, i].set(enc["v"][:, 0])))
+            return jax.jit(w, donate_argnums=0)
+        fn = T.cached_jit(("write_enc_kv", self.cfg), make)
+        self.state = fn(self.state, enc_kv, slot)
 
     # ------------------------------------------------------------------
     def _scrub(self, page_ids: List[int]) -> None:
@@ -502,3 +609,40 @@ class PagedKVManager:
     def stats(self) -> Dict[str, object]:
         """Legacy flat projection of :meth:`metrics` (``kv_*`` keys)."""
         return {f"kv_{k}": v for k, v in self.metrics().items()}
+
+
+# ======================================================================
+class StateManager:
+    """Facade over the slot-state manager families (DESIGN.md §12).
+
+    One construction point that reads the config's ``state_planes()``
+    descriptor and returns the right manager for its mix of layer kinds:
+
+    * dense rings + fixed-size recurrent rows (+ the shared enc-KV
+      plane) -> :class:`KVSlotManager`, which is plane-agnostic: it
+      scatters/gathers whole slot rows, whatever planes they hold;
+    * block-paged KV (``kv_page`` set) -> :class:`PagedKVManager`, whose
+      page pool only ever holds pages for GROWING planes — a config with
+      none (pure-recurrent stacks) reserves zero pages per request and
+      gates admission on slots alone.
+
+    Both families share the slot protocol the engine consumes
+    (allocate / release / truncate / remaining / metrics), so the engine
+    never branches on arch_type — only on which family it got.
+    """
+
+    @staticmethod
+    def create(cfg: ModelConfig, n_slots: int, slot_len: int, *,
+               kv_page: Optional[int] = None,
+               kv_pages_total: Optional[int] = None,
+               bucket: bool = True):
+        if kv_page is None:
+            if kv_pages_total is not None:
+                raise ValueError("kv_pages_total needs kv_page (it sizes "
+                                 "the paged pool)")
+            return KVSlotManager(cfg, n_slots, slot_len)
+        max_pages = -(-slot_len // kv_page)
+        pages_total = (kv_pages_total if kv_pages_total is not None
+                       else n_slots * max_pages)
+        return PagedKVManager(cfg, n_slots, kv_page, pages_total,
+                              max_pages, bucket=bucket)

@@ -54,6 +54,10 @@ class GenRequest:
     # per-request sampling temperature (None = the engine sampler's
     # default); applied row-wise by serving/sampler.sample
     temperature: Optional[float] = None
+    # non-token conditioning consumed at admission (never per step):
+    # enc-dec archs require extras["audio_embeds"] (S_e, D) — encoded
+    # once into the read-only shared encoder-KV plane (DESIGN.md §12)
+    extras: Optional[dict] = None
     # filled lazily by ExpertOverlapPolicy (per-layer predicted expert ids)
     _pred_experts: Optional[List[np.ndarray]] = None
 
@@ -67,6 +71,62 @@ class GenRequest:
         self.finish_reason = reason
         if self.on_finish is not None:
             self.on_finish(self)
+
+
+# ----------------------------------------------------------------------
+# Per-arch admission cost (DESIGN.md §12).  Admitting a request claims
+# sequence state on three distinct planes, and each plane bills
+# differently:
+#
+#   kv_positions    growing per-position K/V — the ONLY plane a PagePool
+#                   reserves for.  swa layers are clamped to their window
+#                   (the ring never holds more), and a pure-recurrent
+#                   stack needs ZERO positions no matter how long the
+#                   request runs;
+#   rec_state_bytes fixed-size recurrent carries (rglru/mlstm/slstm) —
+#                   flat in both prompt_len and max_new_tokens, paid once
+#                   per slot (the degenerate one-page-per-slot case);
+#   enc_kv_bytes    read-only shared encoder KV, computed once at
+#                   admission from extras["audio_embeds"] and only ever
+#                   read afterwards — flat in decode length.
+@dataclass(frozen=True)
+class AdmissionCost:
+    """State footprint one request claims at admission, by plane."""
+
+    kv_positions: int      # growing-KV positions the engine must reserve
+    kv_positions_windowed: int  # same, with swa layers clamped to window
+    rec_state_bytes: int   # fixed recurrent state (flat in context)
+    enc_kv_bytes: int      # shared read-only encoder KV (flat in decode)
+
+
+def admission_cost(cfg: ModelConfig, prompt_len: int,
+                   max_new_tokens: int) -> AdmissionCost:
+    """What admitting one request costs, per state plane (DESIGN.md §12).
+
+    The engine keys page reservation off ``kv_positions`` (zero for
+    pure-recurrent stacks — that is what lets xlstm admit without a
+    PagePool grant) and the cost model keys decode arithmetic off the
+    flat ``rec_state_bytes`` / ``enc_kv_bytes`` terms.
+    """
+    from repro.core.cost_model import recurrent_state_bytes
+
+    need = prompt_len + max_new_tokens
+    kv_pos = 0
+    kv_pos_win = 0
+    for sp in cfg.state_planes():
+        if sp.plane == "kv":
+            kv_pos = max(kv_pos, need)
+            kv_pos_win = max(kv_pos_win,
+                             min(need, sp.window) if sp.window else need)
+    rec_bytes = recurrent_state_bytes(cfg)
+    enc_bytes = 0
+    if cfg.is_encoder_decoder:
+        enc_bytes = (2 * cfg.n_layers * cfg.encoder_seq * cfg.n_kv_heads
+                     * cfg.head_dim * jnp.dtype(cfg.dtype).itemsize)
+    return AdmissionCost(kv_positions=kv_pos,
+                         kv_positions_windowed=kv_pos_win,
+                         rec_state_bytes=rec_bytes,
+                         enc_kv_bytes=enc_bytes)
 
 
 # ----------------------------------------------------------------------

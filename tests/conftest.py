@@ -19,7 +19,7 @@ from repro.models import transformer as T
 # those invariants
 PROPERTY_MODULES = ("test_lru.py", "test_moe.py", "test_paged_kv.py",
                     "test_quant.py", "test_recurrent.py", "test_runtime.py",
-                    "test_spec_decode.py")
+                    "test_spec_decode.py", "test_zoo_serving.py")
 _skipped_property_tests = []
 
 

@@ -60,11 +60,32 @@ def make_prompts(cfg, lens: Sequence[int], seed: int = 1
             for n in lens]
 
 
-def oracle_streams(params, cfg, prompts, max_news) -> List[List[int]]:
+def make_extras(cfg, n: int, seed: int = 3) -> List[dict]:
+    """Per-request admission extras: enc-dec archs get a seeded
+    ``audio_embeds`` frontend output each; everything else gets None."""
+    if not cfg.is_encoder_decoder:
+        return [None] * n
+    rng = np.random.default_rng(seed)
+    return [{"audio_embeds": rng.standard_normal(
+        (cfg.encoder_seq, cfg.d_model)).astype(np.float32)}
+        for _ in range(n)]
+
+
+def oracle_streams(params, cfg, prompts, max_news,
+                   extras=None) -> List[List[int]]:
     """The B=1 ``generate_plain`` greedy stream per request — the
     reference every engine/plane/layout must reproduce bitwise."""
-    return [generate_plain(params, cfg, p[None], m)[0].tolist()
-            for p, m in zip(prompts, max_news)]
+    extras = extras or [None] * len(prompts)
+
+    def batched(e):  # the B=1 oracle wants a leading batch axis
+        if e is None:
+            return None
+        return {"audio_embeds": np.asarray(e["audio_embeds"],
+                                           np.float32)[None]}
+
+    return [generate_plain(params, cfg, p[None], m,
+                           extras=batched(e))[0].tolist()
+            for p, m, e in zip(prompts, max_news, extras)]
 
 
 def assert_tokens_equal(got, want, label: str) -> None:
@@ -108,13 +129,15 @@ def offload_plane_engines(params, qdeq, cfg, spec
 # ContinuousEngine driver
 def run_continuous(params, cfg, prompts, max_news, *, max_slots: int = 2,
                    slot_len: int = 64, eos_id=None, max_steps: int = 800,
-                   **kw):
+                   extras=None, **kw):
     """Build, submit, drain -> (per-request token lists, engine).
     Asserts every request actually finished (a hung engine must fail
     the parity test, not time out silently)."""
     eng = ContinuousEngine(params, cfg, max_slots=max_slots,
                            slot_len=slot_len, eos_id=eos_id, **kw)
-    reqs = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+    extras = extras or [None] * len(prompts)
+    reqs = [eng.submit(p, m, extras=e)
+            for p, m, e in zip(prompts, max_news, extras)]
     eng.run(max_steps=max_steps)
     unfinished = [r.rid for r in reqs if r.state != "finished"]
     assert not unfinished, f"requests never finished: {unfinished}"

@@ -98,10 +98,20 @@ def test_slot_capacity_enforced(tiny_moe_cfg, tiny_moe_params):
         eng.submit(np.arange(1, 10, dtype=np.int32), 8)  # 9 + 8 > 16
 
 
-def test_kv_manager_rejects_recurrent():
+def test_kv_manager_recurrent_slots():
+    """Per-layer-kind state planes (DESIGN.md §12): the dense slot
+    manager carries recurrent stacks — fixed-size carries slot exactly
+    like rings (the degenerate one-page-per-slot case), and the
+    snapshot/restore pair round-trips a row bitwise (the speculative
+    rollback primitive for rec planes)."""
     cfg = get_config("recurrentgemma-9b").reduced()
-    with pytest.raises(ValueError):
-        KVSlotManager(cfg, 2, 32)
+    mgr = KVSlotManager(cfg, 2, 32)
+    slot = mgr.allocate("r0")
+    snap = mgr.snapshot(slot)
+    mgr.restore(snap, slot)
+    back = mgr.snapshot(slot)
+    for a, b in zip(jax.tree.leaves(snap), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 # ----------------------------------------------------------------------

@@ -308,13 +308,29 @@ def test_decode_step_row_chunks_bitwise(tiny_moe_cfg, tiny_moe_params):
     assert np.asarray(paged["pos"]).tolist() == [0, 7]  # only row 1 moved
 
 
-def test_paged_state_rejects_recurrent():
+def test_paged_state_recurrent_planes_stay_dense():
+    """Per-layer-kind state planes (DESIGN.md §12): a paged hybrid keeps
+    its recurrent layers' fixed-size carries in the dense batch layout —
+    only GROWING kv planes take the page-pool layout — and a
+    pure-recurrent stack's paged manager reserves ZERO pool pages."""
     cfg = get_config("recurrentgemma-9b").reduced()
-    with pytest.raises(ValueError, match="attention"):
-        T.init_decode_state(cfg, 2, 16, kv_pages=4, kv_page=4,
-                            kv_max_pages=4)
-    with pytest.raises(ValueError, match="attention"):
-        PagedKVManager(cfg, 2, 4, 8, 4)
+    st = T.init_decode_state(cfg, 2, 16, kv_pages=4, kv_page=4,
+                             kv_max_pages=4)
+    kinds = [k.split("+")[0] for k in cfg.block_pattern]
+    for kind, d in zip(kinds, st["stack"]):
+        if kind == "rglru":
+            assert "rec" in d and "kv" not in d
+            assert d["rec"]["h"].shape[1] == 2  # (periods, B, ...)
+        if kind == "swa":
+            assert "kv" in d and d["kv"]["kp"].shape[1] == 4  # pool pages
+    mgr = PagedKVManager(cfg, 2, 4, 8, 4)
+    assert mgr.has_kv  # hybrid: swa layers still page
+    xcfg = get_config("xlstm-1.3b").reduced()
+    xmgr = PagedKVManager(xcfg, 2, 4, 2, 4)
+    assert not xmgr.has_kv
+    assert xmgr.can_admit(10 ** 6)  # pool never gates pure-rec admission
+    s = xmgr.allocate("r0", 10 ** 6)
+    assert xmgr.pool.owned.get(s, []) == []  # zero pages reserved
 
 
 # ======================================================================
@@ -472,3 +488,60 @@ def test_cost_model_monotone_in_context(tiny_moe_cfg):
     gcfg = cfg.replace(block_pattern=("attn+moe",), sliding_window=None)
     assert kv_read_bytes_per_token(gcfg, 10 * w) > \
         kv_read_bytes_per_token(gcfg, w)
+
+
+def test_cost_model_recurrent_flat_in_context():
+    """The rec plane holds O(1) state, so a pure-recurrent stack's
+    predicted decode cost must not move with context length AT ALL
+    (DESIGN.md §12) — the structural opposite of the attention tax
+    above."""
+    from repro.configs import get_config
+    from repro.core.cost_model import (HARDWARE, TokenStats,
+                                       kv_read_bytes_per_token,
+                                       recurrent_state_bytes,
+                                       tokens_per_second)
+    cfg = get_config("xlstm-1.3b").reduced()
+    stats = TokenStats(0.0, 0.0, 0.0, 0.0)
+    hw = HARDWARE["t4"]
+    assert recurrent_state_bytes(cfg) > 0
+    assert kv_read_bytes_per_token(cfg, 10000) == 0.0
+    base = tokens_per_second(cfg, hw, stats, expert_bits=16, attn_bits=16)
+    for ctx in (128, 2048, 10000):
+        assert tokens_per_second(cfg, hw, stats, expert_bits=16,
+                                 attn_bits=16, context_len=ctx) == base
+    # hybrid check: recurrentgemma's swa layer makes cost grow up to its
+    # window then plateau, while the rec layers contribute a flat term
+    hcfg = get_config("recurrentgemma-9b").reduced()
+    assert recurrent_state_bytes(hcfg) > 0
+    w = hcfg.sliding_window
+    assert kv_read_bytes_per_token(hcfg, w // 2) < \
+        kv_read_bytes_per_token(hcfg, w)
+    assert kv_read_bytes_per_token(hcfg, 10 * w) == \
+        kv_read_bytes_per_token(hcfg, w)
+
+
+def test_cost_model_encoder_kv_and_dense_terms():
+    """xattn layers pay the precomputed encoder-KV read every token even
+    at zero decoded context; dense archs are the E=1 case — they cost
+    out without a MoE spec and refuse the naive-offload model."""
+    import pytest as _pytest
+
+    from repro.configs import get_config
+    from repro.core.cost_model import (HARDWARE, TokenStats,
+                                       kv_read_bytes_per_token,
+                                       tokens_per_second)
+    wcfg = get_config("whisper-medium").reduced()
+    per_pos = 2 * wcfg.n_kv_heads * wcfg.head_dim * 2.0  # 16-bit K+V
+    n_x = sum(1 for k in wcfg.layer_kinds() if k.startswith("xattn"))
+    assert kv_read_bytes_per_token(wcfg, 0) == \
+        n_x * wcfg.encoder_seq * per_pos
+    # decoded self-KV stacks on top of the constant encoder term
+    assert kv_read_bytes_per_token(wcfg, 64) == \
+        kv_read_bytes_per_token(wcfg, 0) + n_x * 64 * per_pos
+    dcfg = get_config("stablelm-1.6b").reduced()
+    stats = TokenStats(0.0, 0.0, 0.0, 0.0)
+    hw = HARDWARE["t4"]
+    assert tokens_per_second(dcfg, hw, stats, expert_bits=16,
+                             attn_bits=16) > 0
+    with _pytest.raises(ValueError, match="dense"):
+        tokens_per_second(dcfg, hw, stats, expert_bits=16, naive=True)

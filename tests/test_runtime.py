@@ -91,28 +91,30 @@ def test_chunked_prefill_bitwise_packed(tiny_moe_cfg, packed_setup, plane):
     _assert_states_bitwise(whole_s, os_)
 
 
-def test_recurrent_stacks_reject_chunks_but_prefill_whole():
-    """Recurrent mixers fold ONE token per decode call: a C > 1 chunk
-    must raise (it would silently drop tokens), while whole-prompt
-    prefill falls back to the forward_train path and generate_plain
-    stays correct for these archs."""
+def test_recurrent_stacks_prefill_chunked_bitwise():
+    """Recurrent mixers run the SAME chunked prefill program as
+    attention stacks (DESIGN.md §12): the chunk forms compose their
+    carries exactly, so whole-prompt prefill and any chunking of it
+    agree bitwise on every state plane — the chunkwise==recurrent
+    guarantee of tests/test_recurrent.py lifted to the executor.
+    (Chunk sizes avoid a size-1 tail: the dense MLP's S=1 GEMV path
+    folds differently from its GEMM path at ~1e-7, so only C >= 2
+    chunkings of MLP-bearing stacks are bitwise.)"""
     cfg = get_config("recurrentgemma-9b").reduced()
     params = T.init_model(jax.random.key(2), cfg)
     prompt = _prompt(cfg, 7, seed=2)
     ex = Executor(params, cfg)
-    with pytest.raises(ValueError, match="attention"):
-        ex.prefill(prompt, 16, chunk=3)
-    # whole-prompt prefill (fallback) + decode == the pre-runtime oracle
-    logits, state, _ = ex.prefill(prompt, 16)
-    ref_logits, ref_state = T.make_prefill(cfg)(
-        params, {"tokens": jnp.asarray(prompt)}, 16)
-    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref_logits))
+    whole_l, whole_s, _ = ex.prefill(prompt, 16)
+    for chunk in (4, 7):  # 7 -> 4+3 and whole; no size-1 tails
+        l, s, _ = ex.prefill(prompt, 16, chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(whole_l[:, -1]),
+                                      np.asarray(l[:, -1]))
+        _assert_states_bitwise(whole_s, s)
+    # ... and generate_plain is prefill-chunk invariant at token level
     out = generate_plain(params, cfg, prompt, 5)
     assert out.shape == (1, 5)
-    # the scanned step itself also rejects C > 1 for these stacks
-    with pytest.raises(ValueError, match="attention"):
-        T.decode_step(params, cfg, state, jnp.asarray(prompt[:, :3]),
-                      moe_mode="gather")
+    out_c = generate_plain(params, cfg, prompt, 5, prefill_chunk=4)
+    assert (out == out_c).all()
 
 
 def test_generate_plain_prefill_chunk_invariant(tiny_moe_cfg,

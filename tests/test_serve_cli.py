@@ -14,7 +14,7 @@ import pytest
 from repro.configs import get_config
 from repro.configs.base import OffloadSpec
 from repro.launch.serve import (build_parser, resolve_draft,
-                                resolve_offload_spec)
+                                resolve_offload_spec, resolve_top_k)
 
 
 def _spec_for(argv):
@@ -78,6 +78,49 @@ def test_draft_zero_tokens_is_real_ablation():
 def test_draft_default_and_explicit_k():
     assert resolve_draft("tiny-draft", None) == ("tiny-draft", 4)
     assert resolve_draft("tiny-draft", 1) == ("tiny-draft", 1)
+
+
+# ----------------------------------------------------------------------
+# --top-k-override (DESIGN.md §12's E=1 spectrum, served live): routing
+# to fewer experts per token than the arch default is the h2d ablation
+# knob, and it must obey the same None-vs-0 discipline as the flags above
+def test_top_k_override_unset_keeps_arch_default():
+    cfg = get_config("tiny-moe")
+    assert resolve_top_k(cfg, None) is cfg
+    args = build_parser().parse_args([])
+    assert args.top_k_override is None
+
+
+def test_top_k_override_zero_is_error_not_default():
+    # 0/negative must raise, NOT or-truthiness back to the arch top_k
+    cfg = get_config("tiny-moe")
+    with pytest.raises(ValueError, match=">= 1"):
+        resolve_top_k(cfg, 0)
+    with pytest.raises(ValueError, match=">= 1"):
+        resolve_top_k(cfg, -2)
+
+
+def test_top_k_override_applies_and_clamps():
+    cfg = get_config("tiny-moe")
+    assert resolve_top_k(cfg, 1).moe.top_k == 1
+    # can't route to more experts than the router scores: clamp down
+    assert resolve_top_k(cfg, 999).moe.top_k == cfg.moe.top_k
+    # only routing changes — expert population is untouched
+    assert resolve_top_k(cfg, 1).moe.num_experts == cfg.moe.num_experts
+
+
+def test_top_k_override_rejects_dense_arch():
+    with pytest.raises(ValueError, match="dense"):
+        resolve_top_k(get_config("stablelm-1.6b"), 1)
+
+
+def test_config_alias_for_arch():
+    # the zoo entry point: --config is the documented spelling, --arch
+    # the historical one; both land in args.arch
+    assert build_parser().parse_args(
+        ["--config", "xlstm-1.3b"]).arch == "xlstm-1.3b"
+    assert build_parser().parse_args(
+        ["--arch", "tiny-moe"]).arch == "tiny-moe"
 
 
 def test_draft_one_token_bitwise_end_to_end(monkeypatch, capsys):
