@@ -97,6 +97,34 @@ def resolve_draft(draft_config, num_draft_tokens):
     return draft_config, k
 
 
+def resolve_kv_features(prefix_cache, preemption, kv_host_pages):
+    """CLI prefix-cache / preemption flags -> ``(prefix_cache_pages,
+    preemption_bool, kv_host_pages)`` for the ContinuousEngine.
+
+    ``None`` means "flag not given"; 0 is a real value — ``--prefix-cache
+    0`` is the no-cache ablation and ``--kv-host-pages 0`` the
+    recompute-only-preemption ablation, and neither may silently fall
+    back to a default (the or-truthiness trap
+    :func:`resolve_offload_spec` guards; regression-tested in
+    ``tests/test_serve_cli.py``).
+    """
+    pc = 0 if prefix_cache is None else int(prefix_cache)
+    if pc < 0:
+        raise ValueError(f"--prefix-cache must be >= 0 pages (got {pc}); "
+                         f"0 disables the cache")
+    pre = preemption == "on"
+    if kv_host_pages is not None and not pre:
+        raise ValueError(
+            "--kv-host-pages sizes the swap pool preemption stages "
+            "pages into; add --preemption on (0 with preemption on is "
+            "the recompute-only ablation)")
+    hp = 0 if kv_host_pages is None else int(kv_host_pages)
+    if hp < 0:
+        raise ValueError(f"--kv-host-pages must be >= 0 (got {hp}); "
+                         f"0 means every preemption recomputes")
+    return pc, pre, hp
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", "--config", dest="arch", default="tiny-moe",
@@ -153,6 +181,25 @@ def build_parser() -> argparse.ArgumentParser:
                          "provisioning, max_slots * ceil(slot_len/"
                          "kv_page)); smaller pools gate admission on "
                          "actual KV need instead of slot count")
+    ap.add_argument("--prefix-cache", type=int, default=None,
+                    metavar="PAGES",
+                    help="radix prefix caching (DESIGN.md §13, needs "
+                         "--kv-page): keep up to PAGES immutable full "
+                         "pages of finished prompts; requests hitting a "
+                         "cached prefix adopt those pages and prefill "
+                         "only from the divergence point (0 disables — "
+                         "a real ablation, not a fall-back)")
+    ap.add_argument("--preemption", default="off", choices=["off", "on"],
+                    help="preempt-instead-of-refuse admission (DESIGN.md "
+                         "§13, needs --kv-page): reserve only the "
+                         "prompt's pages, swap the lowest-priority "
+                         "victim out when the pool runs dry, resume it "
+                         "bitwise later")
+    ap.add_argument("--kv-host-pages", type=int, default=None, metavar="N",
+                    help="host-side swap pool budget in pages (needs "
+                         "--preemption on): preempted KV stages d2h into "
+                         "it and back on resume; 0 drops KV and resumes "
+                         "by recompute (a real ablation)")
     ap.add_argument("--policy", default="overlap",
                     choices=["fcfs", "overlap"])
     ap.add_argument("--sampler", default="greedy",
@@ -238,6 +285,15 @@ def main():
     if args.kv_page is not None and not args.continuous:
         raise SystemExit("--kv-page targets the continuous engine's "
                          "slotted KV plane; add --continuous")
+    try:
+        prefix_pages, preempt, host_pages = resolve_kv_features(
+            args.prefix_cache, args.preemption, args.kv_host_pages)
+    except ValueError as e:
+        raise SystemExit(str(e))
+    if (prefix_pages or preempt) and not args.continuous:
+        raise SystemExit("--prefix-cache/--preemption target the "
+                         "continuous engine's paged KV plane; add "
+                         "--continuous --kv-page")
     if ((args.metrics_json is not None or args.trace is not None)
             and not (args.continuous or args.offload)):
         raise SystemExit("--metrics-json/--trace instrument the continuous "
@@ -349,6 +405,9 @@ def main():
                 seed=args.seed, offload=offload_eng,
                 kv_page=args.kv_page,
                 kv_pages_total=args.kv_pages_total,
+                prefix_cache_pages=prefix_pages,
+                preemption=preempt,
+                kv_host_pages=host_pages,
                 telemetry=telem,
                 draft_params=draft_params, draft_cfg=draft_cfg,
                 num_draft_tokens=draft_k)
@@ -400,6 +459,19 @@ def main():
                   f"demand + {s['offload_spec_loads']} spec loads, "
                   f"{s['offload_hits']} hits "
                   f"({s['offload_bytes_h2d']/1e6:.1f}MB h2d measured)")
+        if prefix_pages:
+            pm = eng.metrics()["prefix"]
+            print(f"[prefix] {pm['prefills_skipped']} prefills hit the "
+                  f"cache ({pm['hit_tokens']} prompt tokens skipped); "
+                  f"{pm['nodes']} pages indexed, {pm['evicted_pages']} "
+                  f"evicted (DESIGN.md §13)")
+        if preempt:
+            km = eng.metrics()["kv_host"]
+            print(f"[preempt] {km['preemptions']} preemptions, "
+                  f"{km['resumes']} resumes ({km['recomputes']} by "
+                  f"recompute); swap traffic "
+                  f"{(km['swap_out_bytes'] + km['swap_in_bytes'])/1e6:.1f}"
+                  f"MB over a {km['pages_total']}-page host pool")
         print_telemetry_summary(eng.obs)
         print_spec_summary(eng.obs)
         write_outputs(args, eng.obs, {
@@ -407,7 +479,8 @@ def main():
             "kv_layout": "paged" if args.kv_page is not None else "dense",
             "offloaded": offload_eng is not None,
             "timing": eng.obs.timing, "plane": eng._exec.plane,
-            "roofline": eng.obs.timing, "speculative": draft_k > 0})
+            "roofline": eng.obs.timing, "speculative": draft_k > 0,
+            "prefix_cache": prefix_pages > 0, "kv_host": preempt})
         return
 
     eng = ServeEngine(params, cfg, SamplerConfig(kind=args.sampler))

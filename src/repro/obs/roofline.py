@@ -55,6 +55,12 @@ class RooflineAccountant:
         self._wall_ns = 0
         self._steps = 0
         self._ctx_sum = 0.0
+        # cumulative (never windowed) prefix-reuse/preemption traffic
+        # (DESIGN.md §13): fed by the engine's swap/hit paths, reported
+        # at flush normalized by cumulative decode tokens
+        self._swap_bytes = 0
+        self._hit_tokens = 0
+        self._tokens_cum = 0
         g = registry.gauge
         self._g = {k: g("roofline", k) for k in
                    ("hw", "windows", "window_steps", "measured_tok_s",
@@ -62,7 +68,8 @@ class RooflineAccountant:
                     "measured_h2d_bytes_per_token",
                     "naive_h2d_bytes_per_token", "h2d_savings_ratio",
                     "context_len", "rec_state_bytes_per_token",
-                    "enc_kv_read_bytes_per_token")}
+                    "enc_kv_read_bytes_per_token",
+                    "kv_swap_bytes_per_token", "prefix_hit_tokens")}
         self._g["hw"].set(hw)
         self._g["window_steps"].set(self.window)
         self._g["windows"].set(0)
@@ -77,9 +84,21 @@ class RooflineAccountant:
         for k in ("measured_tok_s", "predicted_tok_s", "delta_ratio",
                   "measured_h2d_bytes_per_token",
                   "naive_h2d_bytes_per_token", "h2d_savings_ratio",
-                  "context_len"):
+                  "context_len", "kv_swap_bytes_per_token",
+                  "prefix_hit_tokens"):
             self._g[k].set(0.0)
         self._windows = 0
+
+    # ------------------------------------------------------------------
+    # prefix-reuse + preemption traffic (DESIGN.md §13) — cumulative
+    def add_swap_bytes(self, nbytes: int) -> None:
+        """One KV swap-out or swap-in staging transfer."""
+        self._swap_bytes += int(nbytes)
+
+    def add_prefix_hit(self, n_tokens: int) -> None:
+        """Prompt tokens whose prefill a cache hit skipped."""
+        self._hit_tokens += int(n_tokens)
+        self._g["prefix_hit_tokens"].set(self._hit_tokens)
 
     # ------------------------------------------------------------------
     def step(self, n_decode_tokens: int, wall_ns: int,
@@ -101,6 +120,9 @@ class RooflineAccountant:
             self._ctx_sum = 0.0
             return
         tokens, wall_s = self._tokens, self._wall_ns / 1e9
+        self._tokens_cum += tokens
+        self._g["kv_swap_bytes_per_token"].set(
+            self._swap_bytes / max(1, self._tokens_cum))
         ctx = self._ctx_sum / max(1, tokens)
         measured = tokens / wall_s
 

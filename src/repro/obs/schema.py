@@ -26,6 +26,12 @@ Metric names are ``namespace.key``.  Namespaces:
   when speculation is wired: per-round proposed/accepted histograms,
   cumulative acceptance rate, h2d bytes per accepted token —
   DESIGN.md §11).
+* ``prefix``   — radix prefix-cache accounting (collector; only when the
+  engine has a ``prefix_cache_pages`` budget): lookup/hit counters and
+  the index's node/page population (DESIGN.md §13).
+* ``kv_host``  — KV host-swap / preemption accounting (collector; only
+  when preemption is on): host pool occupancy, swap traffic bytes and
+  the preempt/resume/recompute lifecycle counts (DESIGN.md §13).
 
 The legacy flat ``ContinuousEngine.stats()`` dict is a *projection* of
 this schema (``repro.obs.flatten_legacy``): ``engine.*`` keys flatten
@@ -91,11 +97,30 @@ ROOFLINE_KEYS = frozenset({
     # recurrent carries (read+write, flat in context) and the shared
     # encoder-KV cross-read — both set at attach time per config
     "rec_state_bytes_per_token", "enc_kv_read_bytes_per_token",
+    # prefix-reuse + preemption traffic (DESIGN.md §13): cumulative KV
+    # swap bytes normalized by decode tokens, and the cumulative prompt
+    # tokens whose prefill a prefix hit skipped
+    "kv_swap_bytes_per_token", "prefix_hit_tokens",
 })
 
 SPEC_KEYS = frozenset({
     "rounds", "proposed", "accepted", "acceptance_rate",
     "bytes_h2d_per_accepted",
+})
+
+# prefix-cache accounting (DESIGN.md §13): engine-side hit counters
+# (bumped only on successful admission — lookups retry while stalled)
+# plus the index's own population/eviction counters
+PREFIX_KEYS = frozenset({
+    "lookups", "hit_tokens", "prefills_skipped", "nodes", "cached_pages",
+    "inserted_pages", "evicted_pages",
+})
+
+# host-swap / preemption accounting (DESIGN.md §13): the HostPagePool's
+# budget + traffic counters plus the engine/scheduler lifecycle counts
+KV_HOST_KEYS = frozenset({
+    "pages_total", "pages_in_use", "peak_pages_in_use", "swap_out_bytes",
+    "swap_in_bytes", "preemptions", "resumes", "recomputes", "swapped_now",
 })
 
 HISTOGRAM_FIELDS = frozenset({"count", "sum", "min", "max", "p50", "p95",
@@ -104,7 +129,8 @@ HISTOGRAM_FIELDS = frozenset({"count", "sum", "min", "max", "p50", "p95",
 
 def expected_namespaces(*, kv_layout: str = "dense", offloaded: bool = False,
                         timing: bool = True, plane: str = "plain",
-                        roofline: bool = True, speculative: bool = False
+                        roofline: bool = True, speculative: bool = False,
+                        prefix_cache: bool = False, kv_host: bool = False
                         ) -> Dict[str, FrozenSet[str]]:
     """The exact ``{namespace: key set}`` a ContinuousEngine snapshot
     carries for one engine/plane/KV-layout combination — what the
@@ -118,6 +144,10 @@ def expected_namespaces(*, kv_layout: str = "dense", offloaded: bool = False,
         out["offload"] = OFFLOAD_KEYS
     if speculative:
         out["spec"] = SPEC_KEYS
+    if prefix_cache:
+        out["prefix"] = PREFIX_KEYS
+    if kv_host:
+        out["kv_host"] = KV_HOST_KEYS
     if timing:
         out["step"] = STEP_KEYS
         out["request"] = REQUEST_KEYS

@@ -46,10 +46,19 @@ class Admission:
     rid: int
     slot: int
     total: int              # prompt length
-    next_lo: int = 0
+    next_lo: int = 0        # > 0 at creation for a prefix-cache hit: the
+    #                         matched full pages are already mapped, so
+    #                         the chunk plan starts at the divergence
+    #                         point (DESIGN.md §13)
     state: Any = None       # B=1 decode state under construction
     pstate: Any = None      # unused by packed chunks (store-streamed)
     req: Any = None         # engine-side request handle
+    # recompute-resume (DESIGN.md §13): a preempted request whose KV was
+    # dropped re-prefills prompt+generated[:-1] (``tokens`` overrides the
+    # chunk source) and the final chunk feeds ``resume_tok`` instead of
+    # sampling — greedy decode makes the continuation bitwise
+    tokens: Any = None      # chunk token source override (else req.prompt)
+    resume_tok: Any = None  # pending token to feed instead of sampling
 
     @property
     def done(self) -> bool:

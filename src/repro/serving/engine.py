@@ -55,7 +55,8 @@ from repro.runtime import (Admission, ChunkTask, Executor, StepPlan,
                            TokenBudgetPolicy)
 from repro.serving.kv_manager import KVSlotManager, StateManager
 from repro.serving.sampler import SamplerConfig, sample
-from repro.serving.scheduler import GenRequest, Scheduler, admission_cost
+from repro.serving.scheduler import (RUNNING, GenRequest, Scheduler,
+                                     admission_cost)
 
 
 @dataclass
@@ -63,6 +64,18 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int = 32
     completed: List[int] = field(default_factory=list)
+
+
+@dataclass
+class _Swapped:
+    """A preempted request parked off-device (DESIGN.md §13): either its
+    pages staged to host (``blob``) or dropped for recompute resume."""
+
+    req: GenRequest
+    blob: Optional[dict]  # host-staged pages; None => recompute resume
+    next_tok: int         # pending (already emitted) token to feed
+    n_tokens: int         # live KV positions at preemption
+    seq: int              # FIFO tie-break within a priority class
 
 
 class ServeEngine:
@@ -146,6 +159,9 @@ class ContinuousEngine:
                  kv_page: Optional[int] = None,
                  kv_pages_total: Optional[int] = None,
                  ragged_bucket: bool = True,
+                 prefix_cache_pages: int = 0,
+                 preemption: bool = False,
+                 kv_host_pages: int = 0,
                  telemetry: Optional[Telemetry] = None,
                  draft_params=None,
                  draft_cfg: Optional[ModelConfig] = None,
@@ -177,6 +193,24 @@ class ContinuousEngine:
         table, which makes paged decoding BITWISE the dense engine
         (tests/test_paged_kv.py); bucketing keeps greedy token streams
         identical while paying only for live pages.
+
+        ``prefix_cache_pages`` (paged, causal-attention-only stacks):
+        keep up to that many immutable full pages of finished prompts in
+        a radix prefix index (``serving/prefix_cache``); a request whose
+        prompt hits a cached prefix adopts those pages read-only and
+        prefills only from the divergence point (DESIGN.md §13).  0
+        disables the cache (a real ablation, not a falsy default).
+
+        ``preemption`` (paged, causal-attention-only stacks): admission
+        reserves only the prompt's pages instead of the worst case, and
+        when decode growth or a higher-priority admission runs the pool
+        dry a victim is *preempted* — its pages staged to a host pool of
+        ``kv_host_pages`` pages (d2h) and re-staged on resume, or, when
+        the host budget cannot hold them (``kv_host_pages=0`` always),
+        dropped and rebuilt by re-prefilling prompt+generated.  Either
+        resume path is bitwise the uninterrupted decode under greedy
+        sampling.  Off by default: admission keeps the PR-5 no-
+        preemption discipline and stalls until releases free pages.
 
         ``draft_params`` / ``draft_cfg`` / ``num_draft_tokens``: token-
         level draft-and-verify decoding (DESIGN.md §11).  With a dense
@@ -228,6 +262,40 @@ class ContinuousEngine:
             slot_len = self.kv.slot_len  # per-request cap, page-rounded
         self.slot_len = slot_len
         self.sched = Scheduler(max_slots, policy)
+        # --------------------------------------------------------------
+        # prefix reuse + preemption (DESIGN.md §13)
+        self._prefix = None
+        self._preempt = bool(preemption)
+        self._swapped: List[_Swapped] = []
+        self._swap_seq = 0
+        self._recomputes = 0
+        self._prefills_skipped = 0
+        self._prefix_hit_tokens = 0
+        if prefix_cache_pages or preemption or kv_host_pages:
+            if not self.paged:
+                raise ValueError(
+                    "prefix caching / preemption need block-paged KV "
+                    "(set kv_page); dense rings have no shareable or "
+                    "swappable page unit")
+            if not cfg.attention_only_stack:
+                raise ValueError(
+                    f"prefix caching / preemption need a causal-attention "
+                    f"stack: {cfg.name!r} carries state (recurrent carries "
+                    f"or encoder KV) that pages neither share nor swap")
+            if kv_host_pages and not preemption:
+                raise ValueError("kv_host_pages without preemption would "
+                                 "never be used — enable preemption or "
+                                 "drop the host pool")
+            if preemption and num_draft_tokens:
+                raise ValueError(
+                    "preemption composes with plain decode only: a "
+                    "draft-and-verify round holds un-verified KV that a "
+                    "mid-round swap would tear")
+        if prefix_cache_pages:
+            from repro.serving.prefix_cache import PrefixCache
+            self._prefix = PrefixCache(self.kv.page_size, prefix_cache_pages)
+        if preemption:
+            self.kv.enable_host_swap(kv_host_pages)
         self.prefill_chunk = prefill_chunk
         self.budget: Optional[TokenBudgetPolicy] = None
         if prefill_chunk is not None:
@@ -283,6 +351,10 @@ class ContinuousEngine:
         reg.register_collector("jit", jit_cache_metrics)
         if offload is not None:
             reg.register_collector("offload", self._offload_metrics)
+        if self._prefix is not None:
+            reg.register_collector("prefix", self._prefix_metrics)
+        if self._preempt:
+            reg.register_collector("kv_host", self._kv_host_metrics)
         if self.obs.timing:
             self.obs.declare_step_schema()
             self.obs.declare_request_schema()
@@ -359,9 +431,20 @@ class ContinuousEngine:
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 32, on_token=None,
                on_finish=None, temperature: Optional[float] = None,
-               extras: Optional[dict] = None) -> GenRequest:
+               extras: Optional[dict] = None,
+               priority: int = 0) -> GenRequest:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size > 0, "empty prompt"
+        if self._preempt:
+            # optimistic admission must still terminate: a request whose
+            # worst case exceeds the WHOLE pool could preempt every other
+            # request and still deadlock mid-decode
+            worst = self.kv.pool.pages_for(prompt.size + max_new_tokens)
+            if worst > self.kv.pool.n_pages:
+                raise ValueError(
+                    f"request needs {worst} pages > pool total "
+                    f"{self.kv.pool.n_pages}; even preemption cannot "
+                    f"make it fit")
         if self.cfg.is_encoder_decoder:
             if not extras or "audio_embeds" not in extras:
                 raise ValueError(
@@ -396,7 +479,7 @@ class ContinuousEngine:
         req = GenRequest(prompt=prompt, max_new_tokens=max_new_tokens,
                          arrival=self.step_count, on_token=on_token,
                          on_finish=on_finish, temperature=temperature,
-                         extras=extras)
+                         extras=extras, priority=priority)
         self.sched.submit(req)
         self.obs.req_submitted(req.rid, self.step_count)
         return req
@@ -424,9 +507,32 @@ class ContinuousEngine:
         page pool: the policy's pick must be able to reserve its
         worst-case ``ceil((prompt+max_new)/page_size)`` pages, else
         admission stalls until releases free pages (head-of-line on
-        memory — the no-preemption discipline, DESIGN.md §9)."""
-        while self.kv.n_free and self.sched.has_waiting:
+        memory — the no-preemption discipline, DESIGN.md §9).
+
+        With a prefix cache, the pick's cached full-page prefix counts
+        as admission credit (those pages are adopted, not allocated) and
+        its prefill starts at the divergence point.  With preemption,
+        preempted requests resume FIRST (head-of-line: fresh arrivals
+        must not starve a swapped request), admission reserves only
+        ``prompt+1`` tokens of pages, and a stalled pick may swap out a
+        strictly lower-priority victim (DESIGN.md §13)."""
+        while self.kv.n_free and (self.sched.has_waiting or self._swapped):
             if self.paged:
+                if self._swapped:
+                    sw = min(self._swapped,
+                             key=lambda s: (-s.req.priority, s.seq))
+                    pick = (self.sched.peek_next(self.usage)[1]
+                            if self.sched.has_waiting else None)
+                    if pick is None or sw.req.priority >= pick.priority:
+                        if not self._try_resume():
+                            break  # no new admissions past a stuck resume
+                        continue
+                    # else: the strictly higher-priority arrival admits
+                    # first — resuming its own preemption victim here
+                    # would hand back the pages _make_room just freed
+                    # for it and ping-pong forever
+                if not self.sched.has_waiting:
+                    break
                 idx, cand = self.sched.peek_next(self.usage)
                 # per-arch admission cost (scheduler.admission_cost):
                 # only growing kv planes claim pool positions — a pure-
@@ -435,12 +541,22 @@ class ContinuousEngine:
                 # pool (only on free slots)
                 need = admission_cost(self.cfg, len(cand.prompt),
                                       cand.max_new_tokens).kv_positions
-                if not self.kv.can_admit(need):
+                base, shared = self._prefix_lookup(cand.prompt)
+                # optimistic reservation under preemption: the prompt
+                # plus one decode position; growth claims pages step by
+                # step (_grow_running_rows) and preempts when dry
+                reserve = (len(cand.prompt) + 1
+                           if self._preempt and need else need)
+                if not self.kv.can_admit(reserve, len(shared)):
+                    if self._make_room(cand):
+                        continue  # re-peek: eviction may drop cached pids
                     break
                 req = self.sched.pop_at(idx)
                 self.obs.req_admitted(req.rid, self.step_count - req.arrival)
-                slot = self.kv.allocate(req.rid, need)
+                slot = self.kv.allocate(req.rid, reserve,
+                                        shared_pages=shared, base=base)
                 req.slot = slot
+                self._note_prefix_hit(base)
                 if self.cfg.is_encoder_decoder:
                     # admission-time encode: the shared encoder-KV plane
                     # is written once into the slot and only READ by
@@ -450,7 +566,7 @@ class ContinuousEngine:
                 # no accumulator state: chunks write the slot's pages
                 self._admissions.append(Admission(
                     rid=req.rid, slot=slot, total=len(req.prompt),
-                    state=None, req=req))
+                    next_lo=base, state=None, req=req))
                 continue
             req = self.sched.pop_next(self.usage)
             self.obs.req_admitted(req.rid, self.step_count - req.arrival)
@@ -465,6 +581,169 @@ class ContinuousEngine:
             self._admissions.append(Admission(
                 rid=req.rid, slot=slot, total=len(req.prompt),
                 state=state, req=req))
+
+    # ------------------------------------------------------------------
+    # prefix reuse + preemption (DESIGN.md §13)
+    def _prefix_lookup(self, tokens):
+        if self._prefix is None:
+            return 0, []
+        return self._prefix.lookup(np.asarray(tokens))
+
+    def _note_prefix_hit(self, base: int) -> None:
+        if not base:
+            return
+        self._prefills_skipped += 1
+        self._prefix_hit_tokens += base
+        if self.obs.roofline is not None:
+            self.obs.roofline.add_prefix_hit(base)
+
+    def _prefix_insert(self, tokens, slot: int) -> None:
+        """Index the slot's full prompt pages after its prefill finished
+        (the pages are immutable from here on: all further writes land
+        past the last full page ordinal).  Registered pages gain a cache
+        reference BEFORE capacity evictions are released — the order
+        matters when the insert itself overflows the capacity."""
+        n_full = len(tokens) // self.kv.page_size
+        if not n_full:
+            return
+        pids = self.kv.pool.owned[slot][:n_full]
+        registered, evicted = self._prefix.insert(np.asarray(tokens), pids)
+        for pid in registered:
+            self.kv.pool.incref(pid)
+        if evicted:
+            self.kv.free_cached_pages(evicted)
+
+    def _evict_prefix_pages(self) -> int:
+        """Evict LRU prefix entries until DEVICE pages actually free (a
+        node whose page other slots still adopt frees nothing); returns
+        the number freed, 0 when the cache is exhausted."""
+        if self._prefix is None:
+            return 0
+        while True:
+            pids = self._prefix.evict_lru()
+            if not pids:
+                return 0
+            freed = self.kv.free_cached_pages(pids)
+            if freed:
+                return len(freed)
+
+    def _pick_victim(self, exclude_slot: Optional[int] = None,
+                     max_priority: Optional[int] = None
+                     ) -> Optional[GenRequest]:
+        """Lowest-priority, latest-arrival running row (admitting rows
+        excluded — a half-prefilled slot has nothing consistent to
+        swap).  ``max_priority`` restricts to STRICTLY lower priorities:
+        an admission/resume never preempts its own class (no ping-pong);
+        decode growth passes no floor (it must proceed)."""
+        admitting = {a.rid for a in self._admissions}
+        cands = [r for r in self.sched.running
+                 if r.rid not in admitting and r.slot != exclude_slot
+                 and (max_priority is None or r.priority < max_priority)]
+        if not cands:
+            return None
+        return min(cands, key=lambda r: (r.priority, -r.arrival, -r.rid))
+
+    def _preempt_req(self, req: GenRequest) -> None:
+        """Swap a running row out: stage its pages to the host pool
+        (d2h) when the budget holds them, else drop them for recompute
+        resume; either way the device pages free for the beneficiary."""
+        slot = req.slot
+        n_live = self.kv.length(slot)
+        blob = self.kv.swap_out(slot)  # None => drop + recompute
+        if blob is not None and self.obs.roofline is not None:
+            self.obs.roofline.add_swap_bytes(
+                blob["n_pages"] * self.kv.page_nbytes())
+        self.kv.release(slot)
+        self.sched.preempt(req)
+        self._swap_seq += 1
+        self._swapped.append(_Swapped(
+            req=req, blob=blob, next_tok=int(self.tokens[slot, 0]),
+            n_tokens=n_live, seq=self._swap_seq))
+        req.slot = None
+
+    def _make_room(self, cand: Optional[GenRequest] = None) -> bool:
+        """Free device pages for a stalled admission/resume: prefix-
+        cache eviction first (cheapest — cached pages are speculative
+        capital), then a strictly-lower-priority victim swap when
+        preemption is on.  Returns True when pages were freed."""
+        if self._evict_prefix_pages():
+            return True
+        if not self._preempt:
+            return False
+        victim = self._pick_victim(
+            max_priority=cand.priority if cand is not None else None)
+        if victim is None:
+            return False
+        self._preempt_req(victim)
+        return True
+
+    def _try_resume(self) -> bool:
+        """Re-admit the best swapped request (priority, then preemption
+        order).  Host-swapped pages scatter back verbatim (h2d) and the
+        row decodes on; dropped KV re-prefills prompt+generated[:-1]
+        through the normal admission machinery (with prefix credit) and
+        feeds the pending token instead of sampling — bitwise either
+        way under greedy decode."""
+        sw = min(self._swapped, key=lambda s: (-s.req.priority, s.seq))
+        req = sw.req
+        if sw.blob is not None:
+            while not self.kv.can_admit(sw.n_tokens + 1):
+                if not self._make_room(req):
+                    return False
+            slot = self.kv.swap_in(req.rid, sw.blob, sw.n_tokens + 1)
+            if self.obs.roofline is not None:
+                self.obs.roofline.add_swap_bytes(
+                    sw.blob["n_pages"] * self.kv.page_nbytes())
+            req.slot = slot
+            self.sched.resume(req)
+            self.tokens[slot, 0] = sw.next_tok
+            self._swapped.remove(sw)
+            return True
+        ext = np.concatenate(
+            [req.prompt, np.asarray(req.generated[:-1], np.int32)])
+        n_live = len(ext)
+        base, shared = self._prefix_lookup(ext)
+        while not self.kv.can_admit(n_live + 1, len(shared)):
+            if not self._make_room(req):
+                return False
+            base, shared = self._prefix_lookup(ext)  # eviction-safe redo
+        slot = self.kv.allocate(req.rid, n_live + 1,
+                                shared_pages=shared, base=base)
+        req.slot = slot
+        self.sched.resume(req)
+        self._recomputes += 1
+        self._note_prefix_hit(base)
+        self._admissions.append(Admission(
+            rid=req.rid, slot=slot, total=n_live, next_lo=base,
+            state=None, req=req, tokens=ext, resume_tok=sw.next_tok))
+        self._swapped.remove(sw)
+        return True
+
+    def _grow_running_rows(self) -> None:
+        """Preemption mode: secure every running row's next decode
+        position BEFORE the step plan forms — a mid-step preemption
+        would tear rows the plan already scheduled.  Rows grow
+        best-first (priority desc, arrival asc) so the rows not yet
+        grown are exactly the preferred victims."""
+        admitting = {a.rid for a in self._admissions}
+        rows = sorted((r for r in self.sched.running
+                       if r.rid not in admitting),
+                      key=lambda r: (-r.priority, r.arrival, r.rid))
+        for req in rows:
+            if req.state != RUNNING:
+                continue  # already taken as an earlier row's victim
+            n = self.kv.length(req.slot) + 1
+            while not self.kv.can_grow(req.slot, n):
+                if self._evict_prefix_pages():
+                    continue
+                victim = self._pick_victim(exclude_slot=req.slot)
+                if victim is None:
+                    raise RuntimeError(
+                        "page pool exhausted with nothing left to "
+                        "preempt (submit() guards that a lone request "
+                        "always fits the pool)")
+                self._preempt_req(victim)
+            self.kv.grow(req.slot, n)
 
     def _run_chunks(self, chunks) -> List[GenRequest]:
         """Execute this step's prefill chunks; complete admissions whose
@@ -485,7 +764,10 @@ class ContinuousEngine:
             req: GenRequest = adm.req
             t0 = (self.obs.clock_ns()
                   if self.obs.tracer is not None else 0)
-            tokens = jnp.asarray(req.prompt[None, task.lo: task.hi])
+            # recompute-resume admissions prefill prompt+generated[:-1]
+            # instead of the prompt (DESIGN.md §13)
+            src = adm.tokens if adm.tokens is not None else req.prompt
+            tokens = jnp.asarray(src[None, task.lo: task.hi])
             if self.paged:
                 # chunk writes straight into the slot's pool pages —
                 # allocate up to the chunk's end, then adopt the state
@@ -501,6 +783,17 @@ class ContinuousEngine:
             self.obs.req_chunk(req.rid, task.lo, task.hi, t0)
             adm.next_lo = task.hi
             if task.last:
+                if self.paged and self._prefix is not None:
+                    # the prefilled full pages are immutable from here on
+                    # — index them BEFORE any release path below so the
+                    # cache reference outlives the slot
+                    self._prefix_insert(src, adm.slot)
+                if adm.resume_tok is not None:
+                    # recompute resume: the pending token was emitted
+                    # before preemption — feed it, never re-sample it
+                    self.tokens[adm.slot, 0] = int(adm.resume_tok)
+                    self._admissions.remove(adm)
+                    continue
                 first = int(self._sample_rows(logits[:, -1], [req])[0])
                 req.emit(first)
                 if self._done(req, first):
@@ -537,6 +830,11 @@ class ContinuousEngine:
         """This step's mixed batch: every decodable row + prompt chunks
         under the token budget (unchunked mode: whole prompts this step,
         split only at the KV ring width, no budget)."""
+        if self._preempt:
+            # secure every running row's next decode position BEFORE the
+            # plan forms — preempting a row the plan already scheduled
+            # would tear the step (DESIGN.md §13)
+            self._grow_running_rows()
         self._install_ready()
         self._start_admissions()
         decode_rows = self._decode_rows()
@@ -885,7 +1183,8 @@ class ContinuousEngine:
         """Drive until every submitted request finishes; returns them in
         completion order."""
         steps = 0
-        while self.sched.has_waiting or self.sched.n_running:
+        while (self.sched.has_waiting or self.sched.n_running
+               or self._swapped):
             self.step()
             steps += 1
             if max_steps is not None and steps >= max_steps:
@@ -916,6 +1215,21 @@ class ContinuousEngine:
                 "demand_loads": demand, "spec_loads": spec,
                 "bytes_h2d": bytes_h2d,
                 "bytes_per_token": bytes_h2d / max(1, emitted)}
+
+    def _prefix_metrics(self) -> Dict[str, float]:
+        out = {"lookups": self._prefix.lookups,
+               "hit_tokens": self._prefix_hit_tokens,
+               "prefills_skipped": self._prefills_skipped}
+        out.update(self._prefix.stats())
+        return out
+
+    def _kv_host_metrics(self) -> Dict[str, float]:
+        out = dict(self.kv.host_stats())
+        out.update(preemptions=self.sched.preemptions,
+                   resumes=self.sched.resumes,
+                   recomputes=self._recomputes,
+                   swapped_now=len(self._swapped))
+        return out
 
     def metrics(self) -> Dict[str, Dict[str, object]]:
         """Namespaced telemetry snapshot ``{namespace: {key: value}}``

@@ -226,15 +226,28 @@ class KVSlotManager:
 # Block-paged KV (DESIGN.md §9)
 class PagePool:
     """Host-side page allocator: heap free list + per-slot ordered page
-    lists + admission *reservations*.
+    lists + admission *reservations* + per-page *reference counts*.
 
     Pages are allocated lazily (``ensure`` covers positions as they are
     written) but admission reserves a slot's worst-case page count up
     front, so a mid-decode allocation can never fail — the conservative
     no-preemption discipline (a request that is admitted always runs to
-    completion).  Invariants (property-tested): a page has at most one
-    owner, free + owned partitions the pool, a slot's table is gapless
-    in ordinal order, and release returns every page.
+    completion).  Under preemption (DESIGN.md §13) admission instead
+    reserves only the prompt's pages and decode growth goes through
+    :meth:`grow_reservation`, whose failure the engine resolves by
+    swapping a victim out rather than crashing.
+
+    Reference counts exist for prefix sharing (DESIGN.md §13): a page
+    holding an immutable full page of shared prompt KV is held once by
+    the prefix index and once per slot that adopted it
+    (:meth:`adopt_shared`); ``release``/``trim`` only *return* a page to
+    the free heap when its last reference drops, so the scrub — and any
+    reuse — cannot touch KV another request is still reading.  Without
+    sharing every refcount is 1 and the original semantics are
+    unchanged.  Invariants (property-tested): free + referenced
+    partitions the pool, a slot's table is gapless in ordinal order,
+    every owned page has refs >= 1, and a page is freed exactly when its
+    refcount reaches zero.
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -245,6 +258,7 @@ class PagePool:
         heapq.heapify(self._free)
         self.owned: Dict[object, List[int]] = {}
         self.reserved: Dict[object, int] = {}
+        self.refs: Dict[int, int] = {}  # page id -> live references
         self.peak_in_use = 0
         # peak COMMITTED pages (allocated + reserved-but-unallocated):
         # the honest memory footprint — a reserved page is unavailable
@@ -267,18 +281,24 @@ class PagePool:
     def can_reserve(self, n_pages: int) -> bool:
         return n_pages <= self.n_free - self.n_reserved_unallocated
 
-    def reserve(self, slot, n_tokens: int) -> None:
+    def reserve(self, slot, n_tokens: int, prealloc_pages: int = 0) -> None:
+        """``prealloc_pages`` is the prefix-hit credit: that many leading
+        pages of the reservation will be adopted from the cache (already
+        allocated, refs held elsewhere), so only the remainder must come
+        out of the unreserved pool — and the committed-footprint peak
+        must not double-count them (they are already in ``in_use``)."""
         need = self.pages_for(n_tokens)
-        if not self.can_reserve(need):
+        if not self.can_reserve(max(0, need - prealloc_pages)):
             raise ValueError(
-                f"page pool exhausted: need {need} pages, "
+                f"page pool exhausted: need {need - prealloc_pages} pages, "
                 f"{self.n_free - self.n_reserved_unallocated} unreserved")
         assert slot not in self.reserved, f"slot {slot} already reserved"
         self.reserved[slot] = need
         self.owned[slot] = []
         self.peak_committed = max(
             self.peak_committed,
-            self.n_pages - self.n_free + self.n_reserved_unallocated)
+            self.n_pages - self.n_free + self.n_reserved_unallocated
+            - prealloc_pages)
 
     def ensure(self, slot, n_tokens: int) -> List[int]:
         """Allocate pages so positions ``0 .. n_tokens−1`` are covered;
@@ -292,30 +312,92 @@ class PagePool:
         while len(self.owned[slot]) < need:
             pid = heapq.heappop(self._free)
             self.owned[slot].append(pid)
+            self.refs[pid] = 1
             new.append(pid)
         self.peak_in_use = max(self.peak_in_use, self.n_pages - self.n_free)
         return new
 
+    # -- reference counting (prefix sharing, DESIGN.md §13) ------------
+    def incref(self, pid: int) -> None:
+        assert self.refs.get(pid, 0) > 0, \
+            f"incref on unreferenced page {pid}"
+        self.refs[pid] += 1
+
+    def decref(self, pid: int) -> bool:
+        """Drop one reference; returns True when the page was FREED (the
+        caller must scrub it before reuse)."""
+        n = self.refs[pid] - 1
+        if n > 0:
+            self.refs[pid] = n
+            return False
+        del self.refs[pid]
+        heapq.heappush(self._free, pid)
+        return True
+
+    def adopt_shared(self, slot, page_ids: List[int]) -> None:
+        """Map already-live (cache-held) pages as the slot's leading
+        ordinals — the prefix-hit admission path.  Must run right after
+        :meth:`reserve` (the slot owns nothing yet) so the shared pages
+        occupy exactly the ordinals whose tokens they hold; the
+        reservation from ``reserve`` counts TOTAL pages, so the adopted
+        pages consume part of it rather than adding to the footprint."""
+        assert slot in self.reserved and not self.owned[slot], \
+            f"adopt_shared({slot}) must follow reserve() immediately"
+        assert len(page_ids) <= self.reserved[slot]
+        for pid in page_ids:
+            self.incref(pid)
+            self.owned[slot].append(pid)
+
+    def can_grow_reservation(self, slot, n_tokens: int) -> bool:
+        need = self.pages_for(n_tokens)
+        cur = self.reserved.get(slot, 0)
+        return (need <= cur
+                or need - cur <= self.n_free - self.n_reserved_unallocated)
+
+    def grow_reservation(self, slot, n_tokens: int) -> None:
+        """Extend a slot's reservation to cover ``n_tokens`` — the
+        optimistic-admission discipline under preemption: decode growth
+        claims pages step by step, and when this fails the engine swaps
+        a victim out instead of the admission-time worst case having
+        refused the request outright."""
+        need = self.pages_for(n_tokens)
+        cur = self.reserved[slot]
+        if need <= cur:
+            return
+        if need - cur > self.n_free - self.n_reserved_unallocated:
+            raise ValueError(
+                f"page pool exhausted: slot {slot} needs {need - cur} more "
+                f"pages, {self.n_free - self.n_reserved_unallocated} "
+                f"unreserved")
+        self.reserved[slot] = need
+        self.peak_committed = max(
+            self.peak_committed,
+            self.n_pages - self.n_free + self.n_reserved_unallocated)
+
     def release(self, slot) -> List[int]:
-        """Free every page the slot owns; returns them (for scrubbing)."""
+        """Drop the slot's reference on every page it owns; returns the
+        pages actually FREED (for scrubbing) — a page still held by the
+        prefix index (or another adopter) stays live and keeps its KV."""
         ids = self.owned.pop(slot, [])
         self.reserved.pop(slot, None)
-        for pid in ids:
-            heapq.heappush(self._free, pid)
-        return ids
+        return [pid for pid in ids if self.decref(pid)]
 
     def trim(self, slot, n_tokens: int) -> List[int]:
         """Give back the pages beyond ``pages_for(n_tokens)`` — the
         speculative-decode rejection path.  The reservation is kept (the
         request may regrow into it), only allocations shrink; returns
-        the freed page ids (highest ordinals first) for scrubbing."""
+        the freed page ids (highest ordinals first) for scrubbing.
+        Shared pages that are popped but still referenced are not
+        returned (they stay live for their other holders) — the caller
+        clears table ordinals from the new owned length, not from the
+        freed count."""
         keep = self.pages_for(n_tokens)
         assert slot in self.owned, f"slot {slot} not reserved"
         freed = []
         while len(self.owned[slot]) > keep:
             pid = self.owned[slot].pop()
-            heapq.heappush(self._free, pid)
-            freed.append(pid)
+            if self.decref(pid):
+                freed.append(pid)
         return freed
 
     def stats(self) -> Dict[str, object]:
@@ -326,6 +408,47 @@ class PagePool:
                 "pages_peak_committed": self.peak_committed,
                 "pages_reserved_unallocated": self.n_reserved_unallocated,
                 "page_size": self.page_size}
+
+
+class HostPagePool:
+    """Budget + accounting for KV pages staged to host RAM (DESIGN.md
+    §13) — the KV-plane analogue of ``core/expert_pool.py``'s staged
+    streaming: swap-out gathers a slot's pages into one contiguous
+    device buffer and stages it d2h, swap-in stages it back and scatters
+    into freshly allocated pages.  The blobs themselves live with the
+    engine's preempted-request records; this object only enforces the
+    ``--kv-host-pages`` budget and carries the byte counters the
+    ``kv_host`` telemetry namespace reports.  A zero budget is a real
+    ablation: every preemption then drops its KV and resumes by
+    recomputation."""
+
+    def __init__(self, n_pages: int):
+        assert n_pages >= 0
+        self.n_pages = int(n_pages)
+        self.in_use = 0
+        self.peak_in_use = 0
+        self.swap_out_bytes = 0
+        self.swap_in_bytes = 0
+
+    def can_hold(self, n_pages: int) -> bool:
+        return self.in_use + n_pages <= self.n_pages
+
+    def note_out(self, n_pages: int, nbytes: int) -> None:
+        self.in_use += n_pages
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        self.swap_out_bytes += nbytes
+
+    def note_in(self, n_pages: int, nbytes: int) -> None:
+        assert self.in_use >= n_pages
+        self.in_use -= n_pages
+        self.swap_in_bytes += nbytes
+
+    def stats(self) -> Dict[str, int]:
+        return {"pages_total": self.n_pages,
+                "pages_in_use": self.in_use,
+                "peak_pages_in_use": self.peak_in_use,
+                "swap_out_bytes": self.swap_out_bytes,
+                "swap_in_bytes": self.swap_in_bytes}
 
 
 class PagedKVManager:
@@ -380,6 +503,8 @@ class PagedKVManager:
         heapq.heapify(self._free)
         self._owner: List[Optional[object]] = [None] * n_slots
         self._len = [0] * n_slots  # host mirror of live token counts
+        self.host: Optional[HostPagePool] = None  # swap budget (§13)
+        self._page_nbytes: Optional[int] = None
 
     # ------------------------------------------------------------------
     @property
@@ -389,23 +514,39 @@ class PagedKVManager:
     def owner(self, slot: int):
         return self._owner[slot]
 
-    def can_admit(self, n_tokens: int) -> bool:
+    def can_admit(self, n_tokens: int, prealloc_pages: int = 0) -> bool:
+        """``prealloc_pages`` is the prefix-hit credit (DESIGN.md §13):
+        pages the request would adopt from the cache are already
+        allocated, so only the remainder of its worst-case budget must
+        be reservable."""
         if not self.has_kv:
             return bool(self._free)  # zero-page archs gate on slots only
-        return (bool(self._free)
-                and self.pool.can_reserve(self.pool.pages_for(n_tokens)))
+        need = max(0, self.pool.pages_for(n_tokens) - prealloc_pages)
+        return bool(self._free) and self.pool.can_reserve(need)
 
-    def allocate(self, owner=None, n_tokens: int = 1) -> int:
+    def allocate(self, owner=None, n_tokens: int = 1, *,
+                 shared_pages=(), base: int = 0) -> int:
         """Claim a slot and reserve its worst-case page budget (zero
-        pages when no layer carries a growing KV plane); the slot's
-        position resets to 0 (page writes start at ordinal 0)."""
+        pages when no layer carries a growing KV plane).  A prefix-hit
+        admission passes the cache's pages as ``shared_pages`` (mapped
+        read-only as the slot's leading ordinals, refcounted) and
+        ``base`` = the matched token count, so the slot starts at the
+        divergence point and its prefill covers only ``[base, total)``;
+        otherwise position resets to 0."""
+        assert base == len(shared_pages) * self.page_size
         slot = heapq.heappop(self._free)
         if self.has_kv:
-            self.pool.reserve(slot, n_tokens)
+            self.pool.reserve(slot, n_tokens,
+                              prealloc_pages=len(shared_pages))
+            if shared_pages:
+                self.pool.adopt_shared(slot, list(shared_pages))
+                for j, pid in enumerate(shared_pages):
+                    self._pages_np[slot, j] = pid
+                self._dirty = True
         self._owner[slot] = owner
-        self._len[slot] = 0
+        self._len[slot] = base
         self.state = dict(self.state,
-                          pos=self.state["pos"].at[slot].set(0))
+                          pos=self.state["pos"].at[slot].set(base))
         # paged prefill chunks write IN PLACE (no install scatter), so a
         # reused slot's fixed-size recurrent carries must reset here —
         # KV pages get the same hygiene from the release-time ppos scrub
@@ -415,7 +556,7 @@ class PagedKVManager:
 
     def release(self, slot: int) -> None:
         assert self._owner[slot] is not None, f"slot {slot} already free"
-        ids = self.pool.release(slot)
+        ids = self.pool.release(slot)  # only pages whose LAST ref dropped
         # table edit precedes the scrub: the scrub donates the state
         # (including the device table buffer), so mark it stale first
         self._pages_np[slot] = -1
@@ -424,6 +565,92 @@ class PagedKVManager:
         self._owner[slot] = None
         self._len[slot] = 0
         heapq.heappush(self._free, slot)
+
+    def free_cached_pages(self, page_ids: List[int]) -> List[int]:
+        """Drop the prefix index's reference on evicted pages; pages
+        whose last reference this was are freed AND scrubbed (the
+        scrub-on-reuse guarantee holds through the cache path too).
+        Returns the pages actually freed."""
+        freed = [pid for pid in page_ids if self.pool.decref(pid)]
+        self._scrub(freed)
+        return freed
+
+    # -- host swap (preemption, DESIGN.md §13) -------------------------
+    def enable_host_swap(self, n_pages: int) -> None:
+        self.host = HostPagePool(n_pages)
+
+    def page_nbytes(self) -> int:
+        """Bytes one pool page occupies across every layer's kp/vp/ppos
+        planes — the unit of swap traffic accounting."""
+        if self._page_nbytes is None:
+            total = 0
+            for blk in self.state["stack"] + self.state["tail"]:
+                kv = blk.get("kv") if isinstance(blk, dict) else None
+                if isinstance(kv, dict) and "ppos" in kv:
+                    for name in ("kp", "vp", "ppos"):
+                        total += kv[name].nbytes // self.pool.n_pages
+            self._page_nbytes = total
+        return self._page_nbytes
+
+    def _swap_width(self, k: int) -> int:
+        w = 1
+        while w < k:
+            w *= 2
+        return min(w, self.max_pages)
+
+    def swap_out(self, slot: int):
+        """Stage the slot's live pages to host (d2h) so the engine can
+        release them — the swap half of preemption.  Returns a host blob
+        (numpy pytree + bookkeeping) the engine stores with the
+        preempted request, or ``None`` when the host budget cannot hold
+        the pages (the engine then drops the KV and resumes by
+        recomputation).  The caller releases the slot afterwards; shared
+        prefix pages survive that release through their cache refs, and
+        the blob holds their content anyway, so the restore is exact
+        either way."""
+        if self.host is None or not self.has_kv:
+            return None
+        pids = list(self.pool.owned.get(slot, []))
+        k = len(pids)
+        if k == 0 or not self.host.can_hold(k):
+            return None
+        w = self._swap_width(k)
+        padded = np.zeros((w,), np.int32)  # junk beyond k, dropped on restore
+        padded[:k] = pids
+        data = self._swap_gather_fn(w)(self.state, jnp.asarray(padded))
+        data = jax.tree.map(np.asarray, data)  # the d2h stage
+        self.host.note_out(k, k * self.page_nbytes())
+        return {"data": data, "n_pages": k, "width": w,
+                "n_tokens": self._len[slot]}
+
+    def swap_in(self, owner, blob, reserve_tokens: int) -> int:
+        """Re-admit a swapped request: allocate a slot + reservation,
+        take exactly the blob's page count from the pool and scatter the
+        staged pages back (h2d).  Positions, page ordinals and ``ppos``
+        restore verbatim, so the resumed decode is bitwise the
+        uninterrupted one."""
+        slot = self.allocate(owner, reserve_tokens)
+        k = blob["n_pages"]
+        self.ensure(slot, k * self.page_size)
+        pids = self.pool.owned[slot]
+        assert len(pids) == k, f"swap_in expected {k} pages, got {len(pids)}"
+        w = blob["width"]
+        # pad with the out-of-bounds sentinel: the gather's junk rows
+        # beyond n_pages scatter nowhere (mode="drop")
+        padded = np.full((w,), self.pool.n_pages, np.int32)
+        padded[:k] = pids
+        self.state = self._swap_scatter_fn(w)(
+            self.state, blob["data"], jnp.asarray(padded))
+        self.host.note_in(k, k * self.page_nbytes())
+        n_live = blob["n_tokens"]
+        self._len[slot] = n_live
+        self.state = dict(self.state,
+                          pos=self.state["pos"].at[slot].set(n_live))
+        return slot
+
+    def host_stats(self) -> Dict[str, int]:
+        host = self.host if self.host is not None else HostPagePool(0)
+        return host.stats()
 
     def remaining(self, slot: int) -> int:
         return self.slot_len - self._len[slot]
@@ -439,6 +666,22 @@ class PagedKVManager:
             for j, pid in enumerate(new):
                 self._pages_np[slot, base + j] = pid
             self._dirty = True
+
+    def can_grow(self, slot: int, n_tokens: int) -> bool:
+        """Could the slot's reservation stretch to ``n_tokens``?  The
+        preemption-mode decode-growth probe: when False the engine frees
+        pages (cache eviction, then victim swap-out) before growing."""
+        if not self.has_kv:
+            return True
+        return self.pool.can_grow_reservation(slot, n_tokens)
+
+    def grow(self, slot: int, n_tokens: int) -> None:
+        """Extend the slot's reservation (optimistic admission under
+        preemption) and allocate the covering pages."""
+        if not self.has_kv:
+            return
+        self.pool.grow_reservation(slot, n_tokens)
+        self.ensure(slot, n_tokens)
 
     def note_tokens(self, slot: int, n_tokens: int) -> None:
         """Record the slot's live token count (host mirror of ``pos`` —
@@ -460,11 +703,14 @@ class PagedKVManager:
         a property the spec tests assert literally."""
         assert n_tokens >= 0 and n_tokens <= self._len[slot], \
             f"truncate({slot}, {n_tokens}) would extend, not roll back"
-        freed = self.pool.trim(slot, n_tokens) if self.has_kv else []
-        if freed:
-            base = len(self.pool.owned[slot])
-            self._pages_np[slot, base: base + len(freed)] = -1
-            self._dirty = True
+        if self.has_kv:
+            freed = self.pool.trim(slot, n_tokens)
+            # clear every popped ordinal — under sharing a popped page may
+            # stay live (another holder), but it is no longer THIS row's
+            keep = len(self.pool.owned[slot])
+            if (self._pages_np[slot, keep:] != -1).any():
+                self._pages_np[slot, keep:] = -1
+                self._dirty = True
             self._scrub(freed)
         self._len[slot] = n_tokens
         self.state = dict(self.state,
@@ -557,6 +803,11 @@ class PagedKVManager:
         next row's attention mask."""
         if not page_ids:
             return
+        # the donation consumes the state's device table buffer too —
+        # force pages_dev() to re-upload from the host-authoritative
+        # table (free_cached_pages scrubs without editing any table row,
+        # so it cannot rely on the caller having marked it stale)
+        self._dirty = True
         pad = np.full((self.max_pages,), self.pool.n_pages, np.int32)
         for chunk_lo in range(0, len(page_ids), self.max_pages):
             ids = page_ids[chunk_lo: chunk_lo + self.max_pages]
@@ -584,6 +835,58 @@ class PagedKVManager:
                             tail=[scrub_kv(b) for b in state["tail"]])
             return jax.jit(scrub, donate_argnums=0)
         return T.cached_jit(("paged_scrub", cfg, self.max_pages), make)
+
+    def _swap_gather_fn(self, width: int):
+        """One program gathering ``width`` pages of every layer's
+        kp/vp/ppos into a contiguous buffer — the d2h stage of swap-out.
+        Width is pow-2 bucketed (:meth:`_swap_width`) so jit compiles
+        O(log max_pages) programs.  Not donated: the state stays live."""
+        cfg = self.cfg
+
+        def make():
+            def gather(state, pids):
+                def g(blk):
+                    kv = blk.get("kv") if isinstance(blk, dict) else None
+                    if not isinstance(kv, dict) or "ppos" not in kv:
+                        return None
+                    if kv["ppos"].ndim == 3:  # stacked (n_periods, P, ...)
+                        return {n: kv[n][:, pids]
+                                for n in ("kp", "vp", "ppos")}
+                    return {n: kv[n][pids] for n in ("kp", "vp", "ppos")}
+                return {"stack": [g(b) for b in state["stack"]],
+                        "tail": [g(b) for b in state["tail"]]}
+            return jax.jit(gather)
+        return T.cached_jit(("kv_swap_gather", cfg, width), make)
+
+    def _swap_scatter_fn(self, width: int):
+        """Inverse of :meth:`_swap_gather_fn` — the h2d stage of
+        swap-in: scatter a staged blob into freshly allocated pages.
+        Donated (pure page update); padded ids carry the out-of-bounds
+        sentinel so the gather's junk rows are dropped."""
+        cfg = self.cfg
+
+        def make():
+            def scatter(state, data, pids):
+                def s(blk, d):
+                    kv = blk.get("kv") if isinstance(blk, dict) else None
+                    if d is None or not isinstance(kv, dict) \
+                            or "ppos" not in kv:
+                        return blk
+                    if kv["ppos"].ndim == 3:
+                        upd = {n: kv[n].at[:, pids].set(d[n], mode="drop")
+                               for n in ("kp", "vp", "ppos")}
+                    else:
+                        upd = {n: kv[n].at[pids].set(d[n], mode="drop")
+                               for n in ("kp", "vp", "ppos")}
+                    return dict(blk, kv=dict(kv, **upd))
+                return dict(
+                    state,
+                    stack=[s(b, d) for b, d in
+                           zip(state["stack"], data["stack"])],
+                    tail=[s(b, d) for b, d in
+                          zip(state["tail"], data["tail"])])
+            return jax.jit(scatter, donate_argnums=0)
+        return T.cached_jit(("kv_swap_scatter", cfg, width), make)
 
     # ------------------------------------------------------------------
     def metrics(self) -> Dict[str, object]:

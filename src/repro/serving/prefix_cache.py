@@ -1,0 +1,182 @@
+"""Radix-style prefix index over immutable full KV pages (DESIGN.md §13).
+
+The paper's economics — exploit reuse to dodge transfer/compute (LRU
+expert caching, PAPER.md §3.1) — applied to the KV plane: requests that
+share a system prompt / few-shot prefix share the *pages* holding that
+prefix's KV, and their prefill starts at the divergence point.
+
+Why this is safe without a copy-on-write fault path:
+
+* Causal attention means the KV at position ``p`` depends only on tokens
+  ``[0..p]``, and chunked prefill is bitwise-identical to whole prefill
+  (tests/test_runtime.py) — so a *full* page of prompt KV is a pure
+  function of the token block that produced it.  Pages are therefore
+  content-addressed by token bytes along a hash chain: node key =
+  ``(parent_serial, block_bytes)``.
+* Only FULL pages are ever indexed, and :meth:`lookup` additionally caps
+  the match at ``((len(prompt) - 1) // page_size) * page_size``: the
+  final prompt token is always recomputed (its logits seed the first
+  sampled token), and every KV *write* a request performs — the prefill
+  tail and all decode tokens — lands at positions past the matched
+  prefix, i.e. in page ordinals the request allocated privately.  "Copy
+  on write" thus degenerates to "never write a shared page": divergence
+  within a page simply means that page is not matched.
+
+The cache holds one reference per indexed page (``PagePool.incref``,
+taken by the caller via the ``registered`` return of :meth:`insert`);
+adopters hold their own.  A page is freed — and scrubbed — only when the
+last reference drops, so eviction of a node whose page is still mapped
+into a live slot is safe.  Eviction is leaf-first LRU: only childless
+nodes can go (an interior node's page is reachable through its
+descendants' matches).
+
+The index itself is tiny host-side bookkeeping: it never touches device
+memory and is exercised allocator-only (no jax) by the property tests in
+tests/test_prefix_swap.py.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+__all__ = ["PrefixCache"]
+
+
+@dataclass
+class _Node:
+    key: Tuple[int, bytes]
+    serial: int          # monotonic id; 0 is the (virtual) root
+    parent: int          # parent node's serial, 0 for depth-0 nodes
+    page: int            # device page id backing this ordinal's KV
+    children: int = 0
+    tick: int = 0        # LRU clock
+
+
+class PrefixCache:
+    """Hash-chain prefix index: one node per (prefix, page ordinal)."""
+
+    def __init__(self, page_size: int, capacity_pages: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if capacity_pages < 1:
+            raise ValueError(
+                f"prefix cache needs capacity >= 1 page, got "
+                f"{capacity_pages} (pass 0 upstream to disable the cache)")
+        self.page_size = int(page_size)
+        self.capacity = int(capacity_pages)
+        self._nodes: Dict[Tuple[int, bytes], _Node] = {}
+        self._by_serial: Dict[int, _Node] = {}
+        self._serial = itertools.count(1)
+        self._tick = itertools.count(1)
+        # cumulative counters (surface through the engine's collector;
+        # hit-token accounting lives engine-side — a stalled admission
+        # retries lookup every step and must not overcount)
+        self.lookups = 0
+        self.inserted_pages = 0
+        self.evicted_pages = 0
+
+    # -- helpers -------------------------------------------------------
+    @property
+    def n_pages(self) -> int:
+        return len(self._nodes)
+
+    def _key(self, parent: int, tokens: np.ndarray,
+             ordinal: int) -> Tuple[int, bytes]:
+        ps = self.page_size
+        block = np.ascontiguousarray(
+            tokens[ordinal * ps:(ordinal + 1) * ps], dtype=np.int32)
+        return (parent, block.tobytes())
+
+    # -- queries -------------------------------------------------------
+    def lookup(self, tokens: np.ndarray) -> Tuple[int, List[int]]:
+        """Longest cached full-page prefix of ``tokens``.
+
+        Returns ``(matched_tokens, page_ids)`` with ``matched_tokens ==
+        len(page_ids) * page_size``, capped so the final prompt token is
+        never part of the match (the admitting request must run at least
+        one prefill position to produce its first-token logits, and all
+        its writes must land past the shared ordinals).
+        """
+        tokens = np.asarray(tokens)
+        self.lookups += 1
+        limit = max(0, (len(tokens) - 1) // self.page_size)
+        parent, pids, path = 0, [], []
+        for o in range(limit):
+            node = self._nodes.get(self._key(parent, tokens, o))
+            if node is None:
+                break
+            path.append(node)
+            pids.append(node.page)
+            parent = node.serial
+        tick = next(self._tick)
+        for node in path:          # refresh the whole matched chain
+            node.tick = tick
+        return len(pids) * self.page_size, pids
+
+    # -- updates -------------------------------------------------------
+    def insert(self, tokens: np.ndarray,
+               page_ids: List[int]) -> Tuple[List[int], List[int]]:
+        """Index ``tokens``' full-page prefix chain; ``page_ids[o]`` is
+        the (already prefilled) device page backing ordinal ``o``.
+
+        Returns ``(registered, evicted)``: the caller must ``incref``
+        every registered page BEFORE releasing the evicted ones — a
+        pathological capacity can evict a node registered by this very
+        call.  Ordinals whose node already exists are skipped (a
+        concurrent duplicate prefill keeps its private, content-equal
+        pages; mixing producers along one chain is fine because page
+        content is a pure function of the token prefix).
+        """
+        tokens = np.asarray(tokens)
+        n = min(len(page_ids), len(tokens) // self.page_size)
+        parent, registered = 0, []
+        for o in range(n):
+            key = self._key(parent, tokens, o)
+            node = self._nodes.get(key)
+            if node is None:
+                node = _Node(key=key, serial=next(self._serial),
+                             parent=parent, page=int(page_ids[o]),
+                             tick=next(self._tick))
+                self._nodes[key] = node
+                self._by_serial[node.serial] = node
+                if parent:
+                    self._by_serial[parent].children += 1
+                registered.append(node.page)
+                self.inserted_pages += 1
+            else:
+                node.tick = next(self._tick)
+            parent = node.serial
+        evicted: List[int] = []
+        while len(self._nodes) > self.capacity:
+            pids = self.evict_lru()
+            if not pids:
+                break
+            evicted.extend(pids)
+        return registered, evicted
+
+    def evict_lru(self, n_nodes: int = 1) -> List[int]:
+        """Drop up to ``n_nodes`` oldest *childless* nodes; returns their
+        page ids (caller decrefs — pages still adopted by live slots
+        survive until their last reference drops)."""
+        out: List[int] = []
+        for _ in range(n_nodes):
+            leaves = [nd for nd in self._nodes.values() if nd.children == 0]
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda nd: (nd.tick, nd.serial))
+            del self._nodes[victim.key]
+            del self._by_serial[victim.serial]
+            if victim.parent:
+                self._by_serial[victim.parent].children -= 1
+            out.append(victim.page)
+            self.evicted_pages += 1
+        return out
+
+    def stats(self) -> Dict[str, int]:
+        return {"nodes": len(self._nodes),
+                "cached_pages": len(self._nodes),
+                "inserted_pages": self.inserted_pages,
+                "evicted_pages": self.evicted_pages}

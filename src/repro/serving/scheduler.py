@@ -35,6 +35,7 @@ from repro.core.trace import stacked_routers
 _rid_counter = itertools.count()
 
 WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
+PREEMPTED = "preempted"  # swapped out / dropped mid-decode (DESIGN.md §13)
 
 
 @dataclass(eq=False)  # identity equality: the prompt array is unhashable
@@ -54,6 +55,10 @@ class GenRequest:
     # per-request sampling temperature (None = the engine sampler's
     # default); applied row-wise by serving/sampler.sample
     temperature: Optional[float] = None
+    # preemption rank (DESIGN.md §13): higher wins.  Victims are chosen
+    # lowest-priority-first (latest arrival breaks ties), and a waiting
+    # request only preempts strictly lower-priority running ones
+    priority: int = 0
     # non-token conditioning consumed at admission (never per step):
     # enc-dec archs require extras["audio_embeds"] (S_e, D) — encoded
     # once into the read-only shared encoder-KV plane (DESIGN.md §12)
@@ -179,6 +184,8 @@ class Scheduler:
         self.finished: List[GenRequest] = []
         self.joins = 0
         self.evictions = 0
+        self.preemptions = 0
+        self.resumes = 0
 
     def submit(self, req: GenRequest) -> GenRequest:
         assert req.state == WAITING
@@ -223,6 +230,22 @@ class Scheduler:
         req.finish(reason)
         self.finished.append(req)
         self.evictions += 1
+
+    def preempt(self, req: GenRequest) -> None:
+        """Pull a running request off the batch mid-decode (its KV has
+        been swapped to host or dropped for recompute); it re-enters via
+        :meth:`resume` when the engine re-admits it (DESIGN.md §13)."""
+        assert req.state == RUNNING
+        self.running.remove(req)
+        req.state = PREEMPTED
+        self.preemptions += 1
+
+    def resume(self, req: GenRequest) -> None:
+        assert req.state == PREEMPTED
+        assert len(self.running) < self.max_slots
+        req.state = RUNNING
+        self.running.append(req)
+        self.resumes += 1
 
     def metrics(self) -> dict:
         """Queue/lifecycle counts for the telemetry ``engine`` namespace

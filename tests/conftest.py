@@ -18,7 +18,8 @@ from repro.models import transformer as T
 # the session — an optional-dependency skip must never silently retire
 # those invariants
 PROPERTY_MODULES = ("test_lru.py", "test_moe.py", "test_paged_kv.py",
-                    "test_quant.py", "test_recurrent.py", "test_runtime.py",
+                    "test_prefix_swap.py", "test_quant.py",
+                    "test_recurrent.py", "test_runtime.py",
                     "test_spec_decode.py", "test_zoo_serving.py")
 _skipped_property_tests = []
 

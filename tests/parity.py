@@ -49,6 +49,10 @@ CONTINUOUS_KV_VARIANTS: Dict[str, dict] = {
     "paged": dict(kv_page=16),
     "paged_exact": dict(kv_page=16, ragged_bucket=False),
     "paged_chunked": dict(kv_page=16, prefill_chunk=4),
+    # prefix-reuse mode (DESIGN.md §13): cached full pages are adopted
+    # at admission and prefill starts at the divergence point — the
+    # greedy stream must stay bitwise whether or not any prompt hits
+    "paged_prefix": dict(kv_page=8, prefix_cache_pages=8),
 }
 
 

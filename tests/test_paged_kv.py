@@ -360,8 +360,12 @@ def test_paged_engine_bitwise_matches_dense(tiny_moe_cfg, tiny_moe_params,
         parity.assert_tokens_equal(toks, base, name)
         s = eng.stats()
         assert s["kv_layout"] == "paged"
-        assert s["kv_pages_free"] == s["kv_pages_total"], \
-            "all pages must return to the pool at drain"
+        # at drain every page is either back in the free heap or pinned
+        # by exactly one prefix-cache node (each node holds one distinct
+        # page's reference) — free + cached partitions the pool
+        cached = eng._prefix.n_pages if eng._prefix is not None else 0
+        assert s["kv_pages_free"] + cached == s["kv_pages_total"], \
+            "all pages must return to the pool (or the cache) at drain"
     # and the dense baseline still matches the B=1 oracle
     parity.assert_tokens_equal(
         base, parity.oracle_streams(tiny_moe_params, tiny_moe_cfg,

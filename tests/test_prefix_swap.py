@@ -1,0 +1,354 @@
+"""Prefix caching + KV host-swap (DESIGN.md §13).
+
+Two layers of assurance:
+
+* an allocator-level property driver over ``PagePool`` + ``PrefixCache``
+  (no jax) that models page *contents* and checks, across interleaved
+  admit / adopt / diverge / release / evict schedules, that no page is
+  freed while referenced, no request ever observes another request's
+  divergent pages, and free + referenced always partitions the pool;
+* engine-level parity: prefix-hit admissions, swap-resumed and
+  recompute-resumed requests must emit bitwise the cold-start oracle
+  stream — on the plain plane and (with identical h2d counters) on the
+  packed offloaded plane — plus the feature-gating and no-leakage
+  regressions.
+
+Property tests run under hypothesis when available with a seeded
+stdlib-random fallback that ALWAYS runs (see tests/conftest.py).
+"""
+import random
+
+import numpy as np
+import pytest
+
+import parity
+from repro.serving.engine import ContinuousEngine
+from repro.serving.kv_manager import PagePool
+from repro.serving.prefix_cache import PrefixCache
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ======================================================================
+# Allocator-level property: PagePool refcounts x PrefixCache chains.
+def _drive_prefix_pool(n_pages, page_size, cache_pages, n_ops, seed):
+    """Interleaved admit(adopt)/finish(insert)/grow/evict schedule with
+    a page-content model.
+
+    ``content[pid]`` is the int32 token-block bytes the page's KV was
+    (notionally) prefilled from, or ``("tail", slot)`` for a private
+    partially-written tail page.  The load-bearing checks:
+
+    * every page a request adopts at admission holds EXACTLY its own
+      prompt's block for that ordinal (no divergent-page leakage);
+    * refcount(pid) == #slots holding pid + (1 if the cache holds pid),
+      and a page leaves the content model exactly when its last
+      reference drops (freed => scrubbed, never before);
+    * free + referenced partitions the pool after every op.
+    """
+    rng = random.Random(seed)
+    ps = page_size
+    pool = PagePool(n_pages, ps)
+    cache = PrefixCache(ps, cache_pages)
+    content = {}
+    prompts = {}
+    next_slot = 0
+
+    def block(prompt, o):
+        return np.ascontiguousarray(
+            prompt[o * ps:(o + 1) * ps], dtype=np.int32).tobytes()
+
+    def free_evicted(pids):
+        for pid in pids:
+            if pool.decref(pid):
+                del content[pid]  # freed -> scrubbed before reuse
+
+    def check():
+        expect = {}
+        for pids in pool.owned.values():
+            for pid in pids:
+                expect[pid] = expect.get(pid, 0) + 1
+        for nd in cache._nodes.values():
+            expect[nd.page] = expect.get(nd.page, 0) + 1
+        assert pool.refs == expect, \
+            f"refcounts drifted: {pool.refs} vs holders {expect}"
+        free, live = set(pool._free), set(pool.refs)
+        assert not (free & live), f"freed-while-referenced: {free & live}"
+        assert len(free) + len(live) == n_pages, "pool partition broken"
+        assert live == set(content), "content model out of sync"
+        # a cached page is immutable full-prompt KV: its content is the
+        # very block bytes its node is keyed by, and nodes never alias
+        pages = [nd.page for nd in cache._nodes.values()]
+        assert len(pages) == len(set(pages)), "cache nodes share a page"
+        for nd in cache._nodes.values():
+            assert content[nd.page] == nd.key[1], \
+                "cached page content diverged from its token block"
+
+    for _ in range(n_ops):
+        op = rng.random()
+        if op < 0.45 and len(prompts) < 6:
+            # admit: tiny alphabet so prompts collide, then diverge
+            prompt = np.array([rng.randrange(1, 4) for _ in
+                               range(rng.randrange(1, 4 * ps + 1))],
+                              np.int32)
+            base, pids = cache.lookup(prompt)
+            assert base == len(pids) * ps
+            for o, pid in enumerate(pids):
+                assert content[pid] == block(prompt, o), \
+                    "adopted another request's divergent page"
+            need = len(prompt) + rng.randrange(0, ps + 1)
+            if not pool.can_reserve(
+                    max(0, pool.pages_for(need) - len(pids))):
+                check()
+                continue
+            s = next_slot
+            next_slot += 1
+            pool.reserve(s, need, prealloc_pages=len(pids))
+            pool.adopt_shared(s, pids)
+            n_full = len(prompt) // ps
+            for pid in pool.ensure(s, len(prompt)):
+                o = pool.owned[s].index(pid)
+                content[pid] = (block(prompt, o) if o < n_full
+                                else ("tail", s))
+            prompts[s] = prompt
+        elif op < 0.65 and prompts:
+            # finish: publish the full-page prefix chain, then release
+            s = rng.choice(sorted(prompts))
+            prompt = prompts.pop(s)
+            n_full = len(prompt) // ps
+            if n_full and rng.random() < 0.8:
+                registered, evicted = cache.insert(
+                    prompt, pool.owned[s][:n_full])
+                for pid in registered:  # incref BEFORE freeing evicted
+                    pool.incref(pid)
+                free_evicted(evicted)
+            for pid in pool.release(s):
+                del content[pid]
+        elif op < 0.8 and prompts:
+            # decode growth: fill the reservation with private tails
+            s = rng.choice(sorted(prompts))
+            for pid in pool.ensure(s, pool.reserved[s] * ps):
+                content[pid] = ("tail", s)
+        else:
+            free_evicted(cache.evict_lru())
+        check()
+
+    for s in list(prompts):
+        prompts.pop(s)
+        for pid in pool.release(s):
+            del content[pid]
+    while cache.n_pages:
+        free_evicted(cache.evict_lru())
+    assert pool.n_free == n_pages and not pool.refs and not content, \
+        "drain leaked pages"
+
+
+PREFIX_FALLBACK_CASES = [
+    (8, 2, 4, 120, 0),
+    (6, 1, 3, 100, 1),
+    (16, 4, 8, 150, 2),
+    (4, 2, 1, 80, 3),
+    (12, 3, 6, 140, 4),
+]
+
+
+@pytest.mark.parametrize("n_pages,page_size,cache_pages,n_ops,seed",
+                         PREFIX_FALLBACK_CASES)
+def test_prefix_pool_seeded_fallback(n_pages, page_size, cache_pages,
+                                     n_ops, seed):
+    _drive_prefix_pool(n_pages, page_size, cache_pages, n_ops, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(n_pages=st.integers(2, 24), page_size=st.integers(1, 6),
+           cache_pages=st.integers(1, 12), n_ops=st.integers(10, 160),
+           seed=st.integers(0, 2**32 - 1))
+    def test_prefix_pool_property(n_pages, page_size, cache_pages,
+                                  n_ops, seed):
+        _drive_prefix_pool(n_pages, page_size, cache_pages, n_ops, seed)
+
+
+# ======================================================================
+# Engine parity: prefix hits must be invisible in the token stream.
+def _shared_prefix_prompts(cfg, sys_len, tails, seed=7):
+    rng = np.random.default_rng(seed)
+    sys_p = rng.integers(1, cfg.vocab_size, sys_len).astype(np.int32)
+    return [np.concatenate([sys_p, rng.integers(
+        1, cfg.vocab_size, int(n)).astype(np.int32)]) for n in tails]
+
+
+def test_prefix_hit_bitwise_and_skips_prefill(tiny_moe_cfg,
+                                              tiny_moe_params):
+    """Three prompts sharing a 24-token system prefix, serialized
+    through one slot so the first admission has published its pages
+    before the others look up: requests 2 and 3 must adopt all three
+    full prefix pages (24 hit tokens each) and still emit bitwise the
+    cold-start oracle stream."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts = _shared_prefix_prompts(cfg, 24, (5, 3, 6))
+    max_news = [6, 5, 4]
+    base = parity.oracle_streams(params, cfg, prompts, max_news)
+    toks, eng = parity.run_continuous(params, cfg, prompts, max_news,
+                                      max_slots=1, slot_len=64,
+                                      kv_page=8, prefix_cache_pages=12)
+    parity.assert_tokens_equal(toks, base, "prefix-hit")
+    assert eng._prefills_skipped == 2
+    assert eng._prefix_hit_tokens == 48  # 2 hits x 3 full pages x 8
+    s = eng.stats()
+    assert s["kv_pages_free"] + eng._prefix.n_pages == s["kv_pages_total"]
+
+
+def test_prefix_hit_packed_plane_counter_parity(tiny_moe_cfg,
+                                                tiny_moe_params):
+    """Packed offloaded plane: with the expert buffer sized to hold
+    every expert (cache_size == num_experts, no eviction) the set of
+    demand-loaded (layer, expert) pairs is identical whether or not
+    shared prefills are skipped — the cache-warming cold prefill touches
+    exactly the experts the skipped re-prefills would have.  Tokens AND
+    h2d counters must match the no-cache run."""
+    from repro.configs.base import OffloadSpec
+    from repro.core.offload_engine import OffloadEngine
+
+    cfg = tiny_moe_cfg
+    spec = OffloadSpec(cache_size=cfg.moe.num_experts, num_speculative=0,
+                       expert_bits=3, attn_bits=4)
+    off = OffloadEngine(tiny_moe_params, cfg, spec, quantized=True)
+    prompts = _shared_prefix_prompts(cfg, 16, (4, 6, 3), seed=13)
+    max_news = [5, 6, 4]
+
+    def run(**kw):
+        toks, eng = parity.run_continuous(
+            None, cfg, prompts, max_news, max_slots=1, slot_len=48,
+            max_steps=400, offload=off, kv_page=8, **kw)
+        return toks, parity.continuous_counters(eng), eng
+
+    base, base_c, _ = run()
+    toks, c, eng = run(prefix_cache_pages=8)
+    parity.assert_tokens_equal(toks, base, "packed prefix-hit")
+    assert c == base_c, f"h2d counters diverged: {c} vs {base_c}"
+    assert eng._prefills_skipped == 2
+
+
+def _run_preempted(params, cfg, prompts, max_news, *, kv_host_pages,
+                   kv_pages_total, kv_page=4, max_slots=3):
+    eng = ContinuousEngine(params, cfg, max_slots=max_slots, slot_len=48,
+                           eos_id=None, kv_page=kv_page,
+                           kv_pages_total=kv_pages_total,
+                           preemption=True, kv_host_pages=kv_host_pages)
+    reqs = [eng.submit(p, m, priority=pr) for p, m, pr in
+            zip(prompts, max_news, (0, 0, 5))]
+    eng.run(max_steps=800)
+    unfinished = [r.rid for r in reqs if r.state != "finished"]
+    assert not unfinished, f"requests never finished: {unfinished}"
+    return [r.generated for r in reqs], eng
+
+
+def test_preempt_swap_resume_bitwise(tiny_moe_cfg, tiny_moe_params):
+    """Growth-squeeze on a starved pool: the worst cases sum past the
+    pool, so mid-decode growth must preempt a low-priority victim; with
+    a host pool its pages round-trip d2h/h2d and the resumed stream is
+    bitwise the uninterrupted oracle."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts = parity.make_prompts(cfg, (9, 7, 8), seed=11)
+    max_news = [8, 8, 8]
+    base = parity.oracle_streams(params, cfg, prompts, max_news)
+    toks, eng = _run_preempted(params, cfg, prompts, max_news,
+                               kv_host_pages=8, kv_pages_total=10)
+    parity.assert_tokens_equal(toks, base, "swap-resume")
+    assert eng.sched.preemptions >= 1 and eng.sched.resumes >= 1
+    assert eng._recomputes == 0, "host pool sized to fit: must swap"
+    hs = eng.kv.host_stats()
+    assert hs["swap_out_bytes"] > 0
+    assert hs["swap_out_bytes"] == hs["swap_in_bytes"]
+
+
+def test_preempt_recompute_resume_bitwise(tiny_moe_cfg, tiny_moe_params):
+    """Same squeeze with kv_host_pages=0: the victim's KV is dropped and
+    rebuilt by re-prefilling prompt + generated — still bitwise."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts = parity.make_prompts(cfg, (9, 7, 8), seed=11)
+    max_news = [8, 8, 8]
+    base = parity.oracle_streams(params, cfg, prompts, max_news)
+    toks, eng = _run_preempted(params, cfg, prompts, max_news,
+                               kv_host_pages=0, kv_pages_total=10)
+    parity.assert_tokens_equal(toks, base, "recompute-resume")
+    assert eng.sched.preemptions >= 1 and eng.sched.resumes >= 1
+    assert eng._recomputes == eng.sched.resumes
+    assert eng.kv.host_stats()["swap_out_bytes"] == 0
+
+
+def test_priority_admission_preempts_lower(tiny_moe_cfg,
+                                           tiny_moe_params):
+    """Admission-stall preemption: a pool too small to co-run all three
+    requests admits the late high-priority one by swapping out a
+    strictly-lower-priority victim instead of queueing behind it."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts = parity.make_prompts(cfg, (9, 7, 8), seed=11)
+    max_news = [8, 8, 8]
+    base = parity.oracle_streams(params, cfg, prompts, max_news)
+    toks, eng = _run_preempted(params, cfg, prompts, max_news,
+                               kv_host_pages=8, kv_pages_total=6)
+    parity.assert_tokens_equal(toks, base, "priority admission")
+    assert eng.sched.preemptions >= 1
+    s = eng.stats()
+    assert s["kv_pages_free"] == s["kv_pages_total"]
+
+
+def test_exhaustion_without_preemption_serializes(tiny_moe_cfg,
+                                                  tiny_moe_params):
+    """Satellite guard: page exhaustion with preemption DISABLED must
+    keep the PR-5 discipline — admissions stall and serialize, nothing
+    is refused or evicted, and the streams match the oracle bitwise
+    (prefix cache on, so cached pages must also yield to admissions)."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts = parity.make_prompts(cfg, (9, 8, 7), seed=5)
+    max_news = [8, 8, 8]
+    base = parity.oracle_streams(params, cfg, prompts, max_news)
+    # 5 pages of 4 = exactly one request's worst case (9+8 -> 5 pages)
+    toks, eng = parity.run_continuous(params, cfg, prompts, max_news,
+                                      max_slots=3, slot_len=48,
+                                      kv_page=4, kv_pages_total=5,
+                                      prefix_cache_pages=4)
+    parity.assert_tokens_equal(toks, base, "serialized exhaustion")
+    assert eng.sched.preemptions == 0
+    assert eng.stats()["kv_pages_peak_committed"] <= 5
+
+
+def test_no_leakage_through_cache_eviction(tiny_moe_cfg,
+                                           tiny_moe_params):
+    """Capacity-1 cache thrash: B's insert evicts A's chain and A's
+    pages get scrubbed and reused; resubmitting A must re-prefill from
+    scratch (or a partial hit) and still match the oracle — no stale KV
+    survives the cache."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    a, b = _shared_prefix_prompts(cfg, 20, (4,)), \
+        parity.make_prompts(cfg, (23,), seed=99)
+    prompts = [a[0], b[0], a[0]]
+    max_news = [6, 6, 6]
+    base = parity.oracle_streams(params, cfg, prompts, max_news)
+    toks, eng = parity.run_continuous(params, cfg, prompts, max_news,
+                                      max_slots=1, slot_len=64,
+                                      kv_page=8, prefix_cache_pages=1)
+    parity.assert_tokens_equal(toks, base, "cache eviction reuse")
+    assert eng._prefix.evicted_pages > 0
+
+
+def test_feature_gating_validation(tiny_moe_cfg, tiny_moe_params):
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    with pytest.raises(ValueError, match="block-paged"):
+        ContinuousEngine(params, cfg, max_slots=1, slot_len=32,
+                         prefix_cache_pages=4)
+    with pytest.raises(ValueError, match="block-paged"):
+        ContinuousEngine(params, cfg, max_slots=1, slot_len=32,
+                         preemption=True)
+    with pytest.raises(ValueError, match="preemption"):
+        ContinuousEngine(params, cfg, max_slots=1, slot_len=32,
+                         kv_page=8, kv_host_pages=4)
+    with pytest.raises(ValueError, match="draft-and-verify"):
+        ContinuousEngine(params, cfg, max_slots=1, slot_len=32,
+                         kv_page=8, preemption=True, num_draft_tokens=2)

@@ -14,7 +14,8 @@ import pytest
 from repro.configs import get_config
 from repro.configs.base import OffloadSpec
 from repro.launch.serve import (build_parser, resolve_draft,
-                                resolve_offload_spec, resolve_top_k)
+                                resolve_kv_features, resolve_offload_spec,
+                                resolve_top_k)
 
 
 def _spec_for(argv):
@@ -112,6 +113,52 @@ def test_top_k_override_applies_and_clamps():
 def test_top_k_override_rejects_dense_arch():
     with pytest.raises(ValueError, match="dense"):
         resolve_top_k(get_config("stablelm-1.6b"), 1)
+
+
+# ----------------------------------------------------------------------
+# prefix-cache / preemption flags (DESIGN.md §13): same None-vs-0
+# discipline — 0 pages is the no-cache (resp. recompute-only) ablation,
+# never a silent fall-back to a default
+def test_kv_features_unset_are_off():
+    args = build_parser().parse_args([])
+    assert args.prefix_cache is None
+    assert args.kv_host_pages is None
+    assert args.preemption == "off"
+    assert resolve_kv_features(None, "off", None) == (0, False, 0)
+
+
+def test_prefix_cache_zero_is_real_ablation():
+    # --prefix-cache 0 must disable the cache, not or-truthiness into
+    # some default budget; negatives are an explicit error
+    assert resolve_kv_features(0, "off", None) == (0, False, 0)
+    assert resolve_kv_features(0, "on", None) == (0, True, 0)
+    with pytest.raises(ValueError, match=">= 0"):
+        resolve_kv_features(-1, "off", None)
+
+
+def test_kv_host_pages_zero_is_recompute_only():
+    # --kv-host-pages 0 with preemption on = drop-and-recompute mode, a
+    # real ablation distinct from "flag not given"
+    assert resolve_kv_features(None, "on", 0) == (0, True, 0)
+    assert resolve_kv_features(4, "on", 16) == (4, True, 16)
+    with pytest.raises(ValueError, match=">= 0"):
+        resolve_kv_features(None, "on", -8)
+
+
+def test_kv_host_pages_without_preemption_rejected():
+    # a swap pool nothing ever swaps into is a config error, even at 0
+    with pytest.raises(ValueError, match="--preemption"):
+        resolve_kv_features(None, "off", 16)
+    with pytest.raises(ValueError, match="--preemption"):
+        resolve_kv_features(None, "off", 0)
+
+
+def test_kv_feature_flags_parse():
+    args = build_parser().parse_args(
+        ["--continuous", "--kv-page", "8", "--prefix-cache", "0",
+         "--preemption", "on", "--kv-host-pages", "0"])
+    assert resolve_kv_features(args.prefix_cache, args.preemption,
+                               args.kv_host_pages) == (0, True, 0)
 
 
 def test_config_alias_for_arch():

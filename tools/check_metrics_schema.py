@@ -48,15 +48,18 @@ def expected_for_mode(mode):
     timing = bool(mode.get("timing", False))
     plane = mode.get("plane", "plain")
     roofline = bool(mode.get("roofline", timing))
-    # read via .get: files from before the speculation PR carry no
-    # "speculative" field and must keep validating
+    # read via .get: files from before the speculation / prefix-caching
+    # PRs carry none of these fields and must keep validating
     speculative = bool(mode.get("speculative", False))
+    prefix_cache = bool(mode.get("prefix_cache", False))
+    kv_host = bool(mode.get("kv_host", False))
     if engine == "continuous":
         return expected_namespaces(
             kv_layout=mode.get("kv_layout", "dense"),
             offloaded=bool(mode.get("offloaded", False)),
             timing=timing, plane=plane, roofline=roofline,
-            speculative=speculative)
+            speculative=speculative, prefix_cache=prefix_cache,
+            kv_host=kv_host)
     if engine == "offload":
         # the batch OffloadEngine has no scheduler/KV-slot plane or step
         # loop — it carries traffic + jit always, request/exec/roofline
