@@ -48,6 +48,15 @@ from repro.quant import hqq
 
 EXPERT_MATS = ("w_gate", "w_up", "w_down")
 
+# Fault-injection site name for the h2d fetch this module's ``acquire``
+# performs (DESIGN.md §14).  ``acquire`` itself is jit-pure — it cannot
+# consult a host-side injector — so the executor's per-layer Python loop
+# injects AT this boundary: a fired fault means "the gather h2d for this
+# layer's routed experts failed", and the executor retries or degrades
+# to store-direct streaming (``models/moe.moe_apply_packed_stream``)
+# without ever entering the pool path for that layer.
+FAULT_SITE = "expert_fetch"
+
 
 class PackedExperts(NamedTuple):
     """Stacked packed expert weights (see module docstring for tiers)."""

@@ -200,6 +200,25 @@ def build_parser() -> argparse.ArgumentParser:
                          "--preemption on): preempted KV stages d2h into "
                          "it and back on resume; 0 drops KV and resumes "
                          "by recompute (a real ablation)")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="seeded fault schedule (DESIGN.md §14), e.g. "
+                         "'expert_fetch=0.05,nan_logits@2,slow_step@5:25' "
+                         "— site=RATE fires per opportunity, site@N,M at "
+                         "ordinals, :MS adds a stall; sites: expert_fetch "
+                         "swap_out swap_in page_pool nan_logits slow_step "
+                         "(seeded by --seed; needs --continuous)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request wall-clock deadline; expired "
+                         "requests finish with status deadline_exceeded "
+                         "and release every resource they held")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="bounded admission queue: submissions beyond CAP "
+                         "waiting requests are rejected (backpressure) "
+                         "instead of growing the queue without bound")
+    ap.add_argument("--cancel-every", type=int, default=None, metavar="N",
+                    help="cancel every Nth submitted request once it has "
+                         "emitted a token — the client-abandonment chaos "
+                         "driver (DESIGN.md §14)")
     ap.add_argument("--policy", default="overlap",
                     choices=["fcfs", "overlap"])
     ap.add_argument("--sampler", default="greedy",
@@ -294,6 +313,12 @@ def main():
         raise SystemExit("--prefix-cache/--preemption target the "
                          "continuous engine's paged KV plane; add "
                          "--continuous --kv-page")
+    if ((args.inject_faults or args.deadline_ms is not None
+         or args.queue_cap is not None or args.cancel_every is not None)
+            and not args.continuous):
+        raise SystemExit("--inject-faults/--deadline-ms/--queue-cap/"
+                         "--cancel-every target the continuous engine's "
+                         "request lifecycle; add --continuous")
     if ((args.metrics_json is not None or args.trace is not None)
             and not (args.continuous or args.offload)):
         raise SystemExit("--metrics-json/--trace instrument the continuous "
@@ -395,6 +420,14 @@ def main():
             draft_cfg = get_config(draft_name)
             draft_params = T.init_model(jax.random.key(args.seed),
                                         draft_cfg)
+        faults = None
+        if args.inject_faults:
+            from repro.serving.faults import FaultInjector
+            try:
+                faults = FaultInjector.parse(args.inject_faults,
+                                             seed=args.seed)
+            except ValueError as e:
+                raise SystemExit(f"--inject-faults: {e}")
         try:
             eng = ContinuousEngine(
                 params, cfg, max_slots=args.max_slots,
@@ -410,7 +443,9 @@ def main():
                 kv_host_pages=host_pages,
                 telemetry=telem,
                 draft_params=draft_params, draft_cfg=draft_cfg,
-                num_draft_tokens=draft_k)
+                num_draft_tokens=draft_k,
+                faults=faults, queue_cap=args.queue_cap,
+                deadline_ms=args.deadline_ms)
         except ValueError as e:
             raise SystemExit(f"--continuous: {e}")
 
@@ -426,9 +461,14 @@ def main():
         # convention as the smoke tests)
         frontend = np.random.default_rng(args.seed + 1)
         submitted = 0
+        rejected = 0
+        pending_cancel = []
+        # the run must also drain SWAPPED requests: a preempted request
+        # is neither waiting nor running while parked off-device
         while submitted < args.n_requests or eng.sched.has_waiting \
-                or eng.sched.n_running:
-            idle = (not eng.sched.has_waiting) and eng.sched.n_running == 0
+                or eng.sched.n_running or eng._swapped:
+            idle = (not eng.sched.has_waiting) and eng.sched.n_running == 0 \
+                and not eng._swapped
             while (submitted < args.n_requests
                    and (idle or arrivals.random() < args.arrival_rate)):
                 idle = False
@@ -438,13 +478,26 @@ def main():
                     extras = {"audio_embeds": frontend.standard_normal(
                         (cfg.encoder_seq, cfg.d_model)).astype(np.float32)}
                 try:
-                    eng.submit(e, args.max_new, on_finish=on_finish,
-                               extras=extras)
+                    req = eng.submit(e, args.max_new, on_finish=on_finish,
+                                     extras=extras)
                 except ValueError as err:
                     raise SystemExit(f"--continuous: {err} (raise "
                                      f"--slot-len or lower --max-new)")
+                if req.status == "rejected":
+                    rejected += 1
+                elif (args.cancel_every and submitted % args.cancel_every
+                        == args.cancel_every - 1):
+                    pending_cancel.append(req)
                 submitted += 1
             eng.step()
+            # chaos driver: abandon marked requests once they have
+            # streamed a token (mid-decode — the interesting case)
+            for req in list(pending_cancel):
+                if req.state == "finished":
+                    pending_cancel.remove(req)
+                elif req.generated:
+                    eng.cancel(req.rid)
+                    pending_cancel.remove(req)
         s = eng.stats()
         print(f"[continuous] {s['finished']} requests, {s['tokens']} tokens "
               f"in {s['steps']} steps ({s['tokens_per_step']:.2f} tok/step, "
@@ -472,6 +525,18 @@ def main():
                   f"recompute); swap traffic "
                   f"{(km['swap_out_bytes'] + km['swap_in_bytes'])/1e6:.1f}"
                   f"MB over a {km['pages_total']}-page host pool")
+        if (args.inject_faults or args.cancel_every or args.queue_cap
+                or args.deadline_ms is not None):
+            fm = eng.metrics()["faults"]
+            print(f"[faults] {fm['injected']} injected "
+                  f"(fetch={fm['fired_expert_fetch']} "
+                  f"retries={fm['fetch_retries']} "
+                  f"degraded={fm['fetch_degraded']} "
+                  f"nan={fm['nan_quarantined']}); terminal statuses: "
+                  f"{fm['completed']} completed, {fm['cancelled']} "
+                  f"cancelled, {fm['deadline_exceeded']} "
+                  f"deadline_exceeded, {fm['rejected']} rejected, "
+                  f"{fm['failed']} failed (DESIGN.md §14)")
         print_telemetry_summary(eng.obs)
         print_spec_summary(eng.obs)
         write_outputs(args, eng.obs, {
@@ -480,7 +545,8 @@ def main():
             "offloaded": offload_eng is not None,
             "timing": eng.obs.timing, "plane": eng._exec.plane,
             "roofline": eng.obs.timing, "speculative": draft_k > 0,
-            "prefix_cache": prefix_pages > 0, "kv_host": preempt})
+            "prefix_cache": prefix_pages > 0, "kv_host": preempt,
+            "faults": True})
         return
 
     eng = ServeEngine(params, cfg, SamplerConfig(kind=args.sampler))

@@ -32,6 +32,10 @@ Metric names are ``namespace.key``.  Namespaces:
 * ``kv_host``  — KV host-swap / preemption accounting (collector; only
   when preemption is on): host pool occupancy, swap traffic bytes and
   the preempt/resume/recompute lifecycle counts (DESIGN.md §13).
+* ``faults``   — fault-injection + terminal-status accounting
+  (collector; always present on ContinuousEngine so chaos and clean
+  runs share one schema — all fire counts are zero without an
+  injector; DESIGN.md §14).
 
 The legacy flat ``ContinuousEngine.stats()`` dict is a *projection* of
 this schema (``repro.obs.flatten_legacy``): ``engine.*`` keys flatten
@@ -47,7 +51,7 @@ SCHEMA_VERSION = 1
 
 ENGINE_KEYS = frozenset({
     "steps", "joins", "evictions", "finished", "waiting", "running",
-    "tokens", "tokens_per_step", "decode_tokens",
+    "tokens", "tokens_per_step", "decode_tokens", "queue_rejected",
 })
 
 KV_KEYS_DENSE = frozenset({
@@ -123,6 +127,19 @@ KV_HOST_KEYS = frozenset({
     "swap_in_bytes", "preemptions", "resumes", "recomputes", "swapped_now",
 })
 
+# fault-injection + request-lifecycle accounting (DESIGN.md §14): the
+# injector's per-site fire counts (all zero on a fault-free engine — the
+# namespace is always present so chaos and clean runs share one schema),
+# the executor's fetch retry/degrade ladder, NaN quarantines, and the
+# terminal-status census over every request the engine has ever seen
+FAULTS_KEYS = frozenset({
+    "enabled", "injected", "fired_expert_fetch", "fired_swap_out",
+    "fired_swap_in", "fired_page_pool", "fired_nan_logits",
+    "fired_slow_step", "fetch_retries", "fetch_degraded",
+    "nan_quarantined", "completed", "cancelled", "deadline_exceeded",
+    "rejected", "failed",
+})
+
 HISTOGRAM_FIELDS = frozenset({"count", "sum", "min", "max", "p50", "p95",
                               "buckets"})
 
@@ -130,7 +147,8 @@ HISTOGRAM_FIELDS = frozenset({"count", "sum", "min", "max", "p50", "p95",
 def expected_namespaces(*, kv_layout: str = "dense", offloaded: bool = False,
                         timing: bool = True, plane: str = "plain",
                         roofline: bool = True, speculative: bool = False,
-                        prefix_cache: bool = False, kv_host: bool = False
+                        prefix_cache: bool = False, kv_host: bool = False,
+                        faults: bool = True
                         ) -> Dict[str, FrozenSet[str]]:
     """The exact ``{namespace: key set}`` a ContinuousEngine snapshot
     carries for one engine/plane/KV-layout combination — what the
@@ -148,6 +166,8 @@ def expected_namespaces(*, kv_layout: str = "dense", offloaded: bool = False,
         out["prefix"] = PREFIX_KEYS
     if kv_host:
         out["kv_host"] = KV_HOST_KEYS
+    if faults:
+        out["faults"] = FAULTS_KEYS
     if timing:
         out["step"] = STEP_KEYS
         out["request"] = REQUEST_KEYS

@@ -35,6 +35,7 @@ names, so every engine and every Executor instance of the same
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Dict, Optional
 
 import jax
@@ -82,6 +83,15 @@ class Executor:
         # engine hands its decoder to ContinuousEngine), so the LAST
         # attached observer wins.
         self._obs = None
+        # fault-injection plane (DESIGN.md §14): consulted host-side at
+        # the expert-fetch boundary of the per-layer decode loop — jit
+        # programs never see it.  Present on every plane (the plain
+        # plane simply has no fetch site) so engines can attach/detach
+        # unconditionally, mirroring the observer protocol.
+        self._finj = None
+        self._fetch_retries = 2
+        self._fetch_backoff_ms = 0.0
+        self.fault_counters = {"fetch_retries": 0, "fetch_degraded": 0}
         if self.packed:
             if spec is None or store is None:
                 raise ValueError("packed planes need spec= and store= "
@@ -115,6 +125,39 @@ class Executor:
         ``begin()`` / ``mark(phase)`` whose phases match this plane's
         ``repro.obs.schema.EXEC_KEYS_BY_PLANE`` entry."""
         self._obs = obs
+
+    def set_fault_injector(self, inj, *, max_retries: int = 2,
+                           backoff_ms: float = 0.0) -> None:
+        """Attach (or clear with ``None``) the seeded fault plane
+        (DESIGN.md §14).  Site here: ``expert_fetch``
+        (``core.expert_pool.FAULT_SITE``) — a fired fault means the
+        pool-path h2d gather for one MoE layer failed; the decode loop
+        retries up to ``max_retries`` times (sleeping ``backoff_ms``
+        between attempts) and then degrades that layer to store-direct
+        streaming, dropping speculative staging for the step.  Executors
+        are shared across engines, so — like the observer — the LAST
+        attached injector wins."""
+        self._finj = inj
+        self._fetch_retries = int(max_retries)
+        self._fetch_backoff_ms = float(backoff_ms)
+        # shared-executor semantics: each engine attaches on construction,
+        # so the ladder counters always describe the CURRENT engine's run
+        self.fault_counters = {"fetch_retries": 0, "fetch_degraded": 0}
+
+    def _fetch_faulted(self) -> bool:
+        """One MoE layer's fetch boundary: did the (retried) h2d fetch
+        ultimately fail?  True = degrade this layer."""
+        inj = self._finj
+        if inj is None or not inj.fires(EP.FAULT_SITE):
+            return False
+        for _ in range(self._fetch_retries):
+            self.fault_counters["fetch_retries"] += 1
+            if self._fetch_backoff_ms > 0.0:
+                time.sleep(self._fetch_backoff_ms / 1e3)
+            if not inj.fires(EP.FAULT_SITE):
+                return False  # a retry went through
+        self.fault_counters["fetch_degraded"] += 1
+        return True
 
     # ------------------------------------------------------------------
     # state / pool construction
@@ -287,6 +330,27 @@ class Executor:
                 ("packed_chunk_moe", cfg, fused), make)
         return self._blk["chunk_moe"]
 
+    def _chunk_moe_ids_blk(self):
+        """Store-direct MoE that also returns the routed expert ids —
+        the degraded decode path (DESIGN.md §14): same
+        ``moe_apply_packed_stream`` -> ``_packed_compute`` pipeline as
+        the pool path, so its activations are bitwise the pool path's;
+        only the LRU/transfer counters differ (no pool traffic)."""
+        if "chunk_moe_ids" not in self._blk:
+            cfg, fused = self.cfg, self.fused
+
+            def make():
+                def fn(p, x, h2, store, lm):
+                    B, C, D = h2.shape
+                    y2d, info = M.moe_apply_packed_stream(
+                        p["moe"], cfg, h2.reshape(B * C, D), store, lm,
+                        fused=fused)
+                    return x + y2d.reshape(B, C, D), info["ids"]
+                return jax.jit(fn)
+            self._blk["chunk_moe_ids"] = T.cached_jit(
+                ("packed_chunk_moe_ids", cfg, fused), make)
+        return self._blk["chunk_moe_ids"]
+
     # ------------------------------------------------------------------
     def decode(self, state, tokens, pstate=None, active=None, *,
                collect_info: bool = False):
@@ -339,6 +403,22 @@ class Executor:
             st_l = T.decode_state_layer(state, cfg, l)
             if l in self.moe_ordinal:
                 lm = jnp.asarray(self.moe_ordinal[l], jnp.int32)
+                if self._fetch_faulted():
+                    # retry ladder exhausted (DESIGN.md §14): degrade
+                    # this layer to store-direct streaming — bitwise the
+                    # pool path's activations (shared _packed_compute),
+                    # zero pool traffic, no speculative staging
+                    x, st_l, h2 = self._mixer_blk(kind)(
+                        self._layer_p[l], x, st_l, pos, pages, active)
+                    if obs is not None:
+                        obs.mark("mixer" if self.pipelined else "block")
+                    x, ids = self._chunk_moe_ids_blk()(
+                        self._layer_p[l], x, h2, self.store, lm)
+                    if obs is not None:
+                        obs.mark("moe" if self.pipelined else "block")
+                    route_ids.append(ids)
+                    state = T.set_decode_state_layer(state, cfg, l, st_l)
+                    continue
                 if self.pipelined:
                     x, st_l, h2 = self._mixer_blk(kind)(
                         self._layer_p[l], x, st_l, pos, pages, active)

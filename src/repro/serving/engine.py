@@ -40,6 +40,7 @@ traffic, DESIGN.md §8).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -53,6 +54,7 @@ from repro.data.pipeline import EOS
 from repro.obs import Telemetry, jit_cache_metrics
 from repro.runtime import (Admission, ChunkTask, Executor, StepPlan,
                            TokenBudgetPolicy)
+from repro.serving.faults import SITES as FAULT_SITES
 from repro.serving.kv_manager import KVSlotManager, StateManager
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.scheduler import (RUNNING, GenRequest, Scheduler,
@@ -165,7 +167,13 @@ class ContinuousEngine:
                  telemetry: Optional[Telemetry] = None,
                  draft_params=None,
                  draft_cfg: Optional[ModelConfig] = None,
-                 num_draft_tokens: int = 0):
+                 num_draft_tokens: int = 0,
+                 faults=None,
+                 check_invariants: bool = False,
+                 queue_cap: Optional[int] = None,
+                 deadline_ms: Optional[float] = None,
+                 fetch_retries: int = 2,
+                 fetch_backoff_ms: float = 0.0):
         """``offload``: a packed :class:`~repro.core.offload_engine.
         OffloadEngine` (``quantized=True``) switches this engine into
         **offloaded decode mode** (DESIGN.md §6): experts stay HQQ-packed
@@ -232,7 +240,25 @@ class ContinuousEngine:
         ``Telemetry.off()``: only the pull-time collectors that back
         :meth:`metrics` / :meth:`stats` exist, the decode loop carries
         zero instrumentation, and generated tokens are bitwise identical
-        either way (tests/test_obs.py)."""
+        either way (tests/test_obs.py).
+
+        ``faults``: a seeded :class:`repro.serving.faults.FaultInjector`
+        turns on the fault-injection plane (DESIGN.md §14): transient
+        expert-fetch failures retry ``fetch_retries`` times (sleeping
+        ``fetch_backoff_ms`` between attempts) then degrade to store-
+        direct streaming; page-pool/swap faults exercise the admission
+        and preemption stall paths; ``nan_logits`` poisons one decode
+        row, which is quarantined (terminal status ``failed``) while
+        every other row's tokens stay bitwise the fault-free run's.
+        ``None`` (default) removes every injection check from the hot
+        path.  ``check_invariants=True`` runs the full step-boundary
+        accounting audit (:meth:`check_invariants`) after EVERY step.
+        ``queue_cap`` bounds the admission queue — :meth:`submit` on a
+        full queue returns a request already finished with terminal
+        status ``rejected`` (backpressure, never unbounded growth).
+        ``deadline_ms`` is the default per-request wall-clock budget;
+        per-request ``deadline_ms`` / ``deadline_steps`` on submit()
+        override it."""
         self.offload = offload
         if offload is not None:
             if offload._decoder is None:
@@ -261,7 +287,19 @@ class ContinuousEngine:
         if self.paged:
             slot_len = self.kv.slot_len  # per-request cap, page-rounded
         self.slot_len = slot_len
-        self.sched = Scheduler(max_slots, policy)
+        self.sched = Scheduler(max_slots, policy, queue_cap=queue_cap)
+        # --------------------------------------------------------------
+        # fault-injection plane + request-lifecycle hardening (§14)
+        self.faults = faults
+        self._check_inv = bool(check_invariants)
+        self._deadline_ms = deadline_ms
+        self._nan_quarantined = 0
+        # executors can be shared (the offload engine hands over its
+        # decoder) — like set_observer, the last engine to attach wins
+        self._exec.set_fault_injector(faults, max_retries=fetch_retries,
+                                      backoff_ms=fetch_backoff_ms)
+        if hasattr(self.kv, "set_fault_injector"):
+            self.kv.set_fault_injector(faults)
         # --------------------------------------------------------------
         # prefix reuse + preemption (DESIGN.md §13)
         self._prefix = None
@@ -349,6 +387,9 @@ class ContinuousEngine:
         reg.register_collector("engine", self._engine_metrics)
         reg.register_collector("kv", self.kv.metrics)
         reg.register_collector("jit", jit_cache_metrics)
+        # always present — chaos and clean runs share one schema (all
+        # fire counts are simply zero without an injector)
+        reg.register_collector("faults", self._faults_metrics)
         if offload is not None:
             reg.register_collector("offload", self._offload_metrics)
         if self._prefix is not None:
@@ -432,7 +473,9 @@ class ContinuousEngine:
     def submit(self, prompt, max_new_tokens: int = 32, on_token=None,
                on_finish=None, temperature: Optional[float] = None,
                extras: Optional[dict] = None,
-               priority: int = 0) -> GenRequest:
+               priority: int = 0,
+               deadline_ms: Optional[float] = None,
+               deadline_steps: Optional[int] = None) -> GenRequest:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size > 0, "empty prompt"
         if self._preempt:
@@ -479,9 +522,18 @@ class ContinuousEngine:
         req = GenRequest(prompt=prompt, max_new_tokens=max_new_tokens,
                          arrival=self.step_count, on_token=on_token,
                          on_finish=on_finish, temperature=temperature,
-                         extras=extras, priority=priority)
-        self.sched.submit(req)
+                         extras=extras, priority=priority,
+                         deadline_ms=(deadline_ms if deadline_ms is not None
+                                      else self._deadline_ms),
+                         deadline_steps=deadline_steps,
+                         submit_ns=time.perf_counter_ns())
         self.obs.req_submitted(req.rid, self.step_count)
+        if not self.sched.submit(req):
+            # bounded admission queue is full: reject with backpressure —
+            # the request is terminal NOW, never retained (DESIGN.md §14)
+            req.finish("rejected")
+            self.obs.req_finished(req.rid, 0, "rejected")
+            return req
         return req
 
     # ------------------------------------------------------------------
@@ -686,6 +738,12 @@ class ContinuousEngine:
         way under greedy decode."""
         sw = min(self._swapped, key=lambda s: (-s.req.priority, s.seq))
         req = sw.req
+        if (sw.blob is not None and self.faults is not None
+                and self.faults.fires("swap_in")):
+            # h2d restage failed: drop the staged pages and fall to the
+            # degrade rung below blob resume — recompute (DESIGN.md §14)
+            self.kv.discard_blob(sw.blob)
+            sw.blob = None
         if sw.blob is not None:
             while not self.kv.can_admit(sw.n_tokens + 1):
                 if not self._make_room(req):
@@ -794,6 +852,16 @@ class ContinuousEngine:
                     self.tokens[adm.slot, 0] = int(adm.resume_tok)
                     self._admissions.remove(adm)
                     continue
+                if self.faults is not None:
+                    # a genuinely-poisoned prefill fails at its first
+                    # sample, before the row ever joins the decode batch
+                    row = np.asarray(logits[:, -1])
+                    if not np.isfinite(row).all():
+                        self._nan_quarantined += 1
+                        self._admissions.remove(adm)
+                        self._fail_row(req, "nan")
+                        finished.append(req)
+                        continue
                 first = int(self._sample_rows(logits[:, -1], [req])[0])
                 req.emit(first)
                 if self._done(req, first):
@@ -866,10 +934,139 @@ class ContinuousEngine:
                 else "length")
 
     # ------------------------------------------------------------------
+    # request-lifecycle hardening (DESIGN.md §14)
+    def _fail_row(self, req: GenRequest, reason: str) -> None:
+        """Terminal exit for a RUNNING row: release its slot (pages
+        decref-then-free, draft ring unbound) before the scheduler sees
+        the eviction — the release order every normal finish uses."""
+        self.kv.release(req.slot)
+        if self.spec_k > 0:
+            self._draft_rid[req.slot] = -1
+        self.sched.evict(req, reason)
+        self.obs.req_finished(req.rid, len(req.generated), reason)
+
+    def _terminate(self, rid: int, reason: str) -> bool:
+        """Tear one in-flight request down wherever it currently lives —
+        waiting queue, mid-prefill admission, running row, or swapped
+        out — releasing paged KV, draft-ring binding and (recompute
+        path) host-staged pages without leaking.  Prefix-cache refs the
+        request's prompt REGISTERED survive by design: cached pages are
+        the cache's capital, not the request's."""
+        for req in self.sched.waiting:
+            if req.rid == rid:
+                self.sched.drop(req, reason)
+                self.obs.req_finished(rid, len(req.generated), reason)
+                return True
+        # mid-prefill: the request is in sched.running WITH an admission
+        # record — tear the admission first so the chunk plan forgets it
+        for adm in self._admissions:
+            if adm.rid == rid:
+                self._admissions.remove(adm)
+                self._fail_row(adm.req, reason)
+                return True
+        for req in self.sched.running:
+            if req.rid == rid:
+                self._fail_row(req, reason)
+                return True
+        for sw in self._swapped:
+            if sw.req.rid == rid:
+                self._swapped.remove(sw)
+                if sw.blob is not None:
+                    self.kv.discard_blob(sw.blob)
+                self.sched.drop(sw.req, reason)
+                self.obs.req_finished(rid, len(sw.req.generated), reason)
+                return True
+        return False
+
+    def cancel(self, rid: int) -> bool:
+        """Client abandonment (DESIGN.md §14): terminal status
+        ``cancelled``, callable between steps.  Returns False when the
+        rid is unknown or already terminal.  Every resource the request
+        held — KV slot/pages, draft-ring row, host-swap blob — is
+        released; the surviving requests' token streams are bitwise
+        those of a run where this request never existed (greedy
+        sampling; tests/test_faults.py)."""
+        return self._terminate(rid, "cancelled")
+
+    def _expire_deadlines(self) -> None:
+        """Fail requests past their wall-clock (``deadline_ms``) or
+        engine-step (``deadline_steps``) budget, wherever they live.
+        Runs at the top of every step — a deadline can expire while the
+        request is still queued, mid-prefill, decoding, or swapped."""
+        cands = [r for r in (self.sched.waiting + self.sched.running
+                             + [sw.req for sw in self._swapped])
+                 if r.deadline_ms is not None or r.deadline_steps is not None]
+        if not cands:
+            return
+        now = time.perf_counter_ns()
+        for req in cands:
+            over = (req.deadline_steps is not None
+                    and self.step_count - req.arrival >= req.deadline_steps)
+            if (not over and req.deadline_ms is not None
+                    and req.submit_ns is not None):
+                over = (now - req.submit_ns) > req.deadline_ms * 1e6
+            if over:
+                self._terminate(req.rid, "deadline")
+
+    def _quarantine(self, last: np.ndarray,
+                    reqs: List[GenRequest],
+                    finished: List[GenRequest]) -> List[GenRequest]:
+        """Poison injection + NaN/Inf row quarantine (DESIGN.md §14).
+        ``last`` is the step's host-side (max_slots, V) last-position
+        logits; an injected ``nan_logits`` fault poisons the lowest-rid
+        decode row.  Poisoned rows fail (reason ``nan`` → status
+        ``failed``) and release their state; survivors' logits are
+        untouched, so their argmax stays bitwise the fault-free run."""
+        if reqs and self.faults.fires("nan_logits"):
+            victim = min(reqs, key=lambda r: r.rid)
+            last[victim.slot, :] = np.nan
+        finite = np.isfinite(last).all(axis=-1)
+        bad = [r for r in reqs if not finite[r.slot]]
+        for req in bad:
+            self._nan_quarantined += 1
+            self._fail_row(req, "nan")
+            finished.append(req)
+        if bad:
+            reqs = [r for r in reqs if finite[r.slot]]
+        return reqs
+
+    def _audit_step(self) -> None:
+        if self._check_inv:
+            self.check_invariants()
+        else:
+            self.sched.check_invariants()
+
+    def check_invariants(self) -> None:
+        """Step-boundary accounting audit (DESIGN.md §14): scheduler
+        state-list consistency, the KV manager's free/live partition and
+        exact per-page refcounts (prefix-cache refs included), the draft
+        ring's slot ledger, and host-pool occupancy == the pages staged
+        by currently-swapped requests.  Cheap host-side bookkeeping only
+        — never a device fetch — but O(pages), so it is opt-in
+        (``check_invariants=True``) outside tests."""
+        self.sched.check_invariants()
+        cache_pages = self._prefix.pages() if self._prefix is not None else ()
+        self.kv.check_invariants(cache_pages)
+        if self._spec_metrics is not None:
+            self._draft_kv.check_invariants()
+        host = getattr(self.kv, "host", None)
+        if host is not None:
+            staged = sum(sw.blob["n_pages"] for sw in self._swapped
+                         if sw.blob is not None)
+            assert host.in_use == staged, \
+                f"host pool holds {host.in_use} pages but swapped " \
+                f"requests staged {staged}"
+
+    # ------------------------------------------------------------------
     def step(self) -> List[GenRequest]:
         """One engine step: run the step plan (prefill chunks + one
         batched decode over the planned rows).  Returns requests
         finished this step."""
+        if self.faults is not None and self.faults.fires("slow_step"):
+            # injected stall: a slow step must trip wall-clock deadlines
+            # (checked right below) exactly like a real device hiccup
+            time.sleep(self.faults.stall_ms() / 1e3)
+        self._expire_deadlines()
         st = self.obs.step_begin(self.step_count)
         plan = self._plan()
         if st is not None:
@@ -885,7 +1082,7 @@ class ContinuousEngine:
         if not rows:
             if plan.chunks:
                 self.step_count += 1
-                self.sched.check_invariants()
+                self._audit_step()
             self.obs.step_end(st, n_chunks=len(plan.chunks))
             return finished
         reqs = sorted((r for r in self.sched.running
@@ -914,6 +1111,12 @@ class ContinuousEngine:
         else:
             step_state = self.kv.state
             act_dev = None
+        # fault mode decodes to host-side LOGITS on both planes so
+        # poisoned rows can be quarantined before sampling; the plain
+        # plane switches from the fused-argmax step to the gather
+        # program — the oracle's own decode, so survivor logits (hence
+        # their argmax) carry the very values the fused step reduces
+        quar = self.faults is not None
         if self.offload is not None:
             # offloaded decode: layerwise packed step over the slotted
             # state; free slots bypass the expert pool (active mask), so
@@ -925,7 +1128,19 @@ class ContinuousEngine:
                 self.usage.update([np.asarray(i) for i in route_ids],
                                   rows=rows)
             nxt_dev = (jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-                       if self._greedy else logits[:, -1])
+                       if self._greedy and not quar else logits[:, -1])
+        elif quar:
+            out = self._exec.decode(
+                step_state, jnp.asarray(self.tokens), active=act_dev,
+                collect_info=self._collect)
+            if self._collect:
+                logits, state, _, (info_stack, _) = out
+                ids, _ = routing_from_info(self.cfg, info_stack,
+                                           want_hiddens=False)
+                self.usage.update(ids, rows=rows)
+            else:
+                logits, state, _, _ = out
+            nxt_dev = logits[:, -1]
         else:
             out = self._exec.decode_sampled(
                 step_state, jnp.asarray(self.tokens),
@@ -946,7 +1161,26 @@ class ContinuousEngine:
                 self.kv.note_tokens(r, self.kv.length(r) + 1)
         else:
             self.kv.state = state
-        if self._greedy:
+        if quar:
+            # (max_slots, V) host fetch: the price of inspecting logits
+            # before sampling — paid only when an injector is attached
+            # (copied: the poison write needs a writable buffer)
+            last = np.asarray(nxt_dev).copy()
+            if st is not None:
+                st.mark("sync")
+            reqs = self._quarantine(last, reqs, finished)
+            nxt = np.zeros((self.max_slots,), np.int32)
+            if reqs:
+                srows = [r.slot for r in reqs]
+                if self._greedy:
+                    nxt[srows] = np.argmax(
+                        last[srows], axis=-1).astype(np.int32)
+                else:
+                    nxt[srows] = self._sample_rows(
+                        jnp.asarray(last[srows]), reqs)
+                    if st is not None:
+                        st.mark("sample")
+        elif self._greedy:
             # the step's one blocking device fetch — everything the
             # device is still computing lands in this phase
             nxt = np.asarray(nxt_dev)
@@ -972,7 +1206,7 @@ class ContinuousEngine:
             else:
                 self.tokens[req.slot, 0] = t
         self.step_count += 1
-        self.sched.check_invariants()
+        self._audit_step()
         if st is not None:
             st.mark("host")
             # live context from host-side request records — never a
@@ -1170,7 +1404,7 @@ class ContinuousEngine:
             self._spec_metrics.add_bytes(total_h2d - self._spec_last_h2d)
             self._spec_last_h2d = total_h2d
         self.step_count += 1
-        self.sched.check_invariants()
+        self._audit_step()
         if st is not None:
             st.mark("host")
             ctx = (sum(len(r.prompt) + len(r.generated) for r in reqs)
@@ -1229,6 +1463,26 @@ class ContinuousEngine:
                    resumes=self.sched.resumes,
                    recomputes=self._recomputes,
                    swapped_now=len(self._swapped))
+        return out
+
+    def _faults_metrics(self) -> Dict[str, float]:
+        """The ``faults`` namespace (DESIGN.md §14): injector fire
+        counts (zeros without an injector), the executor's fetch
+        retry/degrade ladder, NaN quarantines, and the terminal-status
+        census over every request this engine has ever seen."""
+        out = {"enabled": int(self.faults is not None), "injected": 0}
+        for s in FAULT_SITES:
+            out[f"fired_{s}"] = 0
+        if self.faults is not None:
+            out.update(self.faults.stats())
+        out.update(self._exec.fault_counters)
+        out["nan_quarantined"] = self._nan_quarantined
+        counts = {"completed": 0, "cancelled": 0,
+                  "deadline_exceeded": 0, "failed": 0}
+        for r in self.sched.finished:
+            counts[r.status] += 1
+        counts["rejected"] = self.sched.queue_rejected
+        out.update(counts)
         return out
 
     def metrics(self) -> Dict[str, Dict[str, object]]:

@@ -1,0 +1,170 @@
+"""Deterministic fault-injection plane (DESIGN.md §14).
+
+The paper's target hardware is flaky by construction — free-tier Colab
+GPUs, desktop cards behind a PCIe bus that stalls, clients that vanish
+mid-decode.  This module is the seeded chaos source the serving stack is
+hardened against: a :class:`FaultInjector` holds a schedule of
+:class:`FaultSpec` entries keyed by *site* name, and the engine /
+executor / KV manager ask ``fires(site)`` at each natural failure
+boundary.  Everything is host-side: jit programs never see the injector,
+so a faulty run's device computation is the SAME program as a fault-free
+run — which is what makes the bitwise-survivor acceptance criterion
+checkable at all.
+
+Sites (each named for the subsystem boundary it perturbs):
+
+``expert_fetch``
+    A transient h2d expert fetch failure at the expert-pool acquire
+    boundary (``core.expert_pool.FAULT_SITE``).  The executor retries
+    with optional backoff; exhausted retries degrade that layer to
+    store-direct streaming (``moe_apply_packed_stream``) and drop
+    speculative prefetch for the step.
+``swap_out`` / ``swap_in``
+    Preemption d2h staging fails (victim's KV is dropped, resume
+    recomputes) / resume h2d fails (blob is discarded, resume falls
+    back to recompute).  Both land on paths PR 9 already proved
+    bitwise-safe.
+``page_pool``
+    Admission-time pool exhaustion: ``can_admit`` reports no headroom
+    even though pages are free; the admission simply retries next step.
+``nan_logits``
+    Poisons one decode row's logits with NaN before sampling — the
+    quarantine path must fail only that row.
+``slow_step``
+    A wall-clock stall (``stall_ms``) at step start — exercises
+    wall-clock deadlines without touching token streams.
+
+Determinism: each site draws from its own ``np.random.default_rng([seed,
+site_index])`` stream, and rate draws advance one draw per *opportunity*
+(every ``fires`` call), so two runs with the same schedule, seed and
+workload fire identically — and a site's stream is unaffected by how
+often other sites are consulted.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["SITES", "FaultSpec", "FaultInjector"]
+
+# canonical site order — index doubles as the per-site rng stream key
+SITES = ("expert_fetch", "swap_out", "swap_in", "page_pool",
+         "nan_logits", "slow_step")
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One site's schedule.
+
+    ``rate``     Bernoulli fire probability per opportunity.
+    ``at``       explicit opportunity ordinals (0-based) that fire
+                 regardless of ``rate`` — the deterministic "fail the
+                 3rd fetch" form the tests lean on.
+    ``max_fires`` cap on total fires (None = unlimited); ``at`` entries
+                 count toward it.
+    ``start``    opportunities before this ordinal never rate-fire
+                 (``at`` still applies).
+    ``stall_ms`` for ``slow_step``: how long the stall sleeps.
+    """
+    site: str
+    rate: float = 0.0
+    at: Tuple[int, ...] = ()
+    max_fires: Optional[int] = None
+    start: int = 0
+    stall_ms: float = 0.0
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r}; "
+                             f"sites: {', '.join(SITES)}")
+        if not (0.0 <= self.rate <= 1.0):
+            raise ValueError(f"rate must be in [0, 1], got {self.rate}")
+        object.__setattr__(self, "at", tuple(int(i) for i in self.at))
+
+
+class FaultInjector:
+    """Seeded, schedule-driven fault source.
+
+    ``fires(site)`` is the single hot-path entry point: it counts one
+    opportunity at ``site``, consults that site's schedule, and returns
+    whether the fault fires.  Sites without a schedule entry never fire
+    (and never draw), so an injector with an empty schedule is inert.
+    """
+
+    def __init__(self, schedule: Sequence[FaultSpec] = (), seed: int = 0):
+        self.seed = int(seed)
+        self.schedule: Dict[str, FaultSpec] = {}
+        for spec in schedule:
+            if spec.site in self.schedule:
+                raise ValueError(f"duplicate schedule entry for site "
+                                 f"{spec.site!r}")
+            self.schedule[spec.site] = spec
+        self._rng = {s: np.random.default_rng([self.seed, i])
+                     for i, s in enumerate(SITES)}
+        self.opportunities = {s: 0 for s in SITES}
+        self.fired = {s: 0 for s in SITES}
+
+    # -- hot path ------------------------------------------------------
+    def fires(self, site: str) -> bool:
+        """One opportunity at ``site`` -> did the fault fire?"""
+        n = self.opportunities[site]          # KeyError = typo'd site
+        self.opportunities[site] = n + 1
+        spec = self.schedule.get(site)
+        if spec is None:
+            return False
+        if spec.max_fires is not None and self.fired[site] >= spec.max_fires:
+            return False
+        hit = n in spec.at
+        if not hit and spec.rate > 0.0 and n >= spec.start:
+            # one draw per rate-eligible opportunity keeps the stream
+            # aligned across runs regardless of ``at`` hits
+            hit = bool(self._rng[site].random() < spec.rate)
+        if hit:
+            self.fired[site] += 1
+        return hit
+
+    def stall_ms(self, site: str = "slow_step") -> float:
+        spec = self.schedule.get(site)
+        return spec.stall_ms if spec is not None else 0.0
+
+    # -- accounting ----------------------------------------------------
+    @property
+    def total_fired(self) -> int:
+        return sum(self.fired.values())
+
+    def stats(self) -> Dict[str, int]:
+        out: Dict[str, int] = {"injected": self.total_fired}
+        for s in SITES:
+            out[f"fired_{s}"] = self.fired[s]
+        return out
+
+    # -- CLI grammar ---------------------------------------------------
+    @classmethod
+    def parse(cls, text: str, seed: int = 0) -> "FaultInjector":
+        """``--inject-faults`` grammar: comma-separated site specs,
+        each ``site[@i][@j]...[=rate][:stall_ms]``.
+
+        Examples::
+
+            expert_fetch=0.05           5% of fetches fail (transient)
+            nan_logits@2                poison the 3rd decode sample pass
+            swap_out@0,swap_in=1.0      first d2h fails; every h2d fails
+            slow_step@5:25              25ms stall at step 5
+        """
+        specs = []
+        for part in filter(None, (p.strip() for p in text.split(","))):
+            stall = 0.0
+            if ":" in part:
+                part, ms = part.rsplit(":", 1)
+                stall = float(ms)
+            rate = 0.0
+            if "=" in part:
+                part, r = part.split("=", 1)
+                rate = float(r)
+            fields = part.split("@")
+            site, at = fields[0].strip(), tuple(int(i) for i in fields[1:])
+            specs.append(FaultSpec(site=site, rate=rate, at=at,
+                                   stall_ms=stall))
+        return cls(specs, seed=seed)

@@ -154,6 +154,20 @@ class KVSlotManager:
         """Legacy flat projection of :meth:`metrics` (``kv_*`` keys)."""
         return {f"kv_{k}": v for k, v in self.metrics().items()}
 
+    def check_invariants(self, cache_pages=()) -> None:
+        """Dense-plane slice of the step-boundary audit (DESIGN.md §14):
+        the free list and the owner map must partition the slots (no
+        pages to account — the ring is preallocated per slot)."""
+        free = sorted(self._free)
+        assert len(set(free)) == len(free), \
+            f"free list holds duplicates: {free}"
+        owned = {s for s in range(self.n_slots)
+                 if self._owner[s] is not None}
+        assert not (set(free) & owned), \
+            f"slots both free and owned: {sorted(set(free) & owned)}"
+        assert set(free) | owned == set(range(self.n_slots)), \
+            "slot free list + owner map do not cover all slots"
+
     # ------------------------------------------------------------------
     def new_row_state(self):
         """Fresh B=1 decode state of slot width — the accumulator for
@@ -443,6 +457,13 @@ class HostPagePool:
         self.in_use -= n_pages
         self.swap_in_bytes += nbytes
 
+    def note_drop(self, n_pages: int) -> None:
+        """Give back budget for a blob discarded WITHOUT an h2d restore
+        (cancel-while-swapped, swap-in fault — DESIGN.md §14): the pages
+        leave the host pool but no swap-in bytes flow."""
+        assert self.in_use >= n_pages
+        self.in_use -= n_pages
+
     def stats(self) -> Dict[str, int]:
         return {"pages_total": self.n_pages,
                 "pages_in_use": self.in_use,
@@ -505,6 +526,7 @@ class PagedKVManager:
         self._len = [0] * n_slots  # host mirror of live token counts
         self.host: Optional[HostPagePool] = None  # swap budget (§13)
         self._page_nbytes: Optional[int] = None
+        self._finj = None  # FaultInjector (DESIGN.md §14); None = inert
 
     # ------------------------------------------------------------------
     @property
@@ -514,11 +536,22 @@ class PagedKVManager:
     def owner(self, slot: int):
         return self._owner[slot]
 
+    def set_fault_injector(self, inj) -> None:
+        """Attach (or clear) the seeded fault plane (DESIGN.md §14).
+        Sites here: ``page_pool`` (admission sees no headroom),
+        ``swap_out`` (the d2h stage fails, KV is dropped for
+        recompute-resume)."""
+        self._finj = inj
+
     def can_admit(self, n_tokens: int, prealloc_pages: int = 0) -> bool:
         """``prealloc_pages`` is the prefix-hit credit (DESIGN.md §13):
         pages the request would adopt from the cache are already
         allocated, so only the remainder of its worst-case budget must
         be reservable."""
+        if self._finj is not None and self._finj.fires("page_pool"):
+            # injected exhaustion: the admission stalls and retries next
+            # step — same recovery path a genuinely dry pool exercises
+            return False
         if not self.has_kv:
             return bool(self._free)  # zero-page archs gate on slots only
         need = max(0, self.pool.pages_for(n_tokens) - prealloc_pages)
@@ -614,6 +647,10 @@ class PagedKVManager:
         k = len(pids)
         if k == 0 or not self.host.can_hold(k):
             return None
+        if self._finj is not None and self._finj.fires("swap_out"):
+            # injected d2h failure: report "could not stage" — the
+            # engine's drop-KV + recompute-resume path absorbs it
+            return None
         w = self._swap_width(k)
         padded = np.zeros((w,), np.int32)  # junk beyond k, dropped on restore
         padded[:k] = pids
@@ -647,6 +684,16 @@ class PagedKVManager:
         self.state = dict(self.state,
                           pos=self.state["pos"].at[slot].set(n_live))
         return slot
+
+    def discard_blob(self, blob) -> None:
+        """Drop a swap-out blob without restoring it (cancel-while-
+        swapped, or an injected ``swap_in`` fault — DESIGN.md §14): the
+        host budget returns immediately and no h2d traffic flows.  The
+        blob's numpy pytree is garbage once the caller drops its
+        reference."""
+        if blob is None or self.host is None:
+            return
+        self.host.note_drop(blob["n_pages"])
 
     def host_stats(self) -> Dict[str, int]:
         host = self.host if self.host is not None else HostPagePool(0)
@@ -912,6 +959,65 @@ class PagedKVManager:
     def stats(self) -> Dict[str, object]:
         """Legacy flat projection of :meth:`metrics` (``kv_*`` keys)."""
         return {f"kv_{k}": v for k, v in self.metrics().items()}
+
+    # ------------------------------------------------------------------
+    def check_invariants(self, cache_pages=()) -> None:
+        """Step-boundary crash-consistency audit (DESIGN.md §14).
+
+        ``cache_pages`` enumerates every page the prefix index currently
+        holds a reference on.  Asserts, exactly:
+
+        * the free heap and the referenced set are a disjoint partition
+          of ``range(n_pages)`` — no page is lost, none counted twice;
+        * the refcount of every page equals its holder count (slots
+          owning it + one per prefix-cache node) — no phantom or leaked
+          reference anywhere;
+        * every slot's host page table row mirrors its owned list,
+          gapless, with −1 past the end — what the device executes
+          against is what the allocator believes;
+        * no slot's allocation exceeds its reservation, and reservations
+          exist exactly for allocated slots;
+        * the slot free list and the owner map partition the slots.
+        """
+        pool = self.pool
+        free = sorted(pool._free)
+        assert len(set(free)) == len(free), \
+            f"free heap holds duplicates: {free}"
+        live = set(pool.refs)
+        both = set(free) & live
+        assert not both, f"pages both free and referenced: {sorted(both)}"
+        missing = set(range(pool.n_pages)) - set(free) - live
+        assert not missing, f"pages neither free nor referenced: " \
+                            f"{sorted(missing)}"
+        assert set(pool.owned) == set(pool.reserved), \
+            "reservation/ownership slot sets diverge"
+        holders: Dict[int, int] = {}
+        for slot, ids in pool.owned.items():
+            assert len(ids) <= pool.reserved[slot], \
+                f"slot {slot} owns {len(ids)} pages over its " \
+                f"{pool.reserved[slot]}-page reservation"
+            for pid in ids:
+                holders[pid] = holders.get(pid, 0) + 1
+        for pid in cache_pages:
+            holders[int(pid)] = holders.get(int(pid), 0) + 1
+        assert holders == pool.refs, \
+            f"refcounts diverge from holder counts:\n" \
+            f"  holders: {dict(sorted(holders.items()))}\n" \
+            f"  refs   : {dict(sorted(pool.refs.items()))}"
+        for s in range(self.n_slots):
+            ids = pool.owned.get(s, []) if self._owner[s] is not None else []
+            row = self._pages_np[s]
+            assert list(row[:len(ids)]) == list(ids), \
+                f"slot {s} table row {row[:len(ids)].tolist()} != owned " \
+                f"{list(ids)}"
+            assert (row[len(ids):] == -1).all(), \
+                f"slot {s} table has stale ids past its {len(ids)} pages"
+        free_slots, owned_slots = set(self._free), \
+            {s for s in range(self.n_slots) if self._owner[s] is not None}
+        assert not (free_slots & owned_slots), \
+            f"slots both free and owned: {sorted(free_slots & owned_slots)}"
+        assert free_slots | owned_slots == set(range(self.n_slots)), \
+            "slot free list + owner map do not cover all slots"
 
 
 # ======================================================================

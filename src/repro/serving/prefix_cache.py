@@ -83,6 +83,12 @@ class PrefixCache:
     def n_pages(self) -> int:
         return len(self._nodes)
 
+    def pages(self) -> List[int]:
+        """Every page id the index currently holds a reference on — the
+        cache's contribution to the step-boundary refcount audit
+        (DESIGN.md §14): each node is exactly one ``PagePool`` ref."""
+        return [nd.page for nd in self._nodes.values()]
+
     def _key(self, parent: int, tokens: np.ndarray,
              ordinal: int) -> Tuple[int, bytes]:
         ps = self.page_size

@@ -37,6 +37,13 @@ _rid_counter = itertools.count()
 WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
 PREEMPTED = "preempted"  # swapped out / dropped mid-decode (DESIGN.md §13)
 
+# finish_reason -> terminal status (DESIGN.md §14).  Reasons not in the
+# map (today only "nan", the quarantine path) are failures: a request
+# that ended for a reason the map does not bless did not complete.
+TERMINAL_STATUS = {"length": "completed", "eos": "completed",
+                   "cancelled": "cancelled", "deadline": "deadline_exceeded",
+                   "rejected": "rejected"}
+
 
 @dataclass(eq=False)  # identity equality: the prompt array is unhashable
 class GenRequest:
@@ -51,7 +58,13 @@ class GenRequest:
     state: str = WAITING
     slot: Optional[int] = None
     generated: List[int] = field(default_factory=list)
-    finish_reason: Optional[str] = None  # "length" | "eos"
+    finish_reason: Optional[str] = None  # a TERMINAL_STATUS key, or "nan"
+    # request-lifecycle hardening (DESIGN.md §14): wall-clock budget in
+    # ms (engine stamps submit_ns at submission) and/or a deterministic
+    # engine-step budget — whichever expires first wins
+    deadline_ms: Optional[float] = None
+    deadline_steps: Optional[int] = None
+    submit_ns: Optional[int] = None
     # per-request sampling temperature (None = the engine sampler's
     # default); applied row-wise by serving/sampler.sample
     temperature: Optional[float] = None
@@ -76,6 +89,13 @@ class GenRequest:
         self.finish_reason = reason
         if self.on_finish is not None:
             self.on_finish(self)
+
+    @property
+    def status(self) -> Optional[str]:
+        """Terminal status (DESIGN.md §14), None while in flight."""
+        if self.state != FINISHED:
+            return None
+        return TERMINAL_STATUS.get(self.finish_reason, "failed")
 
 
 # ----------------------------------------------------------------------
@@ -176,9 +196,14 @@ class Scheduler:
     """Admission queue with pluggable policy and invariant accounting."""
 
     def __init__(self, max_slots: int,
-                 policy: Optional[Callable] = None):
+                 policy: Optional[Callable] = None,
+                 queue_cap: Optional[int] = None):
         self.max_slots = max_slots
         self.policy = policy or fcfs_policy
+        if queue_cap is not None and queue_cap < 1:
+            raise ValueError(f"queue_cap must be >= 1 (got {queue_cap}); "
+                             f"None means unbounded")
+        self.queue_cap = queue_cap
         self.waiting: List[GenRequest] = []
         self.running: List[GenRequest] = []
         self.finished: List[GenRequest] = []
@@ -186,11 +211,17 @@ class Scheduler:
         self.evictions = 0
         self.preemptions = 0
         self.resumes = 0
+        self.queue_rejected = 0
 
-    def submit(self, req: GenRequest) -> GenRequest:
+    def submit(self, req: GenRequest) -> bool:
+        """Enqueue ``req``; False = bounded queue is full (backpressure —
+        the request was NOT retained, the caller owns the rejection)."""
         assert req.state == WAITING
+        if self.queue_cap is not None and len(self.waiting) >= self.queue_cap:
+            self.queue_rejected += 1
+            return False
         self.waiting.append(req)
-        return req
+        return True
 
     @property
     def has_waiting(self) -> bool:
@@ -231,6 +262,20 @@ class Scheduler:
         self.finished.append(req)
         self.evictions += 1
 
+    def drop(self, req: GenRequest, reason: str) -> None:
+        """Terminal exit for a request NOT in running (cancellation /
+        deadline, DESIGN.md §14): waiting requests are dequeued; a
+        preempted one just finishes (the engine owns its swap record).
+        Either way the request lands in ``finished`` — the one census
+        the terminal-status counters scan."""
+        if req.state == WAITING:
+            self.waiting.remove(req)
+        else:
+            assert req.state == PREEMPTED, \
+                f"drop() takes waiting/preempted requests, not {req.state}"
+        req.finish(reason)
+        self.finished.append(req)
+
     def preempt(self, req: GenRequest) -> None:
         """Pull a running request off the batch mid-decode (its KV has
         been swapped to host or dropped for recompute); it re-enters via
@@ -253,7 +298,8 @@ class Scheduler:
         return {"joins": self.joins, "evictions": self.evictions,
                 "finished": len(self.finished),
                 "waiting": len(self.waiting),
-                "running": len(self.running)}
+                "running": len(self.running),
+                "queue_rejected": self.queue_rejected}
 
     def check_invariants(self) -> None:
         assert len(self.running) <= self.max_slots

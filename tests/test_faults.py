@@ -1,0 +1,469 @@
+"""Fault-injection plane + request-lifecycle hardening (DESIGN.md §14).
+
+Two layers of coverage:
+
+* Pure injector semantics — seeded determinism, the ``at``/``rate``/
+  ``max_fires``/``start`` schedule algebra, per-site stream independence
+  and the ``--inject-faults`` CLI grammar.  No jax, runs in
+  milliseconds.
+* Engine-level lifecycle hardening — cancellation across every KV
+  variant (queued / mid-prefill / mid-decode / swapped-out), bounded
+  admission with rejection, step- and wall-clock deadlines, NaN-row
+  quarantine on the plain AND packed planes, expert-fetch
+  retry-then-degrade, swap-path faults falling back to recompute, and
+  admission-time pool-exhaustion faults.
+
+The load-bearing acceptance criterion everywhere: requests the fault did
+NOT hit finish bitwise identical to the fault-free run.  Because the
+continuous engine's parity grid (``tests/parity.py``) already pins every
+variant to the B=1 ``generate_plain`` oracle, "bitwise identical to a
+run where the victim never existed" reduces to "equal to the oracle
+stream" — which is what these tests assert.  Cancelled / quarantined
+rows must hold a strict *prefix* of their oracle stream.
+
+Every engine here runs with ``check_invariants=True``, so the
+step-boundary accounting audit (scheduler state lists, page free/live
+partition + refcounts, draft ring, host-pool occupancy) executes after
+every single step of every test in this module.
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+import pytest
+
+from repro.core.offload_engine import generate_plain
+from repro.serving.engine import ContinuousEngine
+from repro.serving.faults import SITES, FaultInjector, FaultSpec
+
+from tests.parity import CONTINUOUS_KV_VARIANTS, make_prompts
+
+# ----------------------------------------------------------------------
+# shared workload + oracle cache (generate_plain is slow; the same
+# workload's reference streams are reused across variants)
+LENS, MAX_NEWS = (6, 12, 5), (6, 8, 6)
+_ORACLES: dict = {}
+
+
+def _oracles(params, cfg, prompts, max_news, key="plain"):
+    k = (key, tuple(tuple(p.tolist()) for p in prompts), tuple(max_news))
+    if k not in _ORACLES:
+        _ORACLES[k] = [generate_plain(params, cfg, p[None], m)[0].tolist()
+                       for p, m in zip(prompts, max_news)]
+    return _ORACLES[k]
+
+
+def _check_rows(reqs, oracles, *, victims=()):
+    """Survivors bitwise == oracle; victims hold a strict prefix."""
+    for r, want in zip(reqs, oracles):
+        if r.rid in victims:
+            assert len(r.generated) < len(want), \
+                f"victim {r.rid} was not actually interrupted"
+            assert r.generated == want[:len(r.generated)], \
+                f"victim {r.rid} diverged before termination"
+        else:
+            assert r.status == "completed", \
+                f"survivor {r.rid} ended {r.status!r}"
+            assert r.generated == want, f"survivor {r.rid} diverged"
+
+
+# ----------------------------------------------------------------------
+# injector semantics (no jax)
+def test_injector_determinism_and_seed_sensitivity():
+    def draw(seed):
+        inj = FaultInjector([FaultSpec(site="expert_fetch", rate=0.5)],
+                            seed=seed)
+        return [inj.fires("expert_fetch") for _ in range(200)]
+
+    a, b, c = draw(7), draw(7), draw(8)
+    assert a == b, "same seed+schedule must fire identically"
+    assert a != c, "different seeds should diverge (p ~ 2^-200 otherwise)"
+    assert 0 < sum(a) < 200
+
+
+def test_injector_schedule_algebra():
+    inj = FaultInjector([FaultSpec(site="swap_out", at=(1, 3), max_fires=2),
+                         FaultSpec(site="page_pool", rate=1.0, start=2,
+                                   max_fires=3)], seed=0)
+    # ``at`` ordinals fire exactly; max_fires caps even explicit ordinals
+    assert [inj.fires("swap_out") for _ in range(6)] == \
+        [False, True, False, True, False, False]
+    # rate-firing suppressed before ``start``; capped at max_fires
+    assert [inj.fires("page_pool") for _ in range(6)] == \
+        [False, False, True, True, True, False]
+    # unscheduled sites never fire but still count opportunities
+    assert not inj.fires("nan_logits")
+    assert inj.opportunities["nan_logits"] == 1
+    assert inj.total_fired == 5
+    s = inj.stats()
+    assert s["injected"] == 5
+    assert s["fired_swap_out"] == 2 and s["fired_page_pool"] == 3
+    assert set(s) == {"injected"} | {f"fired_{x}" for x in SITES}
+
+
+def test_injector_site_stream_independence():
+    """A site's rate stream must not shift when OTHER sites are
+    consulted in between — each site owns an independent rng."""
+    sched = [FaultSpec(site="expert_fetch", rate=0.5)]
+    solo = FaultInjector(sched, seed=3)
+    noisy = FaultInjector(sched, seed=3)
+    a = [solo.fires("expert_fetch") for _ in range(64)]
+    b = []
+    for _ in range(64):
+        noisy.fires("swap_in")
+        b.append(noisy.fires("expert_fetch"))
+        noisy.fires("slow_step")
+    assert a == b
+
+
+def test_injector_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSpec(site="warp_core")
+    with pytest.raises(ValueError, match="rate"):
+        FaultSpec(site="swap_out", rate=1.5)
+    with pytest.raises(ValueError, match="duplicate"):
+        FaultInjector([FaultSpec(site="swap_out"),
+                       FaultSpec(site="swap_out", rate=0.1)])
+    with pytest.raises(KeyError):  # typo'd site on the hot path
+        FaultInjector().fires("expert_fetchh")
+
+
+def test_injector_parse_grammar():
+    inj = FaultInjector.parse(
+        "expert_fetch=0.05, nan_logits@2, swap_out@0@4, slow_step@5:25",
+        seed=9)
+    assert inj.seed == 9
+    assert inj.schedule["expert_fetch"].rate == 0.05
+    assert inj.schedule["nan_logits"].at == (2,)
+    assert inj.schedule["swap_out"].at == (0, 4)
+    assert inj.schedule["slow_step"].stall_ms == 25.0
+    assert inj.stall_ms() == 25.0
+    assert FaultInjector.parse("").schedule == {}
+    with pytest.raises(ValueError):
+        FaultInjector.parse("no_such_site=0.5")
+
+
+# ----------------------------------------------------------------------
+# cancellation across the KV-variant grid
+@pytest.mark.parametrize("variant", sorted(CONTINUOUS_KV_VARIANTS))
+def test_cancel_survivors_bitwise(variant, tiny_moe_cfg, tiny_moe_params):
+    """Cancel one request mid-flight on every KV layout / admission
+    mode; survivors must finish bitwise identical to the fault-free
+    oracle and the step-boundary audit must stay green throughout.
+    On the chunked variants the 12-token victim (chunk=4) is still
+    mid-prefill at the cancel point, so the admission teardown path is
+    exercised too; elsewhere the cancel lands mid-decode."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    kw = CONTINUOUS_KV_VARIANTS[variant]
+    prompts = make_prompts(cfg, LENS)
+    want = _oracles(params, cfg, prompts, MAX_NEWS)
+
+    eng = ContinuousEngine(params, cfg, max_slots=2, slot_len=64,
+                           eos_id=None, check_invariants=True, **kw)
+    reqs = [eng.submit(p, m) for p, m in zip(prompts, MAX_NEWS)]
+    eng.step(), eng.step()
+    victim = reqs[1]
+    assert eng.cancel(victim.rid)
+    assert victim.status == "cancelled" and victim.state == "finished"
+    assert not eng.cancel(victim.rid), "double-cancel must be a no-op"
+    eng.run(max_steps=400)
+    _check_rows(reqs, want, victims={victim.rid})
+    s = eng.stats()
+    assert s["faults_cancelled"] == 1 and s["faults_completed"] == 2
+    assert s["faults_enabled"] == 0 and s["faults_injected"] == 0
+    eng.check_invariants()
+
+
+def test_cancel_while_queued(tiny_moe_cfg, tiny_moe_params):
+    """Cancelling before any step runs tears the request out of the
+    waiting queue — it must never touch a KV slot."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts = make_prompts(cfg, LENS)
+    want = _oracles(params, cfg, prompts, MAX_NEWS)
+    eng = ContinuousEngine(params, cfg, max_slots=2, slot_len=64,
+                           eos_id=None, check_invariants=True)
+    reqs = [eng.submit(p, m) for p, m in zip(prompts, MAX_NEWS)]
+    assert eng.cancel(reqs[2].rid)
+    assert reqs[2].status == "cancelled" and reqs[2].generated == []
+    eng.run(max_steps=400)
+    for r, w in zip(reqs[:2], want[:2]):
+        assert r.status == "completed" and r.generated == w
+    eng.check_invariants()
+
+
+def test_cancel_restores_page_pool_exactly(tiny_moe_cfg, tiny_moe_params):
+    """Crash-consistent KV accounting: after cancel + drain the page
+    pool is byte-for-byte back at its pre-submit state — every page
+    free, zero refcounts, no reservations (non-prefix layout: a prefix
+    cache would legitimately retain pages as its own capital)."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts = make_prompts(cfg, LENS)
+    eng = ContinuousEngine(params, cfg, max_slots=2, slot_len=64,
+                           eos_id=None, kv_page=4, check_invariants=True)
+    pool = eng.kv.pool
+    assert pool.n_free == pool.n_pages and pool.refs == {}
+    reqs = [eng.submit(p, m) for p, m in zip(prompts, MAX_NEWS)]
+    eng.step(), eng.step()
+    assert pool.n_free < pool.n_pages  # someone actually held pages
+    assert eng.cancel(reqs[0].rid)
+    eng.run(max_steps=400)
+    assert pool.n_free == pool.n_pages
+    assert pool.refs == {} and not pool.reserved
+    assert not any(pool.owned.values())
+    eng.check_invariants()
+
+
+# ----------------------------------------------------------------------
+# bounded admission queue
+def test_queue_cap_rejects_with_backpressure(tiny_moe_cfg, tiny_moe_params):
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts = make_prompts(cfg, (5, 5, 5, 5), seed=2)
+    want = _oracles(params, cfg, prompts[:1], (4,))
+    eng = ContinuousEngine(params, cfg, max_slots=1, slot_len=64,
+                           eos_id=None, queue_cap=1, check_invariants=True)
+    reqs = [eng.submit(p, 4) for p in prompts]
+    kept, rejected = reqs[:1], reqs[1:]
+    for r in rejected:
+        # rejected synchronously: terminal, never retained, no tokens
+        assert r.status == "rejected" and r.state == "finished"
+        assert r.generated == []
+    eng.run(max_steps=200)
+    assert kept[0].status == "completed" and kept[0].generated == want[0]
+    s = eng.stats()
+    assert s["queue_rejected"] == 3 and s["faults_rejected"] == 3
+    assert s["faults_completed"] == 1
+    # rejected requests never enter the finished ledger — the census
+    # counts them from the scheduler's rejection counter instead
+    assert all(r not in eng.sched.finished for r in rejected)
+
+
+# ----------------------------------------------------------------------
+# deadlines
+def test_step_deadline_deterministic(tiny_moe_cfg, tiny_moe_params):
+    """deadline_steps is wall-clock-free: two identical runs must
+    expire the same requests at the same points with identical token
+    prefixes."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts = make_prompts(cfg, (6, 5), seed=4)
+
+    def run():
+        eng = ContinuousEngine(params, cfg, max_slots=2, slot_len=64,
+                               eos_id=None, check_invariants=True)
+        reqs = [eng.submit(p, 20, deadline_steps=3) for p in prompts]
+        eng.run(max_steps=100)
+        return [(r.status, list(r.generated)) for r in reqs]
+
+    a, b = run(), run()
+    assert a == b
+    assert all(status == "deadline_exceeded" for status, _ in a)
+    assert all(len(toks) < 20 for _, toks in a)
+
+
+def test_wallclock_deadline_via_slow_step(tiny_moe_cfg, tiny_moe_params):
+    """slow_step stalls push real time past a millisecond deadline; the
+    expiry must fire without the requests reaching their token budget."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts = make_prompts(cfg, (6, 5), seed=4)
+    faults = FaultInjector([FaultSpec(site="slow_step", rate=1.0,
+                                      stall_ms=30.0)], seed=0)
+    eng = ContinuousEngine(params, cfg, max_slots=2, slot_len=64,
+                           eos_id=None, faults=faults, deadline_ms=5.0,
+                           check_invariants=True)
+    reqs = [eng.submit(p, 50) for p in prompts]
+    eng.run(max_steps=100)
+    assert all(r.status == "deadline_exceeded" for r in reqs)
+    s = eng.stats()
+    assert s["faults_fired_slow_step"] > 0
+    assert s["faults_deadline_exceeded"] == 2
+    eng.check_invariants()
+
+
+# ----------------------------------------------------------------------
+# NaN/Inf quarantine — plain and packed planes
+def _packed_engine(cfg, params, **kw):
+    from repro.configs.base import OffloadSpec
+    from repro.core.offload_engine import OffloadEngine, quantize_for_offload
+    spec = OffloadSpec(cache_size=4, num_speculative=2, expert_bits=3,
+                       attn_bits=4)
+    qdeq, _ = quantize_for_offload(params, cfg, spec)
+    off = OffloadEngine(params, cfg, spec, quantized=True)
+    eng = ContinuousEngine(None, cfg, max_slots=3, slot_len=48,
+                           eos_id=None, offload=off, check_invariants=True,
+                           **kw)
+    return eng, qdeq
+
+
+@pytest.mark.parametrize("plane", ["plain", "packed"])
+def test_nan_quarantine_fails_only_poisoned_row(plane, tiny_moe_cfg,
+                                                tiny_moe_params):
+    """``nan_logits@1`` poisons exactly one decode row; that request
+    alone ends ``failed`` and every other row's stream is bitwise the
+    fault-free oracle — on the plain plane AND over HQQ-packed
+    offloaded experts."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts = make_prompts(cfg, LENS)
+    faults = FaultInjector.parse("nan_logits@1", seed=0)
+    if plane == "plain":
+        eng = ContinuousEngine(params, cfg, max_slots=3, slot_len=64,
+                               eos_id=None, faults=faults,
+                               check_invariants=True)
+        want = _oracles(params, cfg, prompts, MAX_NEWS)
+    else:
+        eng, qdeq = _packed_engine(cfg, params, faults=faults)
+        want = _oracles(qdeq, cfg, prompts, MAX_NEWS, key="packed")
+    reqs = [eng.submit(p, m) for p, m in zip(prompts, MAX_NEWS)]
+    eng.run(max_steps=400)
+    failed = [r for r in reqs if r.status == "failed"]
+    assert len(failed) == 1, \
+        f"exactly one row must fail, got {[r.status for r in reqs]}"
+    _check_rows(reqs, want, victims={failed[0].rid})
+    s = eng.stats()
+    assert s["faults_fired_nan_logits"] == 1
+    assert s["faults_nan_quarantined"] == 1 and s["faults_failed"] == 1
+    assert s["faults_completed"] == 2
+    eng.check_invariants()
+
+
+# ----------------------------------------------------------------------
+# expert-fetch retry ladder on the packed plane
+def test_expert_fetch_transient_retry_is_invisible(tiny_moe_cfg,
+                                                   tiny_moe_params):
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts = make_prompts(cfg, LENS)
+    faults = FaultInjector.parse("expert_fetch@0", seed=0)
+    eng, qdeq = _packed_engine(cfg, params, faults=faults)
+    want = _oracles(qdeq, cfg, prompts, MAX_NEWS, key="packed")
+    reqs = [eng.submit(p, m) for p, m in zip(prompts, MAX_NEWS)]
+    eng.run(max_steps=400)
+    _check_rows(reqs, want)
+    s = eng.stats()
+    assert s["faults_fired_expert_fetch"] == 1
+    assert s["faults_fetch_retries"] >= 1
+    assert s["faults_fetch_degraded"] == 0, \
+        "one transient failure must be absorbed by retry, not degrade"
+
+
+def test_expert_fetch_permanent_degrades_bitwise(tiny_moe_cfg,
+                                                 tiny_moe_params):
+    """rate=1.0: every fetch and every retry fails, so every MoE layer
+    degrades to store-direct streaming — slower, but the token streams
+    must STILL be bitwise identical (same quantized weights, same
+    math)."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts = make_prompts(cfg, LENS)
+    faults = FaultInjector([FaultSpec(site="expert_fetch", rate=1.0)],
+                           seed=0)
+    eng, qdeq = _packed_engine(cfg, params, faults=faults)
+    want = _oracles(qdeq, cfg, prompts, MAX_NEWS, key="packed")
+    reqs = [eng.submit(p, m) for p, m in zip(prompts, MAX_NEWS)]
+    eng.run(max_steps=400)
+    _check_rows(reqs, want)
+    s = eng.stats()
+    assert s["faults_fetch_degraded"] > 0
+    assert s["faults_fetch_retries"] >= 2 * s["faults_fetch_degraded"]
+
+
+# ----------------------------------------------------------------------
+# preemption-path faults (swap d2h/h2d, pool exhaustion, swapped cancel)
+PREEMPT_LENS, PREEMPT_MAX_NEW = (12, 14, 10, 12), 10
+
+
+def _preempt_engine(params, cfg, faults=None):
+    """Pool sized so the workload MUST preempt (13 pages < 3 slots x 6
+    pages worst case) — the clean run takes at least one swap-out."""
+    return ContinuousEngine(params, cfg, max_slots=3, slot_len=64,
+                            eos_id=None, kv_page=4, kv_pages_total=13,
+                            preemption=True, kv_host_pages=12,
+                            faults=faults, check_invariants=True)
+
+
+def _preempt_workload(params, cfg):
+    prompts = make_prompts(cfg, PREEMPT_LENS)
+    max_news = [PREEMPT_MAX_NEW] * len(prompts)
+    return prompts, max_news, _oracles(params, cfg, prompts, max_news)
+
+
+@pytest.mark.parametrize("spec", [
+    FaultSpec(site="swap_out", rate=1.0),   # d2h always fails -> recompute
+    FaultSpec(site="swap_in", at=(0,)),     # first h2d fails -> recompute
+    FaultSpec(site="page_pool", rate=0.5, max_fires=6),  # admission stalls
+], ids=lambda s: s.site)
+def test_preemption_faults_degrade_to_recompute(spec, tiny_moe_cfg,
+                                                tiny_moe_params):
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts, max_news, want = _preempt_workload(params, cfg)
+    eng = _preempt_engine(params, cfg, faults=FaultInjector([spec], seed=0))
+    reqs = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+    eng.run(max_steps=400)
+    _check_rows(reqs, want)
+    s = eng.stats()
+    assert s[f"faults_fired_{spec.site}"] >= 1, \
+        f"workload never reached the {spec.site} boundary"
+    assert eng.kv.host.in_use == 0, "host pool leaked staged pages"
+    eng.check_invariants()
+
+
+def test_cancel_while_swapped_out(tiny_moe_cfg, tiny_moe_params):
+    """Cancel a request whose KV currently lives in the host pool: the
+    staged blob must be discarded (host occupancy back to zero) and the
+    survivors must stay bitwise."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts, max_news, want = _preempt_workload(params, cfg)
+    eng = _preempt_engine(params, cfg)
+    reqs = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+    for _ in range(200):
+        if eng._swapped:
+            break
+        eng.step()
+    assert eng._swapped, "pool sizing no longer forces a preemption"
+    victim_rid = eng._swapped[0].req.rid
+    assert eng.cancel(victim_rid)
+    eng.run(max_steps=400)
+    _check_rows(reqs, want, victims={victim_rid})
+    assert eng.kv.host.in_use == 0
+    s = eng.stats()
+    assert s["faults_cancelled"] == 1
+    eng.check_invariants()
+
+
+# ----------------------------------------------------------------------
+# the invariant checker itself
+def test_invariant_checker_catches_corruption(tiny_moe_cfg,
+                                              tiny_moe_params):
+    """Positive control for ``check_invariants``: it must pass on a
+    live engine and FAIL loudly once the page-pool ledger is corrupted
+    — otherwise every green audit above proves nothing."""
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts = make_prompts(cfg, LENS)
+    eng = ContinuousEngine(params, cfg, max_slots=2, slot_len=64,
+                           eos_id=None, kv_page=4, check_invariants=True)
+    for p, m in zip(prompts, MAX_NEWS):
+        eng.submit(p, m)
+    eng.step(), eng.step()
+    eng.check_invariants()  # green on the healthy engine
+    heapq.heappop(eng.kv.pool._free)  # leak one page from the free heap
+    with pytest.raises(AssertionError):
+        eng.check_invariants()
+
+
+# ----------------------------------------------------------------------
+# clean-run schema: the faults namespace is always present, all zeros
+def test_clean_run_carries_zeroed_faults_namespace(tiny_moe_cfg,
+                                                   tiny_moe_params):
+    from repro.obs.schema import FAULTS_KEYS
+    cfg, params = tiny_moe_cfg, tiny_moe_params
+    prompts = make_prompts(cfg, LENS)
+    eng = ContinuousEngine(params, cfg, max_slots=2, slot_len=64,
+                           eos_id=None, check_invariants=True)
+    reqs = [eng.submit(p, m) for p, m in zip(prompts, MAX_NEWS)]
+    eng.run(max_steps=400)
+    _check_rows(reqs, _oracles(params, cfg, prompts, MAX_NEWS))
+    s = eng.stats()
+    assert {k for k in s if k.startswith("faults_")} == \
+        {f"faults_{k}" for k in FAULTS_KEYS}
+    assert s["faults_enabled"] == 0 and s["faults_injected"] == 0
+    assert s["faults_completed"] == len(reqs)
+    for k in ("fetch_retries", "fetch_degraded", "nan_quarantined",
+              "cancelled", "deadline_exceeded", "rejected", "failed"):
+        assert s[f"faults_{k}"] == 0, f"clean run bumped faults_{k}"

@@ -54,16 +54,20 @@ def expected_for_mode(mode):
     prefix_cache = bool(mode.get("prefix_cache", False))
     kv_host = bool(mode.get("kv_host", False))
     if engine == "continuous":
+        # defaults True: every ContinuousEngine registers the faults
+        # collector, so files predating the mode field still validate
         return expected_namespaces(
             kv_layout=mode.get("kv_layout", "dense"),
             offloaded=bool(mode.get("offloaded", False)),
             timing=timing, plane=plane, roofline=roofline,
             speculative=speculative, prefix_cache=prefix_cache,
-            kv_host=kv_host)
+            kv_host=kv_host, faults=bool(mode.get("faults", True)))
     if engine == "offload":
         # the batch OffloadEngine has no scheduler/KV-slot plane or step
         # loop — it carries traffic + jit always, request/exec/roofline
         # when timing is on, spec when draft-and-verify decoding ran
+        # (no faults namespace: the fault-injection plane lives in the
+        # continuous engine's request lifecycle, DESIGN.md §14)
         out = {"offload": OFFLOAD_KEYS, "jit": JIT_KEYS}
         if speculative:
             out["spec"] = SPEC_KEYS
